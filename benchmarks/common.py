@@ -1,0 +1,63 @@
+"""Shared benchmark utilities: design set, result IO, timing."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+# fast default subset (FULL=1 runs everything)
+FAST_DESIGNS = ["atax", "gemm", "gesummv", "FeedForward", "Autoencoder",
+                "k7mmtree_balanced", "k15mmseq", "k15mmtree",
+                "ResidualBlock", "mvt"]
+
+
+def full_mode() -> bool:
+    return os.environ.get("FULL", "0") == "1"
+
+
+def design_set() -> List[str]:
+    from repro.designs import STREAMHLS_DESIGNS
+    return sorted(STREAMHLS_DESIGNS) if full_mode() else FAST_DESIGNS
+
+
+def budget() -> int:
+    return 1000 if full_mode() else 300
+
+
+def save_json(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=_np_default)
+    return path
+
+
+def _np_default(o):
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(type(o))
+
+
+def geomean(xs) -> float:
+    xs = np.asarray([x for x in xs if x > 0], dtype=float)
+    return float(np.exp(np.log(xs).mean())) if xs.size else float("nan")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0
+        return False

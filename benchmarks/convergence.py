@@ -1,0 +1,60 @@
+"""Fig. 5 analogue: iso-runtime convergence on k15mmtree — best alpha-score
+observed vs wall-clock, per optimizer (including the beyond-paper batched
+searchers)."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import budget, save_json
+from repro.core import FifoAdvisor
+from repro.core.optimizers import OPTIMIZERS, EvalContext
+from repro.core.pareto import alpha_score
+from repro.designs import make_design
+
+OPTS = ["greedy", "random", "grouped_random", "sa", "grouped_sa",
+        "nsga2", "vmap_search"]
+
+
+def run(design: str = "k15mmtree", seed: int = 0, n_points: int = 20
+        ) -> Dict:
+    adv = FifoAdvisor(make_design(design))
+    base = (adv.baseline_max.latency, adv.baseline_max.bram)
+    out = {"design": design, "baseline_max": list(base), "curves": {}}
+    for opt in OPTS:
+        r = adv.run(opt, budget=budget(), seed=seed)
+        res = r.result
+        # reconstruct best-so-far alpha score over evaluation order,
+        # normalized to the run's wall time (evaluations dominate it)
+        ok = ~res.deadlock
+        pts = np.stack([res.latency, res.bram], axis=1).astype(float)
+        scores = np.where(ok, alpha_score(pts, base, 0.7), np.inf)
+        best = np.minimum.accumulate(scores)
+        n = len(best)
+        ts = np.linspace(res.runtime_s / max(n, 1), res.runtime_s, n)
+        idx = np.unique(np.linspace(0, n - 1, n_points).astype(int))
+        out["curves"][opt] = {
+            "t": ts[idx].round(3).tolist(),
+            "best_score": [None if not np.isfinite(b) else round(b, 5)
+                           for b in best[idx]],
+            "runtime_s": round(res.runtime_s, 3),
+            "final": None if not np.isfinite(best[-1])
+            else round(float(best[-1]), 5),
+        }
+    save_json("convergence.json", out)
+    return out
+
+
+def main():
+    out = run()
+    print(f"design {out['design']}")
+    for opt, c in out["curves"].items():
+        print(f"  {opt:16s} final_score={c['final']} "
+              f"runtime={c['runtime_s']:7.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Fig. 4 analogue: quality of the alpha=0.7 selected point per design x
+optimizer, vs Baseline-Max and Baseline-Min (latency ratio geomeans, BRAM
+reduction, un-deadlocked count)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import budget, design_set, geomean, save_json
+from repro.core import FifoAdvisor
+from repro.core.optimizers import PAPER_OPTIMIZERS
+from repro.designs import make_design
+
+
+def run(optimizers=PAPER_OPTIMIZERS, seed: int = 0) -> Dict:
+    per_design = []
+    for name in design_set():
+        adv = FifoAdvisor(make_design(name))
+        row = {"design": name,
+               "baseline_max": [adv.baseline_max.latency,
+                                adv.baseline_max.bram],
+               "baseline_min": [adv.baseline_min.latency,
+                                adv.baseline_min.bram],
+               "min_deadlocked": adv.baseline_min.deadlocked,
+               "optimizers": {}}
+        for opt in optimizers:
+            r = adv.run(opt, budget=budget(), seed=seed)
+            sel = r.selected(alpha=0.7)
+            if sel is None:
+                row["optimizers"][opt] = None
+                continue
+            (lat, bram), _ = sel
+            entry = dict(
+                lat=int(lat), bram=int(bram),
+                lat_vs_max=lat / max(adv.baseline_max.latency, 1),
+                bram_red_vs_max=1 - bram / max(adv.baseline_max.bram, 1),
+                runtime_s=r.result.runtime_s,
+                n_evals=r.result.n_evals)
+            if not adv.baseline_min.deadlocked:
+                entry["lat_vs_min"] = lat / max(adv.baseline_min.latency, 1)
+                entry["bram_over_min"] = int(bram - adv.baseline_min.bram)
+            else:
+                entry["undeadlocked"] = True
+            row["optimizers"][opt] = entry
+        per_design.append(row)
+
+    summary = {}
+    for opt in optimizers:
+        entries = [r["optimizers"][opt] for r in per_design
+                   if r["optimizers"].get(opt)]
+        summary[opt] = dict(
+            geomean_lat_vs_max=geomean([e["lat_vs_max"] for e in entries]),
+            mean_bram_red=float(np.mean([e["bram_red_vs_max"]
+                                         for e in entries])),
+            geomean_lat_vs_min=geomean([e["lat_vs_min"] for e in entries
+                                        if "lat_vs_min" in e]),
+            mean_bram_over_min=float(np.mean(
+                [e["bram_over_min"] for e in entries
+                 if "bram_over_min" in e])) if any(
+                "bram_over_min" in e for e in entries) else None,
+            undeadlocked=sum(1 for e in entries if e.get("undeadlocked")),
+        )
+    out = {"per_design": per_design, "summary": summary}
+    save_json("improvement.json", out)
+    return out
+
+
+def main():
+    out = run()
+    print(f"{'optimizer':16s} {'lat/max':>8} {'bram red':>9} "
+          f"{'lat/min':>8} {'undeadlocked':>12}")
+    for opt, s in out["summary"].items():
+        lat_min = (f"{s['geomean_lat_vs_min']:8.4f}"
+                   if s["geomean_lat_vs_min"] == s["geomean_lat_vs_min"]
+                   else "     n/a")
+        print(f"{opt:16s} {s['geomean_lat_vs_max']:8.4f} "
+              f"{s['mean_bram_red']:9.2%} {lat_min} "
+              f"{s['undeadlocked']:12d}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Fig. 3 analogue: Pareto frontiers per optimizer for selected designs
+(k15mmtree, k15mmtree_relu, Autoencoder), with both baselines."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from benchmarks.common import budget, full_mode, save_json
+from repro.core import FifoAdvisor
+from repro.core.optimizers import PAPER_OPTIMIZERS
+from repro.designs import make_design
+
+DESIGNS = ["k15mmtree", "k15mmtree_relu", "Autoencoder"]
+
+
+def run(seed: int = 0) -> Dict:
+    out = {}
+    for name in DESIGNS:
+        adv = FifoAdvisor(make_design(name))
+        entry = {
+            "baseline_max": [adv.baseline_max.latency, adv.baseline_max.bram],
+            "baseline_min": ([adv.baseline_min.latency,
+                              adv.baseline_min.bram]
+                             if not adv.baseline_min.deadlocked else None),
+            "min_deadlocked": adv.baseline_min.deadlocked,
+            "fronts": {}, "selected": {}, "hypervolume": {},
+        }
+        for opt in PAPER_OPTIMIZERS:
+            r = adv.run(opt, budget=budget(), seed=seed)
+            entry["fronts"][opt] = r.frontier_points.tolist()
+            sel = r.selected(alpha=0.7)
+            entry["selected"][opt] = (list(map(float, sel[0]))
+                                      if sel else None)
+            entry["hypervolume"][opt] = r.hypervolume()
+        out[name] = entry
+    save_json("pareto_fronts.json", out)
+    return out
+
+
+def main():
+    out = run()
+    for name, e in out.items():
+        print(f"=== {name}  (baseline-max {e['baseline_max']}, "
+              f"min {'DEADLOCK' if e['min_deadlocked'] else e['baseline_min']})")
+        for opt, front in e["fronts"].items():
+            sel = e["selected"][opt]
+            print(f"  {opt:16s} |front|={len(front):3d} "
+                  f"hv={e['hypervolume'][opt]:12.1f} star={sel}")
+
+
+if __name__ == "__main__":
+    main()

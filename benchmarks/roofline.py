@@ -1,0 +1,120 @@
+"""Roofline aggregation: reads the dry-run JSON records and emits the
+per-(arch x shape x mesh) table for EXPERIMENTS.md §Roofline, plus the
+three hillclimb-cell picks (worst roofline fraction, most collective-bound,
+most paper-representative).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load(dryrun_dir: str = DRYRUN_DIR) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def table(rows: List[Dict], mesh: str = "16x16") -> List[Dict]:
+    out = []
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") != "ok":
+            out.append(dict(arch=r["arch"], shape=r["shape"], mesh=mesh,
+                            status=r["status"],
+                            reason=r.get("reason", r.get("error", ""))[:60]))
+            continue
+        rf = r["roofline"]
+        total = rf["compute_s"] + rf["memory_s"] + rf["collective_s"]
+        # roofline fraction: ideal (compute-only) time over the bound given
+        # by the dominant term (serial upper bound: max of terms)
+        bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        frac = rf["compute_s"] / bound if bound > 0 else 0.0
+        out.append(dict(
+            arch=r["arch"], shape=r["shape"], mesh=mesh, status="ok",
+            compute_s=rf["compute_s"], memory_s=rf["memory_s"],
+            collective_s=rf["collective_s"], dominant=rf["dominant"],
+            roofline_fraction=frac,
+            model_flops=r.get("model_flops"),
+            hlo_flops=r.get("hlo_flops"),
+            useful_ratio=r.get("useful_compute_ratio"),
+            mem_gb=r["memory"]["total"] / 1e9,
+            fits_hbm=r["memory"]["fits_hbm"],
+            compile_s=r.get("compile_s"),
+        ))
+    return out
+
+
+def pick_hillclimb_cells(rows: List[Dict]) -> Dict[str, Dict]:
+    ok = [r for r in table(rows, "16x16") if r["status"] == "ok"]
+    worst = min(ok, key=lambda r: r["roofline_fraction"])
+    coll = max(ok, key=lambda r: r["collective_s"])
+    # paper-representative: FIFOAdvisor is a DSE/serving-pipeline paper —
+    # the decode cell of the largest arch exercises buffer/queue sizing
+    # most directly (KV-cache = the sized buffer); pick the biggest
+    # memory-bound decode cell.
+    decode = [r for r in ok if r["shape"].startswith("decode")]
+    rep = max(decode, key=lambda r: r["memory_s"]) if decode else worst
+    return {"worst_roofline_fraction": worst,
+            "most_collective_bound": coll,
+            "paper_representative": rep}
+
+
+def markdown(rows: List[Dict]) -> str:
+    lines = ["| arch | shape | mesh | compute_s | memory_s | collective_s |"
+             " dominant | frac | useful | mem/dev GB | fits |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for mesh in ("16x16", "2x16x16"):
+        for r in table(rows, mesh):
+            if r["status"] != "ok":
+                lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | "
+                             f"SKIP ({r.get('reason','')[:40]}…) "
+                             "| | | | | | | |")
+                continue
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} "
+                f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+                f"| {r['collective_s']:.3e} | {r['dominant']} "
+                f"| {r['roofline_fraction']:.2f} "
+                f"| {r['useful_ratio']:.2f} "
+                f"| {r['mem_gb']:.1f} | {'y' if r['fits_hbm'] else 'N'} |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = load()
+    if not rows:
+        print("no dry-run records found; run: "
+              "python -m repro.launch.dryrun --all")
+        return
+    for mesh in ("16x16",):
+        print(f"--- mesh {mesh}")
+        for r in table(rows, mesh):
+            if r["status"] != "ok":
+                print(f"{r['arch']:22s} {r['shape']:12s} {r['status']}")
+                continue
+            print(f"{r['arch']:22s} {r['shape']:12s} "
+                  f"c={r['compute_s']:.2e} m={r['memory_s']:.2e} "
+                  f"x={r['collective_s']:.2e} dom={r['dominant']:10s} "
+                  f"frac={r['roofline_fraction']:.2f} "
+                  f"useful={r['useful_ratio']:.2f} "
+                  f"mem={r['mem_gb']:6.1f}GB")
+    picks = pick_hillclimb_cells(rows)
+    print("--- hillclimb picks")
+    for k, v in picks.items():
+        print(f"{k}: {v['arch']} x {v['shape']} (dom={v['dominant']})")
+    with open(os.path.join(os.path.dirname(__file__), "results",
+                           "roofline_table.md"), "w") as f:
+        f.write(markdown(rows))
+
+
+if __name__ == "__main__":
+    main()

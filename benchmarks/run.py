@@ -1,0 +1,79 @@
+"""Run every benchmark; print one ``name,seconds,derived`` CSV line each.
+
+  PYTHONPATH=src python -m benchmarks.run            # fast budgets
+  FULL=1 PYTHONPATH=src python -m benchmarks.run     # paper budgets
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from benchmarks import (accuracy, batched_eval, case_study, convergence,
+                            improvement, pareto_fronts, pruning, roofline,
+                            runtime)
+
+    print("name,seconds,derived")
+
+    t0 = time.perf_counter()
+    acc = accuracy.run()
+    print(f"accuracy,{time.perf_counter() - t0:.2f},"
+          f"all_exact={acc['all_exact']}")
+
+    t0 = time.perf_counter()
+    imp = improvement.run()
+    gsa = imp["summary"].get("grouped_sa", {})
+    print(f"improvement,{time.perf_counter() - t0:.2f},"
+          f"grouped_sa_lat_vs_max={gsa.get('geomean_lat_vs_max'):.4f};"
+          f"bram_red={gsa.get('mean_bram_red'):.3f};"
+          f"undeadlocked={gsa.get('undeadlocked')}")
+
+    t0 = time.perf_counter()
+    rt = runtime.run()
+    g = rt["summary"]["grouped_sa"]
+    print(f"runtime,{time.perf_counter() - t0:.2f},"
+          f"grouped_sa_vs_des={g['geomean_speedup_vs_des']:.1f}x;"
+          f"vs_rtl_slow={g['geomean_speedup_vs_rtl_slow']:.0f}x")
+
+    t0 = time.perf_counter()
+    pf = pareto_fronts.run()
+    print(f"pareto_fronts,{time.perf_counter() - t0:.2f},"
+          f"designs={len(pf)}")
+
+    t0 = time.perf_counter()
+    cv = convergence.run()
+    print(f"convergence,{time.perf_counter() - t0:.2f},"
+          f"final_grouped_sa={cv['curves']['grouped_sa']['final']}")
+
+    t0 = time.perf_counter()
+    cs = case_study.run()
+    print(f"case_study,{time.perf_counter() - t0:.2f},"
+          f"msg_depths={cs['min_feasible_msg_depth_by_graph']}")
+
+    t0 = time.perf_counter()
+    be = batched_eval.run()
+    n_us = be["gemm"]["numpy"]["us_per_config"]
+    print(f"batched_eval,{time.perf_counter() - t0:.2f},"
+          f"gemm_numpy_us_per_cfg={n_us}")
+
+    t0 = time.perf_counter()
+    pr = pruning.run()
+    k = pr["k15mmtree"]
+    print(f"pruning,{time.perf_counter() - t0:.2f},"
+          f"k15mmtree_random_dead:{k['random_raw']['dead']}->"
+          f"{k['random_pruned']['dead']}")
+
+    t0 = time.perf_counter()
+    rows = roofline.load()
+    if rows:
+        picks = roofline.pick_hillclimb_cells(rows)
+        rep = picks["paper_representative"]
+        print(f"roofline,{time.perf_counter() - t0:.2f},"
+              f"cells={len(rows)};rep={rep['arch']}x{rep['shape']}")
+    else:
+        print(f"roofline,{time.perf_counter() - t0:.2f},no_dryrun_records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Table III analogue: FIFOAdvisor search runtime vs estimated
+co-simulation search runtime.
+
+Vitis HLS/XSIM is not available in this container, so per-config RTL
+co-simulation cost is MODELLED, with the model calibrated from the paper's
+own published numbers (Table II cycle counts x Table III co-sim days per
+1000 samples): effective RTL co-sim throughput in their data ranges from
+~40 cycles/s (gemm/atax/k3mm-class designs) to ~2500 cycles/s
+(ResidualBlock).  We report speedups under BOTH constants as a
+conservative bracket, plus the directly-measured algorithmic gain of
+incremental trace evaluation over re-running our own DES per config.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import Timer, budget, design_set, geomean, save_json
+from repro.core import FifoAdvisor, simulate
+from repro.core.optimizers import PAPER_OPTIMIZERS
+from repro.designs import make_design
+
+RTL_CPS_FAST = 2500.0     # cycles/s, paper's best case (ResidualBlock)
+RTL_CPS_SLOW = 40.0       # cycles/s, paper's typical case (gemm/atax/k3mm)
+
+
+def run(seed: int = 0) -> Dict:
+    rows = []
+    for name in design_set():
+        d = make_design(name)
+        adv = FifoAdvisor(d)
+        # best-case co-sim config: Baseline-Max minimizes simulated cycles
+        with Timer() as t:
+            simulate(d, adv.baseline_max.depths)
+        des_one = t.s
+        cycles = adv.baseline_max.latency
+        rtl_fast = cycles / RTL_CPS_FAST          # seconds per co-sim
+        rtl_slow = cycles / RTL_CPS_SLOW
+        row = {"design": name, "cycles": cycles,
+               "des_one_s": round(des_one, 4),
+               "rtl_one_est_s": [round(rtl_fast, 2), round(rtl_slow, 1)],
+               "trace_s": round(adv.trace_time_s, 3), "optimizers": {}}
+        for opt in PAPER_OPTIMIZERS:
+            r = adv.run(opt, budget=budget(), seed=seed)
+            n = r.result.n_evals
+            wall = max(r.result.runtime_s, 1e-9)
+            row["optimizers"][opt] = dict(
+                runtime_s=round(r.result.runtime_s, 3),
+                n_evals=n,
+                us_per_eval=round(1e6 * wall / max(n, 1), 1),
+                speedup_vs_des=des_one * n / wall,
+                speedup_vs_rtl_fast=rtl_fast * n / wall,
+                speedup_vs_rtl_slow=rtl_slow * n / wall,
+                speedup_vs_rtl_slow_par32=rtl_slow * n / 32 / wall)
+        rows.append(row)
+
+    summary = {}
+    for opt in PAPER_OPTIMIZERS:
+        def g(key):
+            return geomean([r["optimizers"][opt][key] for r in rows])
+        summary[opt] = dict(
+            geomean_speedup_vs_des=g("speedup_vs_des"),
+            geomean_speedup_vs_rtl_fast=g("speedup_vs_rtl_fast"),
+            geomean_speedup_vs_rtl_slow=g("speedup_vs_rtl_slow"),
+            geomean_speedup_vs_rtl_slow_par32=g(
+                "speedup_vs_rtl_slow_par32"),
+            median_runtime_s=float(np.median(
+                [r["optimizers"][opt]["runtime_s"] for r in rows])),
+            median_us_per_eval=float(np.median(
+                [r["optimizers"][opt]["us_per_eval"] for r in rows])))
+    out = {"per_design": rows, "summary": summary,
+           "rtl_model": {"fast_cycles_per_s": RTL_CPS_FAST,
+                         "slow_cycles_per_s": RTL_CPS_SLOW,
+                         "calibration": "paper Table II cycles x Table III "
+                                        "co-sim days per 1000 samples"},
+           "note": ("our benchmark designs are ~100-1000x smaller in cycle "
+                    "count than the paper's (DESIGN.md §8); at their scale "
+                    "the same model reproduces the 1e5-1e7x speedups")}
+    save_json("runtime.json", out)
+    return out
+
+
+def main():
+    out = run()
+    print(f"{'optimizer':16s} {'median rt':>10} {'us/eval':>9} "
+          f"{'vs DES':>8} {'vs RTL(fast)':>13} {'vs RTL(slow)':>13}")
+    for opt, s in out["summary"].items():
+        print(f"{opt:16s} {s['median_runtime_s']:9.2f}s "
+              f"{s['median_us_per_eval']:9.0f} "
+              f"{s['geomean_speedup_vs_des']:7.1f}x "
+              f"{s['geomean_speedup_vs_rtl_fast']:12.1f}x "
+              f"{s['geomean_speedup_vs_rtl_slow']:12.0f}x")
+
+
+if __name__ == "__main__":
+    main()

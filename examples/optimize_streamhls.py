@@ -1,0 +1,44 @@
+"""DSE over any Stream-HLS benchmark with any optimizer set.
+
+  PYTHONPATH=src python examples/optimize_streamhls.py \
+      --design k15mmtree --optimizers greedy grouped_sa nsga2 --budget 500
+"""
+
+import argparse
+
+from repro.core import FifoAdvisor
+from repro.core.optimizers import OPTIMIZERS
+from repro.designs import STREAMHLS_DESIGNS, make_design
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--design", default="k15mmtree",
+                    choices=sorted(STREAMHLS_DESIGNS))
+    ap.add_argument("--optimizers", nargs="+", default=["greedy",
+                    "grouped_random", "grouped_sa"],
+                    choices=sorted(OPTIMIZERS))
+    ap.add_argument("--budget", type=int, default=500)
+    ap.add_argument("--alpha", type=float, default=0.7)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    adv = FifoAdvisor(make_design(args.design))
+    bm = adv.baseline_max
+    print(f"{args.design}: {adv.graph.n_fifos} FIFOs, "
+          f"{adv.graph.n_events} trace events, trace {adv.trace_time_s:.2f}s")
+    print(f"Baseline-Max ({bm.latency} cyc, {bm.bram} BRAM) | Baseline-Min "
+          f"{'DEADLOCKS' if adv.baseline_min.deadlocked else adv.baseline_min.latency}")
+
+    for opt in args.optimizers:
+        r = adv.run(opt, budget=args.budget, seed=args.seed)
+        sel = r.selected(alpha=args.alpha)
+        star = (f"{int(sel[0][0])} cyc @ {int(sel[0][1])} BRAM"
+                if sel else "none")
+        print(f"  {opt:16s} {r.result.n_evals:5d} evals "
+              f"{r.result.runtime_s:7.2f}s  |front|={len(r.frontier_points):3d} "
+              f"star[{args.alpha}]: {star}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Quickstart: size the FIFOs of an HLS dataflow design in ~seconds.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import FifoAdvisor
+from repro.core.design import Design
+
+
+def build_design() -> Design:
+    """A producer/worker/consumer diamond with a slow worker: the skip
+    queue must cover the worker's latency or the design stalls/deadlocks."""
+    d = Design("quickstart")
+    d.fifo("raw", width=32)
+    d.fifo("skip", width=32)
+    d.fifo("cooked", width=32)
+    N = 256
+
+    @d.task("source")
+    def source(ctx):
+        for i in range(N):
+            yield ctx.delay(1)
+            yield ctx.write("raw", i)
+            yield ctx.write("skip", i)
+
+    @d.task("worker")
+    def worker(ctx):
+        for _ in range(N):
+            v = yield ctx.read("raw")
+            yield ctx.delay(6)            # slow compute
+            yield ctx.write("cooked", 2 * v)
+
+    @d.task("join")
+    def join(ctx):
+        acc = 0
+        for _ in range(N):
+            a = yield ctx.read("skip")
+            b = yield ctx.read("cooked")
+            yield ctx.delay(1)
+            acc += a + b
+        ctx.result("sum", acc)
+
+    return d
+
+
+def main():
+    advisor = FifoAdvisor(build_design())
+    print(f"Baseline-Max: latency={advisor.baseline_max.latency} "
+          f"BRAMs={advisor.baseline_max.bram}")
+    print(f"Baseline-Min: latency={advisor.baseline_min.latency} "
+          f"deadlocked={advisor.baseline_min.deadlocked}")
+
+    result = advisor.run("grouped_sa", budget=400, seed=0)
+    print("\nPareto frontier (latency, FIFO BRAMs):")
+    for lat, bram in result.frontier_points:
+        print(f"  {int(lat):6d} cycles  {int(bram):3d} BRAMs")
+
+    (lat, bram), depths = result.selected(alpha=0.7)
+    print(f"\nalpha=0.7 pick: {int(lat)} cycles @ {int(bram)} BRAMs")
+    for f, dep in zip(advisor.design.fifos, depths):
+        print(f"  {f.name:8s} depth {int(dep)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""FIFOAdvisor core: the paper's contribution as a composable library."""
+
+from repro.core.advisor import Baseline, DseResult, FifoAdvisor
+from repro.core.design import Design, Fifo, Task
+from repro.core.oracle import SimResult, simulate
+from repro.core.simgraph import SimGraph, build_simgraph
+from repro.core.simulate import BatchedEvaluator, evaluate_np
+from repro.core.tracer import Trace, collect_trace
+
+__all__ = [
+    "Baseline", "BatchedEvaluator", "Design", "DseResult", "Fifo",
+    "FifoAdvisor", "SimGraph", "SimResult", "Task", "Trace",
+    "build_simgraph", "collect_trace", "evaluate_np", "simulate",
+]

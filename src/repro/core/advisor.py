@@ -1,0 +1,157 @@
+"""FIFOAdvisor: the top-level push-button DSE API (paper Fig. 1).
+
+    advisor = FifoAdvisor(design)                  # trace once
+    dse = advisor.run("grouped_sa", budget=1000)   # search
+    dse.frontier_points                            # Pareto (latency, BRAM)
+    dse.selected(alpha=0.7)                        # the paper's ★ point
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.design import Design
+from repro.core.optimizers import OPTIMIZERS, EvalContext, OptResult
+from repro.core.pareto import (alpha_score, hypervolume_2d, pareto_front,
+                               select_alpha_point)
+from repro.core.simgraph import SimGraph, build_simgraph
+from repro.core.simulate import BatchedEvaluator
+from repro.core.tracer import Trace, collect_trace
+
+
+@dataclasses.dataclass
+class Baseline:
+    depths: np.ndarray
+    latency: int
+    bram: int
+    deadlocked: bool
+
+
+@dataclasses.dataclass
+class DseResult:
+    design_name: str
+    optimizer: str
+    result: OptResult
+    baseline_max: Baseline
+    baseline_min: Baseline
+    trace_time_s: float
+
+    @property
+    def frontier_points(self) -> np.ndarray:
+        return self.result.frontier()[0]
+
+    @property
+    def frontier_configs(self) -> np.ndarray:
+        return self.result.frontier()[1]
+
+    def selected(self, alpha: float = 0.7
+                 ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """The paper's ★: frontier point minimizing the alpha score vs
+        Baseline-Max.  Returns ((latency, bram), depths) or None."""
+        pts, idx = self.result.feasible_points()
+        if pts.shape[0] == 0:
+            return None
+        sel = select_alpha_point(
+            pts, (self.baseline_max.latency, self.baseline_max.bram), alpha)
+        if sel is None:
+            return None
+        return pts[sel], self.result.configs[idx[sel]]
+
+    def hypervolume(self) -> float:
+        ref = (self.baseline_max.latency * 2.0 + 1.0,
+               self.baseline_max.bram * 2.0 + 2.0)
+        return hypervolume_2d(self.frontier_points, ref)
+
+    def summary(self, alpha: float = 0.7) -> Dict:
+        sel = self.selected(alpha)
+        out = {
+            "design": self.design_name,
+            "optimizer": self.optimizer,
+            "n_evals": self.result.n_evals,
+            "runtime_s": round(self.result.runtime_s, 3),
+            "trace_time_s": round(self.trace_time_s, 3),
+            "frontier_size": int(self.frontier_points.shape[0]),
+            "baseline_max": (self.baseline_max.latency,
+                             self.baseline_max.bram),
+            "baseline_min": (self.baseline_min.latency,
+                             self.baseline_min.bram,
+                             self.baseline_min.deadlocked),
+            "n_deadlocked_samples": int(self.result.deadlock.sum()),
+        }
+        if sel is not None:
+            (lat, bram), _ = sel
+            out["selected"] = (int(lat), int(bram))
+            out["lat_vs_max"] = round(
+                lat / max(self.baseline_max.latency, 1), 4)
+            out["bram_reduction_vs_max"] = round(
+                1.0 - bram / max(self.baseline_max.bram, 1), 4)
+        return out
+
+
+class FifoAdvisor:
+    """Traces the design once; runs any number of DSE searches on it."""
+
+    def __init__(self, design: Design,
+                 upper_bounds: Optional[np.ndarray] = None,
+                 occupancy_cap: bool = False,
+                 local_bounds: bool = False,
+                 use_pallas: bool = False,
+                 max_iters: int = 256):
+        t0 = time.perf_counter()
+        self.design = design
+        self.trace: Trace = collect_trace(design)
+        self.graph: SimGraph = build_simgraph(design, self.trace)
+        self.evaluator = BatchedEvaluator(self.graph, max_iters=max_iters,
+                                          use_pallas=use_pallas)
+        self.trace_time_s = time.perf_counter() - t0
+        self._upper_bounds = upper_bounds
+        self._occupancy_cap = occupancy_cap
+        self._local_bounds = local_bounds
+        self._lb_cache: Optional[np.ndarray] = None
+        # Shared baselines (evaluated outside any optimizer's budget).
+        ctx = self._fresh_ctx(seed=0)
+        self.baseline_max = self._baseline(ctx.baseline_max())
+        self.baseline_min = self._baseline(ctx.baseline_min())
+
+    def _fresh_ctx(self, seed: int) -> EvalContext:
+        if self._local_bounds and self._lb_cache is None:
+            from repro.core.prune import local_lower_bounds
+            base = EvalContext(self.graph, self.evaluator,
+                               upper_bounds=self._upper_bounds,
+                               occupancy_cap=self._occupancy_cap, seed=0)
+            self._lb_cache = local_lower_bounds(self.graph, base.candidates)
+        return EvalContext(self.graph, self.evaluator,
+                           upper_bounds=self._upper_bounds,
+                           occupancy_cap=self._occupancy_cap,
+                           lower_bounds=self._lb_cache, seed=seed)
+
+    def _baseline(self, depths: np.ndarray) -> Baseline:
+        lat, bram, dead = self.evaluator.evaluate(depths[None, :])
+        return Baseline(depths=depths, latency=int(lat[0]),
+                        bram=int(bram[0]), deadlocked=bool(dead[0]))
+
+    def incremental_latency(self, depths: np.ndarray) -> Tuple[int, bool]:
+        """One incremental re-simulation (the LightningSim primitive)."""
+        lat, _, dead = self.evaluator.evaluate(np.asarray(depths)[None, :])
+        return int(lat[0]), bool(dead[0])
+
+    def run(self, optimizer: str = "grouped_sa", budget: int = 1000,
+            seed: int = 0, **kwargs) -> DseResult:
+        cls = OPTIMIZERS[optimizer]
+        ctx = self._fresh_ctx(seed)
+        opt = cls(ctx, budget=budget, **kwargs)
+        res = opt.run()
+        return DseResult(design_name=self.design.name, optimizer=optimizer,
+                         result=res, baseline_max=self.baseline_max,
+                         baseline_min=self.baseline_min,
+                         trace_time_s=self.trace_time_s)
+
+    def run_all(self, optimizers=None, budget: int = 1000,
+                seed: int = 0) -> Dict[str, DseResult]:
+        from repro.core.optimizers import PAPER_OPTIMIZERS
+        names = optimizers or PAPER_OPTIMIZERS
+        return {n: self.run(n, budget=budget, seed=seed) for n in names}

@@ -1,0 +1,29 @@
+"""FIFOAdvisor optimizer zoo (paper §III-D + beyond-paper additions)."""
+
+from repro.core.optimizers.base import EvalContext, Optimizer, OptResult
+from repro.core.optimizers.random_search import (GroupedRandomSearch,
+                                                 RandomSearch)
+from repro.core.optimizers.annealing import (GroupedSimulatedAnnealing,
+                                             SimulatedAnnealing)
+from repro.core.optimizers.greedy import GreedySearch
+from repro.core.optimizers.nsga2 import NSGA2
+from repro.core.optimizers.vmap_search import VmapSearch
+
+OPTIMIZERS = {
+    "random": RandomSearch,
+    "grouped_random": GroupedRandomSearch,
+    "sa": SimulatedAnnealing,
+    "grouped_sa": GroupedSimulatedAnnealing,
+    "greedy": GreedySearch,
+    "nsga2": NSGA2,
+    "vmap_search": VmapSearch,
+}
+
+PAPER_OPTIMIZERS = ("greedy", "random", "grouped_random", "sa", "grouped_sa")
+
+__all__ = [
+    "EvalContext", "Optimizer", "OptResult", "OPTIMIZERS",
+    "PAPER_OPTIMIZERS", "RandomSearch", "GroupedRandomSearch",
+    "SimulatedAnnealing", "GroupedSimulatedAnnealing", "GreedySearch",
+    "NSGA2", "VmapSearch",
+]

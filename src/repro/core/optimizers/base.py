@@ -1,0 +1,200 @@
+"""Shared optimizer infrastructure: evaluation context, history, results.
+
+All optimizers operate on *index vectors* into per-FIFO (or per-group)
+pruned candidate grids (§III-C breakpoints), never on raw depths — this is
+the paper's search-space pruning, applied uniformly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.bram import breakpoints
+from repro.core.pareto import pareto_front
+from repro.core.simgraph import SimGraph
+from repro.core.simulate import BatchedEvaluator
+
+
+@dataclasses.dataclass
+class OptResult:
+    name: str
+    configs: np.ndarray        # (N, F) evaluated depth vectors
+    latency: np.ndarray        # (N,)  -1 where deadlocked
+    bram: np.ndarray           # (N,)
+    deadlock: np.ndarray       # (N,) bool
+    runtime_s: float
+    n_evals: int
+
+    def feasible_points(self) -> Tuple[np.ndarray, np.ndarray]:
+        ok = ~self.deadlock
+        pts = np.stack([self.latency[ok], self.bram[ok]], axis=1)
+        return pts.astype(np.float64), np.flatnonzero(ok)
+
+    def frontier(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(points (M,2), config rows (M,F)) of the Pareto-optimal set,
+        deduplicated on (latency, bram)."""
+        pts, idx = self.feasible_points()
+        if pts.shape[0] == 0:
+            return np.zeros((0, 2)), np.zeros((0, self.configs.shape[1]))
+        sel = pareto_front(pts)
+        _, first = np.unique(pts[sel], axis=0, return_index=True)
+        sel = sel[np.sort(first)]
+        return pts[sel], self.configs[idx[sel]]
+
+
+class EvalContext:
+    """Candidate grids + batched evaluator + evaluation history."""
+
+    def __init__(self, g: SimGraph, evaluator: Optional[BatchedEvaluator] = None,
+                 upper_bounds: Optional[np.ndarray] = None,
+                 occupancy_cap: bool = False, local_bounds: bool = False,
+                 lower_bounds: Optional[np.ndarray] = None,
+                 seed: int = 0):
+        self.g = g
+        self.ev = evaluator or BatchedEvaluator(g)
+        self.rng = np.random.default_rng(seed)
+        self.u = (np.asarray(upper_bounds, dtype=np.int64)
+                  if upper_bounds is not None else g.upper_bounds.copy())
+        self.u = np.maximum(self.u, 2)
+
+        # Pruned per-FIFO candidate grids (paper §III-C).  With
+        # ``occupancy_cap`` (beyond-paper), depths above the observed
+        # no-back-pressure occupancy are collapsed to the first breakpoint
+        # covering it — larger depths cannot change behaviour.
+        self.candidates: List[np.ndarray] = []
+        for f in range(g.n_fifos):
+            cand = breakpoints(int(g.widths[f]), int(self.u[f]))
+            if occupancy_cap:
+                occ = int(g.max_occupancy[f])
+                covering = cand[cand >= min(occ, int(self.u[f]))]
+                cap = int(covering[0]) if covering.size else int(self.u[f])
+                cand = cand[cand <= cap]
+            self.candidates.append(cand)
+        if local_bounds or lower_bounds is not None:
+            # beyond-paper: SOUND per-FIFO lower bounds from task-pair
+            # subgraph feasibility (core/prune.py) — removes candidates
+            # that deadlock in EVERY configuration
+            if lower_bounds is None:
+                from repro.core.prune import local_lower_bounds
+                lower_bounds = local_lower_bounds(g, self.candidates)
+            lb = np.asarray(lower_bounds, dtype=np.int64)
+            self.candidates = [
+                c[c >= lb[f]] if (c >= lb[f]).any() else c[-1:]
+                for f, c in enumerate(self.candidates)]
+        self.grid_sizes = np.asarray([len(c) for c in self.candidates])
+
+        # Groups (stream arrays) for the grouped optimizers.  Grouped moves
+        # pick ONE index applied to every member; member grids can differ in
+        # length, so indices are clipped per member.
+        self.groups: List[np.ndarray] = [
+            np.asarray(v, dtype=np.int64) for v in g.groups().values()]
+        self.group_grid_sizes = np.asarray(
+            [max(self.grid_sizes[m].max(), 1) for m in self.groups])
+
+        # History.
+        self._configs: List[np.ndarray] = []
+        self._lat: List[np.ndarray] = []
+        self._bram: List[np.ndarray] = []
+        self._dead: List[np.ndarray] = []
+        self.n_evals = 0
+        self._cache: Dict[bytes, Tuple[int, int, bool]] = {}
+
+    # ------------------------------------------------------------- depths
+    def depths_from_indices(self, idx: np.ndarray) -> np.ndarray:
+        """(C, F) grid indices -> (C, F) depths (per-FIFO grids)."""
+        idx = np.atleast_2d(idx)
+        out = np.empty_like(idx, dtype=np.int64)
+        for f in range(self.g.n_fifos):
+            cand = self.candidates[f]
+            out[:, f] = cand[np.clip(idx[:, f], 0, len(cand) - 1)]
+        return out
+
+    def depths_from_group_indices(self, gidx: np.ndarray) -> np.ndarray:
+        """(C, n_groups) indices -> (C, F) depths (index shared per group)."""
+        gidx = np.atleast_2d(gidx)
+        C = gidx.shape[0]
+        out = np.empty((C, self.g.n_fifos), dtype=np.int64)
+        for gi, members in enumerate(self.groups):
+            for f in members:
+                cand = self.candidates[f]
+                out[:, f] = cand[np.clip(gidx[:, gi], 0, len(cand) - 1)]
+        return out
+
+    def baseline_max(self) -> np.ndarray:
+        return self.u.copy()
+
+    def baseline_min(self) -> np.ndarray:
+        return np.full(self.g.n_fifos, 2, dtype=np.int64)
+
+    # ---------------------------------------------------------- evaluation
+    def evaluate(self, depth_matrix: np.ndarray
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Evaluate configs (cached), record history, count budget."""
+        depth_matrix = np.atleast_2d(np.asarray(depth_matrix, dtype=np.int64))
+        C = depth_matrix.shape[0]
+        lat = np.zeros(C, dtype=np.int64)
+        bram = np.zeros(C, dtype=np.int64)
+        dead = np.zeros(C, dtype=bool)
+        miss_rows = []
+        for i in range(C):
+            key = depth_matrix[i].tobytes()
+            hit = self._cache.get(key)
+            if hit is None:
+                miss_rows.append(i)
+            else:
+                lat[i], bram[i], dead[i] = hit
+        if miss_rows:
+            sub = depth_matrix[miss_rows]
+            l, b, dd = self.ev.evaluate(sub)
+            for j, i in enumerate(miss_rows):
+                lat[i], bram[i], dead[i] = l[j], b[j], dd[j]
+                self._cache[depth_matrix[i].tobytes()] = (
+                    int(l[j]), int(b[j]), bool(dd[j]))
+        # budget counts *samples drawn*, mirroring the paper
+        self.n_evals += C
+        self._configs.append(depth_matrix)
+        self._lat.append(lat)
+        self._bram.append(bram)
+        self._dead.append(dead)
+        return lat, bram, dead
+
+    def evaluate_one(self, depths: np.ndarray) -> Tuple[int, int, bool]:
+        lat, bram, dead = self.evaluate(np.asarray(depths)[None, :])
+        return int(lat[0]), int(bram[0]), bool(dead[0])
+
+    def result(self, name: str, runtime_s: float) -> OptResult:
+        if self._configs:
+            cfgs = np.concatenate(self._configs, axis=0)
+            lat = np.concatenate(self._lat)
+            bram = np.concatenate(self._bram)
+            dead = np.concatenate(self._dead)
+        else:  # pragma: no cover
+            F = self.g.n_fifos
+            cfgs = np.zeros((0, F), dtype=np.int64)
+            lat = bram = np.zeros(0, dtype=np.int64)
+            dead = np.zeros(0, dtype=bool)
+        return OptResult(name=name, configs=cfgs, latency=lat, bram=bram,
+                         deadlock=dead, runtime_s=runtime_s,
+                         n_evals=self.n_evals)
+
+
+class Optimizer:
+    """Base class: subclasses implement ``run`` and return an OptResult."""
+
+    name = "base"
+
+    def __init__(self, ctx: EvalContext, budget: int = 1000):
+        self.ctx = ctx
+        self.budget = int(budget)
+
+    def run(self) -> OptResult:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def _timed(self, fn) -> OptResult:
+        t0 = time.perf_counter()
+        fn()
+        return self.ctx.result(self.name, time.perf_counter() - t0)

@@ -1,0 +1,74 @@
+"""Greedy heuristic (INR-Arch), paper §III-D.
+
+Starting from Baseline-Max, visit FIFOs ranked by observed max occupancy
+(largest first); set each to depth 2 and keep the reduction unless it
+deadlocks or inflates latency beyond (1 + epsilon) x baseline.  An optional
+refinement pass (on by default; it explains the paper's 10–2200 adaptive
+sample counts) binary-searches the breakpoint grid of each *rejected* FIFO
+for the smallest still-acceptable depth.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.optimizers.base import EvalContext, Optimizer, OptResult
+
+
+class GreedySearch(Optimizer):
+    name = "greedy"
+
+    def __init__(self, ctx: EvalContext, budget: int = 10**9,
+                 epsilon: float = 0.01, refine: bool = True):
+        super().__init__(ctx, budget)   # budget is a cap, not a target
+        self.epsilon = float(epsilon)
+        self.refine = refine
+
+    def run(self) -> OptResult:
+        t0 = time.perf_counter()
+        ctx = self.ctx
+        cur = ctx.baseline_max()
+        base_lat, _, base_dead = ctx.evaluate_one(cur)
+        if base_dead:  # pragma: no cover - Baseline-Max is deadlock-free
+            raise RuntimeError("Baseline-Max deadlocked")
+        limit = base_lat * (1.0 + self.epsilon)
+
+        order = np.argsort(-ctx.g.max_occupancy, kind="stable")
+        rejected = []
+        for f in order:
+            if ctx.n_evals >= self.budget:
+                break
+            if cur[f] <= 2:
+                continue
+            trial = cur.copy()
+            trial[f] = 2
+            lat, _, dead = ctx.evaluate_one(trial)
+            if not dead and lat <= limit:
+                cur = trial
+            else:
+                rejected.append(int(f))
+
+        if self.refine:
+            for f in rejected:
+                if ctx.n_evals >= self.budget:
+                    break
+                cand = ctx.candidates[f]
+                lo, hi = 0, len(cand) - 1   # cand[hi] ~ current (accepted)
+                # invariant: cand[hi] acceptable, cand[lo] == 2 rejected
+                while hi - lo > 1 and ctx.n_evals < self.budget:
+                    mid = (lo + hi) // 2
+                    trial = cur.copy()
+                    trial[f] = cand[mid]
+                    lat, _, dead = ctx.evaluate_one(trial)
+                    if not dead and lat <= limit:
+                        hi = mid
+                    else:
+                        lo = mid
+                if cand[hi] < cur[f]:
+                    cur[f] = cand[hi]
+            # re-evaluate final config so it is part of the history
+            ctx.evaluate_one(cur)
+
+        return ctx.result(self.name, time.perf_counter() - t0)

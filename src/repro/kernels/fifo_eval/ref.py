@@ -1,0 +1,67 @@
+"""Pure-jnp oracle for the fifo_eval Pallas kernel.
+
+Implements the identical fixpoint (Jacobi over cross edges, segmented
+max-plus inclusive scan for intra-task chains) with stock jnp ops —
+``lax.associative_scan`` instead of the kernel's hand-rolled Hillis-Steele
+doubling, and a plain ``lax.while_loop``.  Any disagreement between this
+and the kernel (beyond float-identical results — both are exact integer
+arithmetic in f32) is a kernel bug; tests sweep shapes and designs.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG = jnp.float32(-1e9)
+
+
+def _combine(x, y):
+    a1, m1 = x
+    a2, m2 = y
+    return a1 + a2, jnp.maximum(m1 + a2, m2)
+
+
+def fifo_eval_ref(
+    delta: jnp.ndarray, segst: jnp.ndarray, is_read: jnp.ndarray,
+    has_data: jnp.ndarray, data_idx: jnp.ndarray, end_bonus: jnp.ndarray,
+    rd_lat: jnp.ndarray, bp_idx: jnp.ndarray, bp_valid: jnp.ndarray,
+    *, max_iters: int, bound: float,
+) -> jnp.ndarray:
+    """Same signature/semantics as fifo_eval_pallas; returns (C, 4):
+    [latency, converged, over_bound, iters] per config row."""
+
+    def one(rd_lat_c, bp_idx_c, bp_valid_c):
+        a_base = jnp.where(segst[0] > 0, NEG, delta[0])
+
+        def step(t):
+            bd = jnp.where(has_data[0] > 0,
+                           t[data_idx[0]] + rd_lat_c, NEG)
+            bb = jnp.where(bp_valid_c > 0, t[bp_idx_c] + 1.0, NEG)
+            b = jnp.where(is_read[0] > 0, bd, bb)
+            m = jnp.where(segst[0] > 0, jnp.maximum(b, delta[0]), b)
+            A, M = lax.associative_scan(_combine, (a_base, m))
+            return jnp.maximum(A, M)
+
+        def cond(state):
+            t, it, conv = state
+            return (~conv) & (it < max_iters) & (jnp.max(t) <= bound)
+
+        def body(state):
+            t, it, _ = state
+            t2 = step(t)
+            return t2, it + 1, jnp.all(t2 == t)
+
+        t0 = jnp.zeros(delta.shape[1], dtype=jnp.float32)
+        t, iters, conv = lax.while_loop(
+            cond, body, (step(t0), jnp.int32(1), jnp.bool_(False)))
+        latency = jnp.max(t + end_bonus[0])
+        over = jnp.max(t) > bound
+        return jnp.stack([latency, conv.astype(jnp.float32),
+                          over.astype(jnp.float32),
+                          iters.astype(jnp.float32)])
+
+    return jax.vmap(one)(rd_lat, bp_idx, bp_valid)

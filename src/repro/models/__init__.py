@@ -1,0 +1,6 @@
+"""Model zoo substrate: composable decoder blocks for all assigned archs."""
+
+from repro.models.transformer import (block_specs, forward, init_cache,
+                                      model_specs)
+
+__all__ = ["block_specs", "forward", "init_cache", "model_specs"]

@@ -1,0 +1,146 @@
+"""GQA attention with context-parallel KV sharding.
+
+Distribution strategy (DESIGN.md §4): assigned head counts are mostly NOT
+divisible by the fixed 16-way model axis (12, 28, 36, 25, 24 heads; GQA kv
+2-8), so head tensor-parallelism cannot use the full axis.  Instead the KV
+*sequence* is sharded over "model" (``kv_seq`` rule): scores and the
+softmax reduction are computed distributed over KV chunks, which splits
+attention FLOPs/bytes across the axis for every arch and makes the KV
+cache scale with both mesh axes (batch over "data", length over "model").
+GSPMD inserts the reduce/all-gather collectives at the softmax and the
+attention-output contraction; the §Perf log iterates on them.
+
+Queries are processed in fixed-size chunks via ``lax.scan`` (flash-style)
+so the (Q, S) score tile — not the full S x S matrix — bounds memory.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_rope, rope_angles
+from repro.models.params import ParamSpec
+from repro.models.sharding import constrain
+
+NEG_INF = -1e9
+Q_CHUNK = 512
+
+
+def gqa_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, hd = cfg.d_model, cfg.head_dim_
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    out = {
+        "wq": ParamSpec((d, h * hd), ("embed", "heads")),
+        "wk": ParamSpec((d, kv * hd), ("embed", "kv_heads")),
+        "wv": ParamSpec((d, kv * hd), ("embed", "kv_heads")),
+        "wo": ParamSpec((h * hd, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = ParamSpec((h * hd,), ("heads",), init="zeros")
+        out["bk"] = ParamSpec((kv * hd,), ("kv_heads",), init="zeros")
+        out["bv"] = ParamSpec((kv * hd,), ("kv_heads",), init="zeros")
+    return out
+
+
+FULL_WINDOW = 1 << 30   # "no sliding window" sentinel (traced-friendly)
+
+
+def _mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray, window) -> jnp.ndarray:
+    """(Q, S) True where attention is allowed (causal + sliding window).
+
+    ``window`` may be a Python int or a traced scalar (Hymba switches
+    global/local per layer inside the layer scan); 0 or FULL_WINDOW means
+    full causal attention.
+    """
+    w = jnp.where(jnp.asarray(window) <= 0, FULL_WINDOW, window)
+    ok = k_pos[None, :] <= q_pos[:, None]
+    ok &= k_pos[None, :] > q_pos[:, None] - w
+    return ok
+
+
+def _sdpa(q, k, v, q_pos, k_pos, window: int) -> jnp.ndarray:
+    """q (B,Q,H,D); k/v (B,S,KV,D) with S context-sharded; GQA grouped."""
+    B, Q, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Q, KV, G, D)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32)).astype(q.dtype)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg * scale, k)
+    scores = jnp.where(_mask(q_pos, k_pos, window)[None, None, None],
+                       scores.astype(jnp.float32), NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(B, Q, H, D)
+
+
+def gqa_attention(
+    p: Dict, cfg: ArchConfig, x: jnp.ndarray,
+    positions: jnp.ndarray,
+    window: int = 0,
+    cache: Optional[Dict] = None,
+    cache_index: Optional[jnp.ndarray] = None,
+    cdt=jnp.bfloat16,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Returns (attn_out (B,S,d), new_cache_entry or None).
+
+    Modes: train/prefill (cache=None -> returns fresh K/V as cache entry);
+    decode (cache given, x is the single new token, cache_index scalar).
+    """
+    B, S, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+
+    q = x @ p["wq"].astype(cdt)
+    k = x @ p["wk"].astype(cdt)
+    v = x @ p["wv"].astype(cdt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cdt)
+        k = k + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    q = q.reshape(B, S, h, hd)
+    k = k.reshape(B, S, kv, hd)
+    v = v.reshape(B, S, kv, hd)
+
+    cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if cache is not None:
+        # decode: append the new K/V at cache_index, attend over the cache
+        ck = lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
+        cv = lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
+        ck = constrain(ck, "batch", "kv_seq", "kv_heads", None)
+        cv = constrain(cv, "batch", "kv_seq", "kv_heads", None)
+        k_pos = jnp.arange(ck.shape[1])
+        valid = k_pos <= cache_index
+        qo = _sdpa(q, ck.astype(cdt), cv.astype(cdt),
+                   positions, jnp.where(valid, k_pos, 1 << 30), window)
+        out = qo.reshape(B, S, h * hd) @ p["wo"].astype(cdt)
+        return out, {"k": ck, "v": cv}
+
+    k = constrain(k, "batch", "kv_seq", "kv_heads", None)
+    v = constrain(v, "batch", "kv_seq", "kv_heads", None)
+    k_pos = positions
+
+    if S <= Q_CHUNK:
+        qo = _sdpa(q, k, v, positions, k_pos, window)
+    else:
+        n = S // Q_CHUNK
+        qc = q.reshape(B, n, Q_CHUNK, h, hd).swapaxes(0, 1)
+        pc = positions.reshape(n, Q_CHUNK)
+
+        def step(_, qp):
+            qi, pi = qp
+            return None, _sdpa(qi, k, v, pi, k_pos, window)
+
+        _, oc = lax.scan(step, None, (qc, pc))
+        qo = oc.swapaxes(0, 1).reshape(B, S, h, hd)
+
+    out = qo.reshape(B, S, h * hd) @ p["wo"].astype(cdt)
+    return out, {"k": k, "v": v}

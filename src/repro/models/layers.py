@@ -1,0 +1,98 @@
+"""Shared model primitives: RMSNorm, RoPE, SwiGLU MLP, embeddings.
+
+Forward functions take a params dict produced by the matching ``*_specs``
+builder (one source of truth per module; tests assert tree compatibility).
+Compute runs in ``cdt`` (bf16 on TPU), params are stored fp32.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.params import ParamSpec
+from repro.models.sharding import constrain
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray,
+             eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * weight.astype(dt)
+
+
+def norm_specs(d: int) -> Dict[str, ParamSpec]:
+    return {"w": ParamSpec((d,), ("embed",), init="ones")}
+
+
+# ------------------------------------------------------------------ RoPE
+
+def rope_angles(positions: jnp.ndarray, head_dim: int,
+                theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (...,) -> cos/sin of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray,
+               sin: jnp.ndarray) -> jnp.ndarray:
+    """x (..., S, H, D); cos/sin (..., S, D/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ----------------------------------------------------------------- MLP
+
+def mlp_specs(d: int, ff: int) -> Dict[str, ParamSpec]:
+    return {
+        "gate": ParamSpec((d, ff), ("embed", "mlp")),
+        "up": ParamSpec((d, ff), ("embed", "mlp")),
+        "down": ParamSpec((ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp(p: Dict, x: jnp.ndarray, cdt=jnp.bfloat16) -> jnp.ndarray:
+    """SwiGLU MLP; hidden dim tensor-parallel over the ``mlp`` axis."""
+    g = x @ p["gate"].astype(cdt)
+    u = x @ p["up"].astype(cdt)
+    h = jax.nn.silu(g) * u
+    h = constrain(h, "batch", "seq", "mlp")
+    return h @ p["down"].astype(cdt)
+
+
+# ----------------------------------------------------------- embeddings
+
+def embed_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    # pad vocab up to a multiple of 16 so it shards over the model axis
+    vpad = -(-cfg.vocab // 16) * 16
+    out = {"tok": ParamSpec((vpad, cfg.d_model), ("vocab", "embed"))}
+    if not cfg.tie_embeddings:
+        out["out"] = ParamSpec((cfg.d_model, vpad), ("embed", "vocab"))
+    return out
+
+
+def embed(p: Dict, cfg: ArchConfig, tokens: jnp.ndarray,
+          cdt=jnp.bfloat16) -> jnp.ndarray:
+    e = jnp.take(p["tok"].astype(cdt), tokens, axis=0)
+    return e * jnp.asarray(cfg.embed_scale, cdt)
+
+
+def unembed(p: Dict, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Final projection in fp32; returns logits over the PADDED vocab
+    (ids >= cfg.vocab are never targets; loss masks them out)."""
+    if cfg.tie_embeddings:
+        w = p["tok"].astype(jnp.float32).T
+    else:
+        w = p["out"].astype(jnp.float32)
+    logits = x.astype(jnp.float32) @ w
+    logits = logits * cfg.logit_scale
+    return constrain(logits, "batch", "seq", "vocab")

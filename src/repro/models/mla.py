@@ -1,0 +1,130 @@
+"""Multi-head Latent Attention (DeepSeek-V2), absorbed formulation.
+
+The KV cache stores only the compressed latent c_kv (kv_lora_rank) plus the
+shared decoupled-RoPE key (rope_head_dim) per position — MLA's point.  We
+use the *absorbed* computation in every mode (W_uk folded into the query,
+W_uv applied after the attention-weighted latent): nothing of size
+(S, heads, head_dim) is ever materialized, which keeps 128-head x 32k-seq
+prefill inside HBM.  Latent cache is context-sharded ("kv_seq" -> model)
+like the GQA path.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.attention import NEG_INF, Q_CHUNK, _mask
+from repro.models.layers import rope_angles
+from repro.models.params import ParamSpec
+from repro.models.sharding import constrain
+
+
+def mla_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    return {
+        "wdq": ParamSpec((d, m.q_lora_rank), ("embed", None)),
+        "wuq_nope": ParamSpec((m.q_lora_rank, h, m.nope_head_dim),
+                              (None, "heads", None)),
+        "wuq_rope": ParamSpec((m.q_lora_rank, h, m.rope_head_dim),
+                              (None, "heads", None)),
+        "wdkv": ParamSpec((d, m.kv_lora_rank), ("embed", None)),
+        "wk_rope": ParamSpec((d, m.rope_head_dim), ("embed", None)),
+        "wuk": ParamSpec((m.kv_lora_rank, h, m.nope_head_dim),
+                         (None, "heads", None)),
+        "wuv": ParamSpec((m.kv_lora_rank, h, m.v_head_dim),
+                         (None, "heads", None)),
+        "wo": ParamSpec((h * m.v_head_dim, d), ("heads", "embed")),
+    }
+
+
+def _apply_rope_1h(x, cos, sin):
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c, s = cos.astype(x.dtype), sin.astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def _mla_scores_out(q_lat, q_rope, c_kv, k_rope, q_pos, k_pos, scale):
+    """q_lat (B,Q,H,C); q_rope (B,Q,H,R); c_kv (B,S,C); k_rope (B,S,R)."""
+    s_lat = jnp.einsum("bqhc,bsc->bhqs", q_lat, c_kv)
+    s_rope = jnp.einsum("bqhr,bsr->bhqs", q_rope, k_rope)
+    scores = (s_lat + s_rope) * scale
+    scores = jnp.where(_mask(q_pos, k_pos, 0)[None, None],
+                       scores.astype(jnp.float32), NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q_lat.dtype)
+    return jnp.einsum("bhqs,bsc->bqhc", w, c_kv)   # attention-weighted latent
+
+
+def mla_attention(
+    p: Dict, cfg: ArchConfig, x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cache: Optional[Dict] = None,
+    cache_index: Optional[jnp.ndarray] = None,
+    cdt=jnp.bfloat16,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    m = cfg.mla
+    B, S, _ = x.shape
+    h = cfg.n_heads
+
+    # queries through the low-rank bottleneck
+    q_lora = x @ p["wdq"].astype(cdt)
+    q_nope = jnp.einsum("bsl,lhd->bshd", q_lora, p["wuq_nope"].astype(cdt))
+    q_rope = jnp.einsum("bsl,lhr->bshr", q_lora, p["wuq_rope"].astype(cdt))
+    cos, sin = rope_angles(positions, m.rope_head_dim, cfg.rope_theta)
+    q_rope = _apply_rope_1h(q_rope, cos[..., None, :], sin[..., None, :])
+    # absorb W_uk into the query: q_lat (B,S,H,kv_lora)
+    q_lat = jnp.einsum("bshd,lhd->bshl", q_nope, p["wuk"].astype(cdt))
+
+    # keys/values: compressed latent + shared rope key
+    c_kv_new = x @ p["wdkv"].astype(cdt)
+    k_rope_new = _apply_rope_1h(x @ p["wk_rope"].astype(cdt), cos, sin)
+
+    scale = 1.0 / jnp.sqrt(
+        jnp.asarray(m.nope_head_dim + m.rope_head_dim, jnp.float32)
+    ).astype(cdt)
+
+    if cache is not None:
+        c_kv = lax.dynamic_update_slice(
+            cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype),
+            (0, cache_index, 0))
+        k_rope = lax.dynamic_update_slice(
+            cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype),
+            (0, cache_index, 0))
+        c_kv = constrain(c_kv, "batch", "kv_seq", None)
+        k_rope = constrain(k_rope, "batch", "kv_seq", None)
+        k_pos = jnp.arange(c_kv.shape[1])
+        k_pos = jnp.where(k_pos <= cache_index, k_pos, 1 << 30)
+        lat = _mla_scores_out(q_lat, q_rope, c_kv.astype(cdt),
+                              k_rope.astype(cdt), positions, k_pos, scale)
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+    else:
+        c_kv = constrain(c_kv_new, "batch", "kv_seq", None)
+        k_rope = constrain(k_rope_new, "batch", "kv_seq", None)
+        k_pos = positions
+        if S <= Q_CHUNK:
+            lat = _mla_scores_out(q_lat, q_rope, c_kv, k_rope,
+                                  positions, k_pos, scale)
+        else:
+            n = S // Q_CHUNK
+            qlc = q_lat.reshape(B, n, Q_CHUNK, h, -1).swapaxes(0, 1)
+            qrc = q_rope.reshape(B, n, Q_CHUNK, h, -1).swapaxes(0, 1)
+            pc = positions.reshape(n, Q_CHUNK)
+
+            def step(_, t):
+                ql, qr, pi = t
+                return None, _mla_scores_out(ql, qr, c_kv, k_rope,
+                                             pi, k_pos, scale)
+            _, oc = lax.scan(step, None, (qlc, qrc, pc))
+            lat = oc.swapaxes(0, 1).reshape(B, S, h, -1)
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+
+    # un-absorb the value projection, then the output projection
+    o = jnp.einsum("bqhl,lhv->bqhv", lat, p["wuv"].astype(cdt))
+    out = o.reshape(B, S, h * m.v_head_dim) @ p["wo"].astype(cdt)
+    return out, new_cache

@@ -1,0 +1,94 @@
+"""Mixture-of-Experts FFN with capacity-based dispatch (GShard-style).
+
+Expert weights are expert-parallel ("experts" -> model axis); the dispatch
+buffer (E, C, d) is sharded (experts -> model, capacity -> data), so GSPMD
+materializes the token->expert exchange as all-to-all-class collectives —
+the honest communication pattern of EP at scale, visible to the roofline.
+
+Top-k routing with per-expert capacity C = ceil(cf * N * k / E); overflow
+tokens are dropped (standard), underflow slots padded with zeros.  Shared
+experts (DeepSeek-V2) are plain dense FFNs added to the routed output.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import mlp, mlp_specs
+from repro.models.params import ParamSpec
+from repro.models.sharding import constrain
+
+
+def moe_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    mo = cfg.moe
+    d, e, f = cfg.d_model, mo.n_experts, mo.d_ff_expert
+    out = {
+        "router": ParamSpec((d, e), ("embed", None), scale=0.006),
+        "gate": ParamSpec((e, d, f), ("experts", "fsdp", None)),
+        "up": ParamSpec((e, d, f), ("experts", "fsdp", None)),
+        "down": ParamSpec((e, f, d), ("experts", None, "fsdp")),
+    }
+    for i in range(mo.n_shared):
+        out[f"shared{i}"] = mlp_specs(d, mo.d_ff_shared)
+    return out
+
+
+def moe_ffn(p: Dict, cfg: ArchConfig, x: jnp.ndarray,
+            cdt=jnp.bfloat16) -> jnp.ndarray:
+    """x (B, S, d) -> (B, S, d)."""
+    mo = cfg.moe
+    B, S, d = x.shape
+    N = B * S
+    E, K = mo.n_experts, mo.top_k
+    C = max(8, int(-(-mo.capacity_factor * N * K // E)))
+    C = min(C, N)
+
+    xf = x.reshape(N, d)
+    logits = (xf @ p["router"].astype(cdt)).astype(jnp.float32)
+    gates_all = jax.nn.softmax(logits, axis=-1)
+    top_g, top_e = jax.lax.top_k(gates_all, K)          # (N, K)
+    top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+
+    # per-(token, slot) position within its expert's capacity buffer
+    counts = jnp.zeros((E,), jnp.int32)
+    pos = jnp.zeros((N, K), jnp.int32)
+    for j in range(K):
+        onehot = jax.nn.one_hot(top_e[:, j], E, dtype=jnp.int32)
+        within = jnp.cumsum(onehot, axis=0) - 1          # (N, E)
+        pos = pos.at[:, j].set(
+            jnp.take_along_axis(within + counts[None, :],
+                                top_e[:, j:j + 1], axis=1)[:, 0])
+        counts = counts + onehot.sum(axis=0)
+    keep = (pos < C)
+    pos_c = jnp.minimum(pos, C - 1)
+
+    # dispatch: scatter tokens into the (E, C, d) buffer
+    buf = jnp.zeros((E, C, d), cdt)
+    for j in range(K):
+        contrib = xf * keep[:, j:j + 1].astype(cdt)
+        buf = buf.at[top_e[:, j], pos_c[:, j]].add(contrib)
+    buf = constrain(buf, "experts", "capacity", None)
+
+    # expert computation (batched over the expert axis)
+    g = jnp.einsum("ecd,edf->ecf", buf, p["gate"].astype(cdt))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["up"].astype(cdt))
+    h = jax.nn.silu(g) * u
+    h = constrain(h, "experts", "capacity", None)
+    ob = jnp.einsum("ecf,efd->ecd", h, p["down"].astype(cdt))
+    ob = constrain(ob, "experts", "capacity", None)
+
+    # combine: gather each token's expert outputs, weight by gates
+    y = jnp.zeros((N, d), cdt)
+    for j in range(K):
+        o = ob[top_e[:, j], pos_c[:, j]]
+        w = (top_g[:, j] * keep[:, j]).astype(cdt)
+        y = y + o * w[:, None]
+
+    y = y.reshape(B, S, d)
+    for i in range(mo.n_shared):
+        y = y + mlp(p[f"shared{i}"], x, cdt)   # shared experts: dense path
+    return y

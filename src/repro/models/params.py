@@ -1,0 +1,85 @@
+"""Parameter metadata: one source of truth for shapes, init, and sharding.
+
+Models build a pytree of :class:`ParamSpec`; the same tree then yields
+(a) materialized parameters for tests/training, (b) NamedShardings for the
+dry-run/pjit, and (c) ShapeDtypeStructs for ``jax.eval_shape``-style use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import ShardingCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"           # normal | zeros | ones
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape,
+                                                      self.logical)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def materialize(tree, key: jax.Array, dtype=None):
+    """Initialize real parameter arrays from a ParamSpec tree."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        dt = dtype or spec.dtype
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, dt))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, dt))
+        else:
+            out.append((jax.random.normal(k, spec.shape, dtype=jnp.float32)
+                        * spec.scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def shape_structs(tree, ctx: Optional[ShardingCtx] = None):
+    """ShapeDtypeStructs (optionally sharded) for the dry-run."""
+    def f(spec: ParamSpec):
+        sh = ctx.sharding(spec.logical) if ctx is not None else None
+        return jax.ShapeDtypeStruct(spec.shape, spec.dtype, sharding=sh)
+    return tree_map_specs(f, tree)
+
+
+def shardings(tree, ctx: ShardingCtx):
+    return tree_map_specs(lambda s: ctx.sharding(s.logical), tree)
+
+
+def specs(tree, ctx: ShardingCtx):
+    return tree_map_specs(lambda s: ctx.spec(s.logical), tree)
+
+
+def n_params(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_spec)
+    return int(sum(int(np.prod(l.shape)) for l in leaves))
+
+
+def stack_layers(tree, n: int):
+    """Add a leading stacked-layers axis to every spec (for lax.scan)."""
+    def f(s: ParamSpec):
+        return ParamSpec((n,) + s.shape, ("layers",) + s.logical,
+                         s.dtype, s.init, s.scale)
+    return tree_map_specs(f, tree)

@@ -1,0 +1,120 @@
+"""Logical-axis sharding: one rules table maps logical names -> mesh axes.
+
+Model code annotates activations with *logical* axis names via
+:func:`constrain`; parameters carry logical names in their
+:class:`~repro.models.params.ParamSpec`.  The launcher installs a
+:class:`ShardingCtx` (mesh + rules); without one, every annotation is a
+no-op — so the same model code runs unsharded on CPU smoke tests and fully
+sharded under the production mesh.
+
+Default rules (DESIGN.md §4):
+
+    batch   -> ("pod", "data")    data parallel (pod axis folds in)
+    vocab   -> "model"            embedding/logits tensor parallel
+    heads   -> "model"            attention head TP (divisible archs)
+    mlp     -> "model"            FFN hidden TP
+    experts -> "model"            MoE expert parallel
+    kv_seq  -> "model"            context-parallel KV (non-divisible archs)
+    fsdp    -> "data"             ZeRO-3 style param sharding (large archs)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+DEFAULT_RULES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": None,
+    "mlp": "model",
+    "experts": "model",
+    "seq": None,
+    "kv_seq": "model",
+    # params' d_model dim is ZeRO-3 sharded over the data-parallel axes;
+    # on ACTIVATIONS ("batch","seq","embed") the batch spec consumes those
+    # axes first, so the embed dim stays unsharded there (spec() dedups).
+    "embed": ("pod", "data"),
+    "fsdp": ("pod", "data"),     # ZeRO-3 over all data-parallel replicas
+    "layers": None,
+    "ssm_heads": "model",
+    "ssm_inner": "model",
+    "capacity": None,
+    "conv": None,
+    "state": None,
+}
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    mesh: Mesh
+    rules: Dict[str, Axis]
+
+    def spec(self, logical: Sequence[Optional[str]]) -> PartitionSpec:
+        axes = []
+        used = set()
+        for name in logical:
+            ax = self.rules.get(name) if name else None
+            # an axis may be consumed at most once per spec
+            if ax is None:
+                axes.append(None)
+                continue
+            flat = (ax,) if isinstance(ax, str) else tuple(ax)
+            flat = tuple(a for a in flat
+                         if a not in used and a in self.mesh.axis_names)
+            used.update(flat)
+            if not flat:
+                axes.append(None)
+            elif len(flat) == 1:
+                axes.append(flat[0])
+            else:
+                axes.append(flat)
+        return PartitionSpec(*axes)
+
+    def sharding(self, logical: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical))
+
+
+_ctx = threading.local()
+
+
+def set_ctx(ctx: Optional[ShardingCtx]) -> None:
+    _ctx.value = ctx
+
+
+def get_ctx() -> Optional[ShardingCtx]:
+    return getattr(_ctx, "value", None)
+
+
+class use_ctx:
+    """``with use_ctx(mesh, rules): ...`` — installs the sharding context."""
+
+    def __init__(self, mesh: Optional[Mesh],
+                 rules: Optional[Dict[str, Axis]] = None):
+        self.ctx = (ShardingCtx(mesh, dict(DEFAULT_RULES, **(rules or {})))
+                    if mesh is not None else None)
+
+    def __enter__(self):
+        self.prev = get_ctx()
+        set_ctx(self.ctx)
+        return self.ctx
+
+    def __exit__(self, *exc):
+        set_ctx(self.prev)
+        return False
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Annotate an activation with logical axes (no-op without a ctx)."""
+    ctx = get_ctx()
+    if ctx is None:
+        return x
+    assert len(logical) == x.ndim, (logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, ctx.sharding(logical))

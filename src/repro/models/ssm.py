@@ -1,0 +1,158 @@
+"""Mamba-2 SSD block (state-space duality, chunked matmul form).
+
+The chunked algorithm (Dao & Gu 2024) turns the linear recurrence
+
+    h_t = a_t h_{t-1} + dt_t * B_t x_t^T ;   y_t = C_t h_t + D x_t
+
+into MXU-friendly work: within chunks of length Q the output is an
+attention-like (Q x Q) masked matmul; across chunks a tiny scan carries
+the (H, state, head_dim) boundary states.  Heads are sharded over "model"
+("ssm_heads") when divisible (mamba2: 64 heads / 16 ✓); otherwise
+replicated (hymba's 32-head bank — noted in the roofline table).
+
+Decode is the O(1) recurrence on the carried state; the conv1d keeps a
+(d_conv-1)-deep rolling buffer.  Neither grows with context length, which
+is why the SSM archs run ``long_500k``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.params import ParamSpec
+from repro.models.sharding import constrain
+
+
+def ssd_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    heads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.d_state
+    return {
+        # projection to [z (gate), x, B, C, dt]
+        "win": ParamSpec((d, 2 * d_in + 2 * s.d_state + heads),
+                         ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((s.d_conv, conv_dim), ("conv", "ssm_inner"),
+                            scale=0.1),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), init="zeros"),
+        "a_log": ParamSpec((heads,), ("ssm_heads",), init="zeros"),
+        "dt_bias": ParamSpec((heads,), ("ssm_heads",), init="zeros"),
+        "dd": ParamSpec((heads,), ("ssm_heads",), init="ones"),
+        "norm": ParamSpec((d_in,), ("ssm_inner",), init="ones"),
+        "wout": ParamSpec((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split(cfg: ArchConfig, zxbcdt: jnp.ndarray):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    heads = d_in // s.head_dim
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * s.d_state], axis=-1)
+    return z, xbc, dt, d_in, heads
+
+
+def _ssd_chunked(xh, a, b, c, chunk: int):
+    """xh (B,S,H,P) pre-scaled by dt; a (B,S,H) decay in (0,1);
+    b/c (B,S,N).  Returns y (B,S,H,P) and final state (B,H,P,N)."""
+    B, S, H, P = xh.shape
+    N = b.shape[-1]
+    nc = S // chunk
+    xc = xh.reshape(B, nc, chunk, H, P)
+    ac = a.reshape(B, nc, chunk, H)
+    bc = b.reshape(B, nc, chunk, N)
+    cc = c.reshape(B, nc, chunk, N)
+
+    la = jnp.cumsum(jnp.log(jnp.maximum(ac, 1e-20)), axis=2)  # (B,nc,Q,H)
+    seg = la[:, :, :, None, :] - la[:, :, None, :, :]         # (B,nc,Q,K,H)
+    iota = jnp.arange(chunk)
+    causal = iota[:, None] >= iota[None, :]
+    decay = jnp.where(causal[None, None, :, :, None],
+                      jnp.exp(seg), 0.0)
+
+    # intra-chunk: (C_q . B_k) * decay(q,k) applied to x_k
+    cb = jnp.einsum("bnqs,bnks->bnqk", cc, bc)                # (B,nc,Q,K)
+    y_intra = jnp.einsum("bnqk,bnqkh,bnkhp->bnqhp",
+                         cb, decay.astype(cb.dtype), xc)
+
+    # chunk-final states: sum_k decay_to_end(k) * b_k (x) x_k
+    dte = jnp.exp(la[:, :, -1:, :] - la)                      # (B,nc,Q,H)
+    states = jnp.einsum("bnkh,bnks,bnkhp->bnhps",
+                        dte.astype(xc.dtype), bc, xc)         # (B,nc,H,P,N)
+    a_chunk = jnp.exp(la[:, :, -1, :])                        # (B,nc,H)
+
+    def scanf(h, t):
+        st, ach = t
+        h_new = h * ach[..., None, None].astype(h.dtype) + st
+        return h_new, h        # emit the state ENTERING this chunk
+
+    h0 = jnp.zeros((B, H, P, N), xh.dtype)
+    h_last, h_in = lax.scan(scanf, h0,
+                            (states.swapaxes(0, 1), a_chunk.swapaxes(0, 1)))
+    h_in = h_in.swapaxes(0, 1)                                # (B,nc,H,P,N)
+
+    # inter-chunk: y += C_q . (decay_from_start(q) * h_in)
+    dfs = jnp.exp(la)                                         # (B,nc,Q,H)
+    y_inter = jnp.einsum("bnqs,bnqh,bnhps->bnqhp",
+                         cc, dfs.astype(cc.dtype), h_in)
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y, h_last
+
+
+def ssd_block(
+    p: Dict, cfg: ArchConfig, x: jnp.ndarray,
+    cache: Optional[Dict] = None,
+    cache_index: Optional[jnp.ndarray] = None,
+    cdt=jnp.bfloat16,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x (B,S,d) -> (y (B,S,d), new_cache).  cache = {"state","conv"}."""
+    s = cfg.ssm
+    B, S, _ = x.shape
+    zxbcdt = x @ p["win"].astype(cdt)
+    z, xbc, dt, d_in, heads = _split(cfg, zxbcdt)
+
+    conv_w = p["conv_w"].astype(cdt)
+    if cache is None:
+        # causal depthwise conv over the sequence
+        pad = jnp.pad(xbc, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+        xbc_c = sum(pad[:, i:i + S] * conv_w[i] for i in range(s.d_conv))
+        new_conv = pad[:, -(s.d_conv - 1):, :]   # rolling buffer for decode
+    else:
+        roll = jnp.concatenate([cache["conv"].astype(cdt), xbc], axis=1)
+        xbc_c = sum(roll[:, i + S - 1:i + S] * conv_w[i]
+                    for i in range(s.d_conv))
+        new_conv = roll[:, -(s.d_conv - 1):, :]
+    xbc_c = jax.nn.silu(xbc_c + p["conv_b"].astype(cdt))
+
+    xs, b, c = jnp.split(xbc_c, [d_in, d_in + s.d_state], axis=-1)
+    xs = xs.reshape(B, -1, heads, s.head_dim)
+    dt_v = jax.nn.softplus(dt.astype(jnp.float32)
+                           + p["dt_bias"].astype(jnp.float32))
+    a = jnp.exp(-dt_v * jnp.exp(p["a_log"].astype(jnp.float32)))
+    xh = xs * dt_v.astype(cdt)[..., None]
+
+    if cache is None:
+        y, h_last = _ssd_chunked(xh, a, b, c, min(s.chunk, S))
+        new_state = h_last
+    else:
+        h = cache["state"].astype(cdt)
+        h = h * a.astype(cdt)[:, 0, :, None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xh[:, 0], b[:, 0])
+        y = jnp.einsum("bn,bhpn->bhp", c[:, 0], h)[:, None]
+        new_state = h
+
+    y = y + xs * p["dd"].astype(cdt)[None, None, :, None]
+    y = y.reshape(B, S, d_in) * jax.nn.silu(z)
+    # RMS-style gate norm
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)).astype(cdt)
+    y = y * p["norm"].astype(cdt)
+    out = y @ p["wout"].astype(cdt)
+    new_cache = {"state": new_state.astype(jnp.float32),
+                 "conv": new_conv.astype(jnp.float32)}
+    return out, new_cache

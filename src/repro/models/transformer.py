@@ -1,0 +1,271 @@
+"""Composable decoder-only LM covering every assigned architecture family.
+
+One block function dispatches on the arch family (dense / moe / ssm /
+hybrid); the layer stack runs under ``lax.scan`` with ``jax.checkpoint``
+(rematerialized activations), which keeps HLO size and compile time flat
+in depth — essential for lowering 60-layer x 512-device graphs.
+Heterogeneous leading layers (DeepSeek-V2's first dense FFN layer) are
+stacked and scanned separately.
+
+VLM/audio frontends are STUBS per the assignment: ``embeds`` (precomputed
+patch/frame embeddings, (B, F, d_model)) are consumed as a sequence prefix
+ahead of the token embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import params as pm
+from repro.models.attention import FULL_WINDOW, gqa_attention, gqa_specs
+from repro.models.layers import (embed, embed_specs, mlp, mlp_specs,
+                                 norm_specs, rms_norm, unembed)
+from repro.models.mla import mla_attention, mla_specs
+from repro.models.moe import moe_ffn, moe_specs
+from repro.models.params import ParamSpec
+from repro.models.sharding import constrain
+from repro.models.ssm import ssd_block, ssd_specs
+
+
+# --------------------------------------------------------------- specs
+
+def block_specs(cfg: ArchConfig, dense_ffn: bool = False) -> Dict:
+    """Parameter specs for ONE layer."""
+    d = cfg.d_model
+    out: Dict[str, Any] = {"ln1": norm_specs(d)}
+    if cfg.family == "ssm":
+        out["ssm"] = ssd_specs(cfg)
+        return out
+    out["attn"] = mla_specs(cfg) if cfg.mla else gqa_specs(cfg)
+    if cfg.hybrid_ssm:
+        out["ssm"] = ssd_specs(cfg)
+        out["post_attn"] = norm_specs(d)
+        out["post_ssm"] = norm_specs(d)
+    out["ln2"] = norm_specs(d)
+    if cfg.moe is not None and not dense_ffn:
+        out["ffn"] = moe_specs(cfg)
+    else:
+        ff = cfg.moe.d_ff_dense if (cfg.moe and dense_ffn) else cfg.d_ff
+        out["ffn"] = mlp_specs(d, ff)
+    return out
+
+
+def model_specs(cfg: ArchConfig) -> Dict:
+    k_dense = cfg.moe.first_k_dense if cfg.moe else 0
+    out = {
+        "embed": embed_specs(cfg),
+        "final_norm": norm_specs(cfg.d_model),
+        "layers": pm.stack_layers(block_specs(cfg), cfg.n_layers - k_dense),
+    }
+    if k_dense:
+        out["dense_layers"] = pm.stack_layers(
+            block_specs(cfg, dense_ffn=True), k_dense)
+    return out
+
+
+# --------------------------------------------------------------- cache
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict:
+    """Abstract KV/SSM cache specs (materialize with pm.materialize or use
+    pm.shape_structs for the dry-run)."""
+    def layer_cache() -> Dict:
+        c: Dict[str, ParamSpec] = {}
+        if cfg.family == "ssm" or cfg.hybrid_ssm:
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            heads = d_in // s.head_dim
+            c["ssm_state"] = ParamSpec(
+                (batch, heads, s.head_dim, s.d_state),
+                ("batch", "ssm_heads", None, None), jnp.float32, "zeros")
+            c["ssm_conv"] = ParamSpec(
+                (batch, s.d_conv - 1, d_in + 2 * s.d_state),
+                ("batch", None, "ssm_inner"), jnp.float32, "zeros")
+        if cfg.family != "ssm":
+            if cfg.mla:
+                m = cfg.mla
+                c["c_kv"] = ParamSpec((batch, max_len, m.kv_lora_rank),
+                                      ("batch", "kv_seq", None),
+                                      dtype, "zeros")
+                c["k_rope"] = ParamSpec((batch, max_len, m.rope_head_dim),
+                                        ("batch", "kv_seq", None),
+                                        dtype, "zeros")
+            else:
+                kv, hd = cfg.n_kv_heads, cfg.head_dim_
+                c["k"] = ParamSpec((batch, max_len, kv, hd),
+                                   ("batch", "kv_seq", "kv_heads", None),
+                                   dtype, "zeros")
+                c["v"] = ParamSpec((batch, max_len, kv, hd),
+                                   ("batch", "kv_seq", "kv_heads", None),
+                                   dtype, "zeros")
+        return c
+
+    k_dense = cfg.moe.first_k_dense if cfg.moe else 0
+    out = {"layers": pm.stack_layers(layer_cache(), cfg.n_layers - k_dense)}
+    if k_dense:
+        out["dense_layers"] = pm.stack_layers(layer_cache(), k_dense)
+    return out
+
+
+# --------------------------------------------------------------- blocks
+
+def _layer_windows(cfg: ArchConfig, n: int, offset: int = 0) -> np.ndarray:
+    """Per-layer attention window (FULL_WINDOW = global)."""
+    if not cfg.sliding_window:
+        return np.full(n, FULL_WINDOW, dtype=np.int32)
+    w = np.full(n, cfg.sliding_window, dtype=np.int32)
+    for i in range(n):
+        li = i + offset
+        is_global = (cfg.global_attn_every and
+                     (li % cfg.global_attn_every == 0
+                      or li == cfg.n_layers - 1))
+        if is_global:
+            w[i] = FULL_WINDOW
+    return w
+
+
+def block_apply(cfg: ArchConfig, p: Dict, x: jnp.ndarray,
+                positions: jnp.ndarray, window,
+                cache: Optional[Dict], cache_index,
+                dense_ffn: bool = False, cdt=jnp.bfloat16
+                ) -> Tuple[jnp.ndarray, Dict]:
+    rs = jnp.asarray(cfg.residual_scale, cdt)
+    new_cache: Dict[str, Any] = {}
+    h = rms_norm(x, p["ln1"]["w"], cfg.norm_eps)
+
+    if cfg.family == "ssm":
+        sc = ({"state": cache["ssm_state"], "conv": cache["ssm_conv"]}
+              if cache is not None else None)
+        y, nc = ssd_block(p["ssm"], cfg, h, sc, cache_index, cdt)
+        new_cache.update(ssm_state=nc["state"], ssm_conv=nc["conv"])
+        return x + y * rs, new_cache
+
+    if cfg.mla:
+        mc = ({"c_kv": cache["c_kv"], "k_rope": cache["k_rope"]}
+              if cache is not None else None)
+        attn_out, kvc = mla_attention(p["attn"], cfg, h, positions,
+                                      mc, cache_index, cdt)
+        new_cache.update(c_kv=kvc["c_kv"], k_rope=kvc["k_rope"])
+    else:
+        kc = ({"k": cache["k"], "v": cache["v"]}
+              if cache is not None else None)
+        attn_out, kvc = gqa_attention(p["attn"], cfg, h, positions, window,
+                                      kc, cache_index, cdt)
+        new_cache.update(k=kvc["k"], v=kvc["v"])
+
+    if cfg.hybrid_ssm:
+        sc = ({"state": cache["ssm_state"], "conv": cache["ssm_conv"]}
+              if cache is not None else None)
+        ssm_out, nc = ssd_block(p["ssm"], cfg, h, sc, cache_index, cdt)
+        new_cache.update(ssm_state=nc["state"], ssm_conv=nc["conv"])
+        y = 0.5 * (rms_norm(attn_out, p["post_attn"]["w"], cfg.norm_eps)
+                   + rms_norm(ssm_out, p["post_ssm"]["w"], cfg.norm_eps))
+    else:
+        y = attn_out
+
+    x = x + y * rs
+    h2 = rms_norm(x, p["ln2"]["w"], cfg.norm_eps)
+    if cfg.moe is not None and not dense_ffn:
+        f = moe_ffn(p["ffn"], cfg, h2, cdt)
+    else:
+        f = mlp(p["ffn"], h2, cdt)
+    return x + f * rs, new_cache
+
+
+# --------------------------------------------------------------- model
+
+def _scan_stack(cfg: ArchConfig, stacked_params: Dict, x: jnp.ndarray,
+                positions: jnp.ndarray, windows: jnp.ndarray,
+                cache: Optional[Dict], cache_index,
+                dense_ffn: bool, remat: bool, collect_cache: bool,
+                cdt, unroll: bool = False) -> Tuple[jnp.ndarray,
+                                                    Optional[Dict]]:
+    fn = block_apply
+    if remat:
+        # cfg / dense_ffn / cdt are Python-level: must stay static
+        fn = jax.checkpoint(
+            block_apply, static_argnums=(0, 7, 8),
+            policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(carry, xs):
+        p, w, c = xs
+        out, nc = fn(cfg, p, carry, positions, w, c, cache_index,
+                     dense_ffn, cdt)
+        # training discards the cache: returning None here lets scan skip
+        # materializing the stacked (L, B, S, ...) K/V tensors entirely
+        return out, (nc if collect_cache else None)
+
+    if unroll:
+        # python loop (HLO grows with L): used by the dry-run's FLOPs
+        # estimator, where XLA's cost model must see every layer
+        n = jax.tree.leaves(stacked_params)[0].shape[0]
+        ncs = []
+        for i in range(n):
+            sl = jax.tree.map(lambda a: a[i], stacked_params)
+            cl = (jax.tree.map(lambda a: a[i], cache)
+                  if cache is not None else None)
+            x, nc = body(x, (sl, jnp.asarray(windows)[i], cl))
+            ncs.append(nc)
+        if collect_cache:
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+            return x, stacked
+        return x, None
+
+    xs = (stacked_params, jnp.asarray(windows), cache)
+    x, new_cache = lax.scan(body, x, xs)
+    return x, new_cache
+
+
+def forward(cfg: ArchConfig, params: Dict, tokens: jnp.ndarray,
+            embeds: Optional[jnp.ndarray] = None,
+            cache: Optional[Dict] = None,
+            cache_index=None,
+            positions: Optional[jnp.ndarray] = None,
+            remat: bool = True,
+            return_cache: bool = True,
+            unroll: bool = False,
+            cdt=jnp.bfloat16) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """tokens (B, S_text); embeds (B, F, d) optional frontend prefix.
+
+    Train/prefill: cache=None or zero-filled cache to fill; returns
+    (logits (B, S, vocab_padded), new_cache).  Decode: tokens (B, 1),
+    cache + cache_index given.
+    """
+    x = embed(params["embed"], cfg, tokens, cdt)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(cdt), x], axis=1)
+    x = constrain(x, "batch", "seq", "embed")
+    S = x.shape[1]
+    if positions is None:
+        if cache_index is not None and S == 1:
+            positions = jnp.asarray(cache_index)[None]
+        else:
+            positions = jnp.arange(S)
+
+    k_dense = cfg.moe.first_k_dense if cfg.moe else 0
+    new_cache: Dict[str, Any] = {}
+    if k_dense:
+        x, nc = _scan_stack(cfg, params["dense_layers"], x, positions,
+                            _layer_windows(cfg, k_dense),
+                            cache.get("dense_layers") if cache else None,
+                            cache_index, True, remat, return_cache, cdt,
+                            unroll)
+        new_cache["dense_layers"] = nc
+    x, nc = _scan_stack(cfg, params["layers"], x, positions,
+                        _layer_windows(cfg, cfg.n_layers - k_dense, k_dense),
+                        cache.get("layers") if cache else None,
+                        cache_index, False, remat, return_cache, cdt,
+                        unroll)
+    new_cache["layers"] = nc
+
+    x = rms_norm(x, params["final_norm"]["w"], cfg.norm_eps)
+    logits = unembed(params["embed"], cfg, x)
+    return logits, (new_cache if return_cache else None)

@@ -1,0 +1,98 @@
+"""AdamW + LR schedules (cosine, and MiniCPM's WSD) on raw pytrees.
+
+No optax dependency: the optimizer is part of the substrate deliverable.
+Weight decay skips 1-D params (norms/biases).  All state is a pytree of
+arrays sharded like the parameters (GSPMD propagates), so ZeRO-style
+sharding comes for free wherever params carry an "fsdp" axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: str = "cosine"        # cosine | wsd | const
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    wsd_decay_frac: float = 0.1     # final fraction of steps in decay
+    min_lr_frac: float = 0.1
+
+
+def schedule_lr(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1.0) / max(cfg.warmup_steps, 1))
+    if cfg.schedule == "const":
+        return cfg.lr * warm
+    if cfg.schedule == "wsd":
+        # Warmup-Stable-Decay (MiniCPM): hold at peak, then cool to min_lr
+        decay_steps = int(cfg.total_steps * cfg.wsd_decay_frac)
+        start = cfg.total_steps - decay_steps
+        frac = jnp.clip((s - start) / max(decay_steps, 1), 0.0, 1.0)
+        stable = 1.0 - (1.0 - cfg.min_lr_frac) * frac
+        return cfg.lr * warm * stable
+    # cosine
+    frac = jnp.clip(s / max(cfg.total_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos)
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(cfg: OptConfig, grads, state, params
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    step = state["step"] + 1
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = schedule_lr(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m_n = b1 * m + (1 - b1) * g
+        v_n = b2 * v + (1 - b2) * g * g
+        mh = m_n / c1
+        vh = v_n / c2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:                      # decay matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_n, v_n
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    new_p, new_m, new_v = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        pn, mn, vn = upd(g, m, v, p)
+        new_p.append(pn)
+        new_m.append(mn)
+        new_v.append(vn)
+    new_params = jax.tree.unflatten(tdef, new_p)
+    new_state = {"m": jax.tree.unflatten(tdef, new_m),
+                 "v": jax.tree.unflatten(tdef, new_v), "step": step}
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

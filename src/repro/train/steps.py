@@ -1,0 +1,139 @@
+"""Train / prefill / decode step builders (the jit roots of the system).
+
+These are the functions the dry-run lowers for every (arch x shape x mesh)
+cell and the ones train.py/serve.py actually execute on small configs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import forward, init_cache, model_specs
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
+
+
+def loss_fn(cfg: ArchConfig, params, batch: Dict[str, jnp.ndarray],
+            cdt=jnp.bfloat16, unroll: bool = False
+            ) -> Tuple[jnp.ndarray, Dict]:
+    """Causal-LM cross entropy; labels < 0 are masked (frontend prefix,
+    padding).  Frontend archs prepend ``embeds`` (stub modality tokens)."""
+    logits, _ = forward(cfg, params, batch["tokens"],
+                        embeds=batch.get("embeds"),
+                        remat=True, return_cache=False, unroll=unroll,
+                        cdt=cdt)
+    labels = batch["labels"]
+    if "embeds" in batch:  # prefix positions carry no LM loss
+        prefix = jnp.full(
+            (labels.shape[0], batch["embeds"].shape[1]), -1, labels.dtype)
+        labels = jnp.concatenate([prefix, labels], axis=1)
+    mask = (labels >= 0)
+    safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(mask.sum(), 1)
+    loss = jnp.where(mask, nll, 0.0).sum() / denom
+    # small z-loss stabilizer (standard at scale)
+    zl = jnp.where(mask, jax.scipy.special.logsumexp(logits, -1) ** 2,
+                   0.0).sum() / denom
+    return loss + 1e-4 * zl, {"loss": loss,
+                              "tokens": denom.astype(jnp.float32)}
+
+
+def make_train_step(cfg: ArchConfig, opt: OptConfig, cdt=jnp.bfloat16,
+                    unroll: bool = False, accum: int = 1):
+    """One optimizer step.  ``accum`` > 1 splits the global batch into
+    microbatches processed by an inner lax.scan with gradient
+    accumulation: identical math, activation footprint divided by
+    ``accum`` — the standard memory/step-time knob at scale."""
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, cdt, unroll),
+            has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if accum <= 1:
+            (_, aux), grads = grads_of(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(accum, b // accum, *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                (_, aux), g = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return acc, aux
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, auxs = jax.lax.scan(body, zeros, micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            aux = jax.tree.map(lambda a: a.mean(), auxs)
+        new_params, new_state, om = adamw_update(opt, grads, opt_state,
+                                                 params)
+        metrics = dict(aux, **om)
+        return new_params, new_state, metrics
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig, cdt=jnp.bfloat16):
+    def eval_step(params, batch):
+        _, aux = loss_fn(cfg, params, batch, cdt)
+        return aux
+    return eval_step
+
+
+def make_prefill_step(cfg: ArchConfig, max_len: int, cdt=jnp.bfloat16):
+    """Forward over the prompt, returning the filled cache + last logits.
+
+    The cache is allocated at ``max_len``; prompt K/V occupy [0, S).
+    """
+    def prefill_step(params, tokens, embeds=None):
+        logits, cache = forward(cfg, params, tokens, embeds=embeds,
+                                remat=False, return_cache=True, cdt=cdt)
+        cache = _pad_cache_to(cfg, cache, max_len)
+        return logits[:, -1], cache
+    return prefill_step
+
+
+_KV_KEYS = ("k", "v", "c_kv", "k_rope")
+
+
+def _pad_cache_to(cfg: ArchConfig, cache, max_len: int):
+    """Grow per-layer KV tensors (stacked (L, B, S, ...) layout, dim 2 = S)
+    from prompt length to the serving window.  SSM state is length-free."""
+    if cfg.family == "ssm":
+        return cache
+
+    def pad(x):
+        padw = [(0, 0)] * x.ndim
+        padw[2] = (0, max_len - x.shape[2])
+        return jnp.pad(x, padw)
+
+    return {grp: {k: (pad(v) if k in _KV_KEYS and v.shape[2] < max_len
+                      else v) for k, v in sub.items()}
+            for grp, sub in cache.items()}
+
+
+def make_decode_step(cfg: ArchConfig, cdt=jnp.bfloat16):
+    """One new token against a pre-filled cache (the ``decode_*`` shapes)."""
+    def decode_step(params, cache, tokens, index):
+        logits, new_cache = forward(cfg, params, tokens, cache=cache,
+                                    cache_index=index, remat=False,
+                                    return_cache=True, cdt=cdt)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+    return decode_step
+
+
+def init_train_state(cfg: ArchConfig, key: jax.Array,
+                     param_dtype=jnp.float32):
+    from repro.models import params as pm
+    specs = model_specs(cfg)
+    params = pm.materialize(specs, key, dtype=param_dtype)
+    return params, init_opt_state(params)

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# src-layout import path (tests run with or without installation)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: no xla_force_host_platform_device_count here — smoke tests and
+# benches must see the 1-device default; only launch/dryrun.py (run as a
+# subprocess) requests 512 host devices.

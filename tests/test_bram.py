@@ -1,0 +1,76 @@
+"""BRAM model (Algorithm 1) unit + property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bram import (BRAM18K_CONFIGS, bram_count, bram_count_np,
+                             breakpoints, breakpoints_brute, design_bram_np,
+                             fifo_read_latency, is_srl)
+
+
+def test_srl_region_zero():
+    assert bram_count(2, 512) == 0          # depth <= 2
+    assert bram_count(32, 32) == 0          # 1024 bits
+    assert bram_count(1024, 1) == 0         # 1024 bits
+    assert bram_count(33, 32) > 0
+
+
+def test_known_values():
+    # 1024 x 32b: two 1Kx18 BRAMs
+    assert bram_count(1024, 32) == 2
+    # 2048 x 32b: 2x(1Kx18 rows) + 1x(2Kx9) + remainder -> 4
+    assert bram_count(2048, 32) == 4
+    # one deep narrow fifo: 16K x 1b = one 16Kx1
+    assert bram_count(16384, 1) == 1
+
+
+def test_read_latency_model():
+    assert fifo_read_latency(2, 512) == 1
+    assert fifo_read_latency(8, 32) == 1        # 256 bits -> SRL
+    assert fifo_read_latency(2048, 32) == 2     # BRAM
+
+
+@given(d=st.integers(1, 50_000), w=st.integers(1, 256))
+@settings(max_examples=300, deadline=None)
+def test_nonnegative_and_srl_consistency(d, w):
+    n = bram_count(d, w)
+    assert n >= 0
+    assert (n == 0) == is_srl(d, w)
+
+
+@given(d=st.integers(2, 20_000), w=st.integers(1, 128))
+@settings(max_examples=200, deadline=None)
+def test_monotone_in_depth(d, w):
+    assert bram_count(d + 1, w) >= bram_count(d, w)
+
+
+@given(ds=st.lists(st.integers(1, 8192), min_size=1, max_size=8),
+       ws=st.lists(st.integers(1, 128), min_size=8, max_size=8))
+@settings(max_examples=100, deadline=None)
+def test_vectorized_matches_scalar(ds, ws):
+    ds = (ds * 8)[:8]
+    got = bram_count_np(np.asarray(ds), np.asarray(ws))
+    exp = np.asarray([bram_count(d, w) for d, w in zip(ds, ws)])
+    np.testing.assert_array_equal(got, exp)
+    np.testing.assert_array_equal(
+        design_bram_np(np.asarray(ds)[None, :], ws), exp.sum())
+
+
+@given(w=st.integers(1, 72), u=st.integers(2, 6000))
+@settings(max_examples=60, deadline=None)
+def test_breakpoints_match_bruteforce(w, u):
+    got = breakpoints(w, u)
+    exp = breakpoints_brute(w, u)
+    np.testing.assert_array_equal(got, exp)
+
+
+@given(w=st.integers(1, 72), u=st.integers(2, 6000))
+@settings(max_examples=60, deadline=None)
+def test_breakpoints_are_maximal(w, u):
+    """Every breakpoint d (except u) satisfies bram(d+1) > bram(d):
+    taking any larger depth with the same BRAM count is impossible."""
+    for d in breakpoints(w, u):
+        if d not in (2, u):
+            assert bram_count(int(d) + 1, w) > bram_count(int(d), w)

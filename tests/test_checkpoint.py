@@ -1,0 +1,91 @@
+"""Checkpointing: round-trip, atomic commit, pruning, async, resume."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import checkpoint as ck
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (4, 8)),
+                       "b": jnp.zeros((8,))},
+            "opt": {"m": {"w": jnp.ones((4, 8)) * 2, "b": jnp.ones((8,))},
+                    "step": jnp.int32(7)}}
+
+
+def test_round_trip(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 3, t)
+    assert ck.latest_step(str(tmp_path)) == 3
+    r = ck.restore(str(tmp_path), 3, jax.tree.map(jnp.zeros_like, t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_prune_keeps_latest(tmp_path):
+    t = _tree()
+    for s in [1, 2, 3, 4, 5]:
+        ck.save(str(tmp_path), s, t, keep=2)
+    assert ck.all_steps(str(tmp_path)) == [4, 5]
+
+
+def test_half_written_checkpoint_is_invisible(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 1, t)
+    # simulate a preempted save: tmp dir exists, no manifest committed
+    crash = tmp_path / "step_00000002.tmp"
+    crash.mkdir()
+    (crash / "leaf_00000.npy").write_bytes(b"garbage")
+    assert ck.latest_step(str(tmp_path)) == 1
+    # and a directory without manifest is ignored too
+    bad = tmp_path / "step_00000003"
+    bad.mkdir()
+    assert ck.latest_step(str(tmp_path)) == 1
+
+
+def test_restore_missing_leaf_raises(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 1, t)
+    target = dict(t)
+    target["extra"] = jnp.zeros((2,))
+    with pytest.raises(KeyError):
+        ck.restore(str(tmp_path), 1, target)
+
+
+def test_async_checkpointer(tmp_path):
+    t = _tree()
+    saver = ck.AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in [10, 20]:
+        saver.save(s, t)
+    saver.wait()
+    assert ck.all_steps(str(tmp_path)) == [10, 20]
+
+
+def test_train_resume_end_to_end(tmp_path):
+    """Kill-and-resume: losses after resume continue from the checkpoint
+    (deterministic data ⇒ the resumed run matches an uninterrupted one)."""
+    from repro.launch.train import main
+    args = ["--arch", "qwen2-1.5b", "--steps", "6", "--batch", "2",
+            "--seq", "32", "--ckpt", str(tmp_path), "--save-every", "3",
+            "--log-every", "100"]
+    out1 = main(args)                     # runs 0..5, saves at 3 and 6
+    # second invocation: nothing left to do (resumes at 6)
+    out2 = main(args)
+    assert out2["steps"] == 0
+    # fresh run to step 3 then resumed to 6 matches a straight-through run
+    out3 = main(["--arch", "qwen2-1.5b", "--steps", "3", "--batch", "2",
+                 "--seq", "32", "--ckpt", str(tmp_path / "b"),
+                 "--save-every", "3", "--log-every", "100"])
+    out4 = main(["--arch", "qwen2-1.5b", "--steps", "6", "--batch", "2",
+                 "--seq", "32", "--ckpt", str(tmp_path / "b"),
+                 "--save-every", "3", "--log-every", "100"])
+    # bitwise equality is not guaranteed on the CPU backend (thread-pool
+    # reduction order varies under load); the runs must agree closely
+    assert abs(out4["last_loss"] - out1["last_loss"]) < 5e-3

@@ -1,0 +1,91 @@
+"""Optimizer invariants + paper-claim regression checks (fixed seeds)."""
+
+import numpy as np
+import pytest
+
+from repro.core import FifoAdvisor
+from repro.core.optimizers import OPTIMIZERS, PAPER_OPTIMIZERS
+from repro.designs import make_design
+from repro.designs.ddcf import flowgnn_pna, mult_by_2
+
+
+@pytest.fixture(scope="module")
+def advisor_ff():
+    return FifoAdvisor(make_design("FeedForward"))
+
+
+@pytest.fixture(scope="module")
+def advisor_tree():
+    return FifoAdvisor(make_design("k15mmtree"))
+
+
+@pytest.mark.parametrize("opt", sorted(OPTIMIZERS))
+def test_every_optimizer_produces_feasible_frontier(advisor_ff, opt):
+    r = advisor_ff.run(opt, budget=200, seed=1)
+    pts = r.frontier_points
+    assert pts.shape[0] >= 1
+    assert (pts >= 0).all()
+    # frontier configs within bounds
+    cfgs = r.frontier_configs
+    assert (cfgs >= 2).all()
+    assert (cfgs <= advisor_ff.graph.upper_bounds[None, :]).all()
+
+
+def test_budget_respected(advisor_ff):
+    for opt in ("random", "grouped_random", "sa", "grouped_sa"):
+        r = advisor_ff.run(opt, budget=100, seed=0)
+        assert r.result.n_evals <= 132   # budget + small batch padding
+
+
+def test_greedy_latency_guarantee(advisor_ff):
+    r = advisor_ff.run("greedy", budget=10_000, seed=0, epsilon=0.01)
+    sel = r.selected(alpha=0.7)
+    assert sel is not None
+    (lat, bram), depths = sel
+    assert lat <= advisor_ff.baseline_max.latency * 1.01
+    # greedy must also save memory on this design
+    assert bram < advisor_ff.baseline_max.bram
+
+
+def test_deadlocked_baseline_min_gets_undeadlocked(advisor_tree):
+    """Paper Fig. 4(b): designs whose Baseline-Min deadlocks are fixed by
+    FIFOAdvisor with little-to-no BRAM."""
+    assert advisor_tree.baseline_min.deadlocked
+    r = advisor_tree.run("grouped_sa", budget=400, seed=0)
+    pts = r.frontier_points
+    assert pts.shape[0] >= 1          # found feasible configs at all
+    best_bram = pts[:, 1].min()
+    assert best_bram <= advisor_tree.baseline_max.bram * 0.5
+
+
+def test_grouped_sa_dominates_random_hypervolume(advisor_ff):
+    """Paper's headline qualitative claim, fixed-seed regression."""
+    r_rand = advisor_ff.run("random", budget=300, seed=2)
+    r_gsa = advisor_ff.run("grouped_sa", budget=300, seed=2)
+    assert r_gsa.hypervolume() >= r_rand.hypervolume() * 0.999
+
+
+def test_ddcf_design_optimizable():
+    adv = FifoAdvisor(flowgnn_pna(n_nodes=32, n_edges=96))
+    r = adv.run("grouped_sa", budget=200, seed=0)
+    assert r.frontier_points.shape[0] >= 1
+    sel = r.selected()
+    assert sel is not None
+
+
+def test_incremental_latency_consistency():
+    adv = FifoAdvisor(mult_by_2(32))
+    lat, dead = adv.incremental_latency(np.array([40, 2]))
+    assert not dead and lat > 0
+    lat2, dead2 = adv.incremental_latency(np.array([2, 2]))
+    assert dead2
+
+
+def test_history_union_is_frontier_superset(advisor_ff):
+    r = advisor_ff.run("nsga2", budget=200, seed=3)
+    pts, idx = r.result.feasible_points()
+    front = r.frontier_points
+    # every frontier point appears in the evaluated history
+    hist = {tuple(p) for p in pts.tolist()}
+    for p in front.tolist():
+        assert tuple(p) in hist

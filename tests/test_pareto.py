@@ -1,0 +1,68 @@
+"""Pareto utilities: property tests against brute force."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.pareto import (alpha_score, hypervolume_2d, pareto_front,
+                               pareto_mask, select_alpha_point)
+
+
+def _dominates(a, b):
+    return (a[0] <= b[0] and a[1] <= b[1]) and (a[0] < b[0] or a[1] < b[1])
+
+
+@given(st.lists(st.tuples(st.integers(0, 50), st.integers(0, 50)),
+                min_size=1, max_size=60))
+@settings(max_examples=200, deadline=None)
+def test_pareto_mask_matches_bruteforce(pts):
+    pts = np.asarray(pts, dtype=float)
+    mask = pareto_mask(pts)
+    for i in range(len(pts)):
+        dominated = any(_dominates(pts[j], pts[i])
+                        for j in range(len(pts)) if j != i)
+        assert mask[i] == (not dominated), (i, pts)
+
+
+@given(st.lists(st.tuples(st.integers(0, 30), st.integers(0, 30)),
+                min_size=1, max_size=40))
+@settings(max_examples=100, deadline=None)
+def test_front_sorted_and_nondominated(pts):
+    pts = np.asarray(pts, dtype=float)
+    idx = pareto_front(pts)
+    f = pts[idx]
+    assert (np.diff(f[:, 0]) >= 0).all()
+    for i in range(len(f)):
+        for j in range(len(f)):
+            if i != j:
+                assert not _dominates(f[j], f[i])
+
+
+def test_hypervolume_simple():
+    pts = np.array([[1.0, 3.0], [2.0, 2.0], [3.0, 1.0]])
+    hv = hypervolume_2d(pts, (4.0, 4.0))
+    # rectangles: (4-1)*(4-3)=3 + (4-2)*(3-2)=2 + (4-3)*(2-1)=1
+    assert hv == 6.0
+    assert hypervolume_2d(pts, (1.0, 1.0)) == 0.0
+
+
+def test_alpha_selection_prefers_latency_at_high_alpha():
+    """High alpha weights the latency ratio -> picks the low-latency point;
+    low alpha weights memory -> picks the low-BRAM point (paper §IV-B)."""
+    pts = np.array([[100.0, 0.0], [50.0, 100.0]])
+    base = (100.0, 100.0)
+    hi = select_alpha_point(pts, base, alpha=0.99)
+    lo = select_alpha_point(pts, base, alpha=0.01)
+    assert pts[hi][0] <= pts[lo][0]
+    assert pts[hi][1] >= pts[lo][1]
+    assert hi != lo
+
+
+@given(st.lists(st.tuples(st.integers(1, 99), st.integers(1, 99)),
+                min_size=1, max_size=30),
+       st.floats(0.01, 0.99))
+@settings(max_examples=100, deadline=None)
+def test_alpha_point_is_on_front(pts, alpha):
+    pts = np.asarray(pts, dtype=float)
+    sel = select_alpha_point(pts, (50.0, 50.0), alpha)
+    assert sel in set(pareto_front(pts).tolist())

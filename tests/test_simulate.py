@@ -1,0 +1,141 @@
+"""Simulator cross-validation: DES oracle vs worklist vs JAX batched path.
+
+The three evaluators share only the timing CONTRACT (DESIGN.md §2.1), not
+code; equality across randomized designs and depth vectors is the
+reproduction's Table-II-style internal accuracy check.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.design import Design
+from repro.core.oracle import simulate
+from repro.core.simgraph import DesignRuleError, build_simgraph
+from repro.core.simulate import BatchedEvaluator, evaluate_np
+from repro.designs.builder import map_stage, producer, sink, streams
+from repro.designs.ddcf import mult_by_2
+
+
+# --------------------------------------------------------- random chains
+
+@st.composite
+def chain_design(draw):
+    """Random producer -> k map stages -> sink chain; always sequentially
+    executable, arbitrary rate mismatches."""
+    count = draw(st.integers(4, 40))
+    k = draw(st.integers(1, 4))
+    lanes = draw(st.sampled_from([1, 2, 4]))
+    d = Design("chain")
+    cur = streams(d, "s0", lanes)
+    producer(d, "prod", cur, [1.0] * count,
+             ii=draw(st.integers(1, 3)),
+             start_delay=draw(st.integers(0, 5)))
+    for i in range(k):
+        nxt = streams(d, f"s{i + 1}", lanes)
+        map_stage(d, f"m{i}", cur, nxt, count,
+                  ii=draw(st.integers(1, 3)),
+                  extra_delay=draw(st.integers(0, 4)))
+        cur = nxt
+    sink(d, "sink", cur, count, ii=draw(st.integers(1, 3)))
+    depths = [draw(st.integers(1, count + 2)) for _ in range(d.n_fifos)]
+    return d, depths
+
+
+@given(chain_design())
+@settings(max_examples=40, deadline=None)
+def test_oracle_equals_worklist_on_random_chains(dd):
+    d, depths = dd
+    g = build_simgraph(d)
+    r = simulate(d, depths)
+    lat, dead = evaluate_np(g, np.asarray(depths))
+    assert dead == r.deadlocked
+    if not dead:
+        assert lat == r.latency
+
+
+def test_jax_backend_equals_oracle_on_random_configs():
+    rng = np.random.default_rng(0)
+    d = mult_by_2(24)
+    g = build_simgraph(d)
+    ev = BatchedEvaluator(g, backend="jax", max_iters=64)
+    cfgs = np.stack([rng.integers(2, 30, size=2) for _ in range(32)])
+    lat, bram, dead = ev.evaluate(cfgs)
+    for i in range(32):
+        r = simulate(d, cfgs[i])
+        assert bool(dead[i]) == r.deadlocked
+        if not r.deadlocked:
+            assert int(lat[i]) == r.latency
+
+
+def test_low_iteration_cap_falls_back_exactly():
+    d = mult_by_2(24)
+    g = build_simgraph(d)
+    ev = BatchedEvaluator(g, backend="jax", max_iters=3)
+    lat, _, dead = ev.evaluate(np.array([[24, 2], [2, 2]]))
+    assert ev.stats.n_fallbacks >= 1
+    r0 = simulate(d, [24, 2])
+    assert not dead[0] and int(lat[0]) == r0.latency
+    assert bool(dead[1])
+
+
+# ----------------------------------------------------- mult_by_2 theory
+
+@given(n=st.integers(3, 40), dx=st.integers(1, 45), dy=st.integers(1, 6))
+@settings(max_examples=60, deadline=None)
+def test_mult_by_2_deadlock_closed_form(n, dx, dy):
+    """Fig. 2 design deadlocks iff depth(x) < n - 1: the consumer reads
+    exactly one x then blocks on y, which the producer emits only after
+    all n x-writes."""
+    d = mult_by_2(n)
+    r = simulate(d, [dx, dy])
+    assert r.deadlocked == (dx < n - 1)
+    g = build_simgraph(d)
+    lat, dead = evaluate_np(g, np.array([dx, dy]))
+    assert dead == r.deadlocked
+
+
+# ------------------------------------------------------- design rules
+
+def test_multiple_readers_rejected():
+    d = Design("bad")
+    d.fifo("x")
+
+    @d.task("w")
+    def w(ctx):
+        yield ctx.write("x", 1)
+        yield ctx.write("x", 1)
+
+    @d.task("r1")
+    def r1(ctx):
+        yield ctx.read("x")
+
+    @d.task("r2")
+    def r2(ctx):
+        yield ctx.read("x")
+
+    with pytest.raises(DesignRuleError):
+        build_simgraph(d)
+
+
+def test_structural_deadlock_unread_fifo():
+    """A fifo with more writes than reads deadlocks iff the writer cannot
+    park the surplus: depth >= n_writes - n_reads is required."""
+    d = Design("leftover")
+    d.fifo("x")
+
+    @d.task("w")
+    def w(ctx):
+        for _ in range(6):
+            yield ctx.write("x", 1)
+
+    @d.task("r")
+    def r(ctx):
+        for _ in range(2):
+            yield ctx.read("x")
+
+    g = build_simgraph(d)
+    assert evaluate_np(g, np.array([3]))[1] is True
+    assert evaluate_np(g, np.array([4]))[1] is False
+    assert simulate(d, [3]).deadlocked and not simulate(d, [4]).deadlocked
