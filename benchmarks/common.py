@@ -21,12 +21,21 @@ def full_mode() -> bool:
     return os.environ.get("FULL", "0") == "1"
 
 
+def quick_mode() -> bool:
+    """CI smoke mode: a couple of small designs, tiny budgets."""
+    return os.environ.get("QUICK", "0") == "1"
+
+
 def design_set() -> List[str]:
     from repro.designs import STREAMHLS_DESIGNS
+    if quick_mode():
+        return ["gemm", "FeedForward"]
     return sorted(STREAMHLS_DESIGNS) if full_mode() else FAST_DESIGNS
 
 
 def budget() -> int:
+    if quick_mode():
+        return 60
     return 1000 if full_mode() else 300
 
 

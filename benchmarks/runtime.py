@@ -1,5 +1,7 @@
 """Table III analogue: FIFOAdvisor search runtime vs estimated
-co-simulation search runtime.
+co-simulation search runtime, plus the evaluation-subsystem numbers that
+make the search cheap: per-backend throughput, shared-cache hit rate, and
+the incremental re-simulation speedup.
 
 Vitis HLS/XSIM is not available in this container, so per-config RTL
 co-simulation cost is MODELLED, with the model calibrated from the paper's
@@ -17,20 +19,88 @@ from typing import Dict
 
 import numpy as np
 
-from benchmarks.common import Timer, budget, design_set, geomean, save_json
+from benchmarks.common import (Timer, budget, design_set, full_mode,
+                               geomean, quick_mode, save_json)
 from repro.core import FifoAdvisor, simulate
+from repro.core.backends import worklist as wl
 from repro.core.optimizers import PAPER_OPTIMIZERS
+from repro.core.simulate import BatchedEvaluator
 from repro.designs import make_design
 
 RTL_CPS_FAST = 2500.0     # cycles/s, paper's best case (ResidualBlock)
 RTL_CPS_SLOW = 40.0       # cycles/s, paper's typical case (gemm/atax/k3mm)
 
 
+def backend_throughput(g, seed: int = 0) -> Dict:
+    """us/config of every registered backend on a feasible-leaning batch.
+
+    ``pallas`` runs in interpret mode on CPU (correctness-grade, orders of
+    magnitude off its compiled TPU speed), so it is only measured — with a
+    small batch — in FULL mode.
+    """
+    rng = np.random.default_rng(seed)
+    u = g.upper_bounds
+    C = 64 if not quick_mode() else 16
+    cfgs = np.stack([np.maximum(
+        2, (u * rng.uniform(0.5, 1.0, g.n_fifos)).astype(int))
+        for _ in range(C)])
+    out = {}
+    backends = ["numpy", "jax"] + (["pallas"] if full_mode() else [])
+    for backend in backends:
+        n = C if backend != "pallas" else 8
+        ev = BatchedEvaluator(g, backend=backend)
+        ev.evaluate(cfgs[:2])              # warm / compile
+        ev.evaluate(cfgs[:n])              # warm the batch bucket
+        with Timer() as t:
+            ev.evaluate(cfgs[:n])
+        out[backend] = dict(batch=n, total_s=round(t.s, 4),
+                            us_per_config=round(1e6 * t.s / n, 1),
+                            fallbacks=ev.stats.n_fallbacks)
+    return out
+
+
+def incremental_speedup(g, n_trials: int = None) -> Dict:
+    """Single-FIFO re-evaluation: incremental delta solve vs full solve.
+
+    This is the LightningSim primitive the greedy/annealing single-move
+    optimizers lean on: starting from a solved Baseline-Max state, each
+    trial drops one FIFO to depth 2 and re-solves only the task segments
+    whose timing actually diverges.
+    """
+    F = g.n_fifos
+    n = min(F, n_trials if n_trials is not None else F)
+    base = np.maximum(g.upper_bounds, 2)
+    state = wl.solve(g, base)
+    trials = []
+    for f in range(n):
+        nxt = base.copy()
+        nxt[f] = 2
+        trials.append(nxt)
+    with Timer() as t_full:
+        full = [wl.evaluate_np(g, nxt) for nxt in trials]
+    counters = [0]
+    with Timer() as t_delta:
+        delta = [wl.solve_delta(g, state, nxt, counters=counters)
+                 for nxt in trials]
+    assert all((d.latency, d.deadlocked) == f
+               for d, f in zip(delta, full)), "delta/full disagreement"
+    n_segs = int(state.seg_cursor.shape[0])
+    return dict(
+        n_trials=n,
+        full_ms_per_eval=round(1e3 * t_full.s / n, 3),
+        incremental_ms_per_eval=round(1e3 * t_delta.s / n, 3),
+        speedup=round(t_full.s / max(t_delta.s, 1e-12), 2),
+        segments_rerun_avg=round(counters[0] / n, 2),
+        segments_total=n_segs)
+
+
 def run(seed: int = 0) -> Dict:
     rows = []
+    graphs = {}                # reuse each advisor's graph (trace once)
     for name in design_set():
         d = make_design(name)
         adv = FifoAdvisor(d)
+        graphs[name] = adv.graph
         # best-case co-sim config: Baseline-Max minimizes simulated cycles
         with Timer() as t:
             simulate(d, adv.baseline_max.depths)
@@ -41,7 +111,9 @@ def run(seed: int = 0) -> Dict:
         row = {"design": name, "cycles": cycles,
                "des_one_s": round(des_one, 4),
                "rtl_one_est_s": [round(rtl_fast, 2), round(rtl_slow, 1)],
-               "trace_s": round(adv.trace_time_s, 3), "optimizers": {}}
+               "trace_s": round(adv.trace_time_s, 3),
+               "backends": backend_throughput(adv.graph, seed),
+               "optimizers": {}}
         for opt in PAPER_OPTIMIZERS:
             r = adv.run(opt, budget=budget(), seed=seed)
             n = r.result.n_evals
@@ -54,7 +126,20 @@ def run(seed: int = 0) -> Dict:
                 speedup_vs_rtl_fast=rtl_fast * n / wall,
                 speedup_vs_rtl_slow=rtl_slow * n / wall,
                 speedup_vs_rtl_slow_par32=rtl_slow * n / 32 / wall)
+        cs = adv.cache_stats()
+        row["cache"] = dict(hits=cs.hits, misses=cs.misses,
+                            hit_rate=round(cs.hit_rate, 4))
+        ist = adv.evaluator.incr_stats
+        row["incremental_evals"] = dict(
+            n_delta=ist.n_delta,
+            resolve_fraction=round(ist.resolve_fraction, 4))
         rows.append(row)
+
+    # incremental-vs-full microbenchmark on the largest design in the set
+    largest = max(graphs, key=lambda n: graphs[n].n_events)
+    g_largest = graphs[largest]
+    incr = dict(design=largest, events=g_largest.n_events,
+                **incremental_speedup(g_largest))
 
     summary = {}
     for opt in PAPER_OPTIMIZERS:
@@ -70,7 +155,7 @@ def run(seed: int = 0) -> Dict:
                 [r["optimizers"][opt]["runtime_s"] for r in rows])),
             median_us_per_eval=float(np.median(
                 [r["optimizers"][opt]["us_per_eval"] for r in rows])))
-    out = {"per_design": rows, "summary": summary,
+    out = {"per_design": rows, "summary": summary, "incremental": incr,
            "rtl_model": {"fast_cycles_per_s": RTL_CPS_FAST,
                          "slow_cycles_per_s": RTL_CPS_SLOW,
                          "calibration": "paper Table II cycles x Table III "
@@ -92,6 +177,24 @@ def main():
               f"{s['geomean_speedup_vs_des']:7.1f}x "
               f"{s['geomean_speedup_vs_rtl_fast']:12.1f}x "
               f"{s['geomean_speedup_vs_rtl_slow']:12.0f}x")
+
+    print("\nper-backend throughput (us/config) and cache hit rate:")
+    for r in out["per_design"]:
+        b = r["backends"]
+        cols = "  ".join(
+            f"{k}={v['us_per_config']:9.1f}" for k, v in b.items())
+        print(f"  {r['design']:18s} {cols}  "
+              f"cache_hit_rate={r['cache']['hit_rate']:.2%} "
+              f"({r['cache']['hits']}/{r['cache']['hits'] + r['cache']['misses']})")
+
+    i = out["incremental"]
+    print(f"\nincremental re-simulation on {i['design']} "
+          f"(E={i['events']}, largest in set):")
+    print(f"  full solve        {i['full_ms_per_eval']:8.2f} ms/eval")
+    print(f"  incremental delta {i['incremental_ms_per_eval']:8.2f} ms/eval "
+          f"({i['segments_rerun_avg']:.1f}/{i['segments_total']} "
+          f"segments re-run)")
+    print(f"  speedup           {i['speedup']:8.2f}x")
 
 
 if __name__ == "__main__":

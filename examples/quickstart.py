@@ -44,7 +44,10 @@ def build_design() -> Design:
 
 
 def main():
-    advisor = FifoAdvisor(build_design())
+    # backend="numpy" (default) is the worklist evaluator with the
+    # incremental fast path; "jax" / "pallas" select the batched scan
+    # backends (docs/backends.md)
+    advisor = FifoAdvisor(build_design(), backend="numpy")
     print(f"Baseline-Max: latency={advisor.baseline_max.latency} "
           f"BRAMs={advisor.baseline_max.bram}")
     print(f"Baseline-Min: latency={advisor.baseline_min.latency} "
@@ -59,6 +62,19 @@ def main():
     print(f"\nalpha=0.7 pick: {int(lat)} cycles @ {int(bram)} BRAMs")
     for f, dep in zip(advisor.design.fifos, depths):
         print(f"  {f.name:8s} depth {int(dep)}")
+
+    # one incremental re-simulation (the LightningSim primitive): what
+    # happens to latency if the chosen config shrinks the skip queue?
+    probe = depths.astype(int).copy()
+    probe[1] = max(1, probe[1] // 2)
+    advisor.incremental_latency(depths)          # seed the base state
+    lat2, dead = advisor.incremental_latency(probe)
+    print(f"\nincremental probe skip->{probe[1]}: "
+          f"{'DEADLOCK' if dead else f'{lat2} cycles'}")
+
+    cs = advisor.cache_stats()
+    print(f"cache: {cs.hits} hits / {cs.misses} misses "
+          f"({cs.hit_rate:.0%} hit rate)")
 
 
 if __name__ == "__main__":

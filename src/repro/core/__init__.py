@@ -1,6 +1,9 @@
 """FIFOAdvisor core: the paper's contribution as a composable library."""
 
 from repro.core.advisor import Baseline, DseResult, FifoAdvisor
+from repro.core.backends import (ConfigCache, EvalBackend,
+                                 available_backends, get_backend,
+                                 register_backend)
 from repro.core.design import Design, Fifo, Task
 from repro.core.oracle import SimResult, simulate
 from repro.core.simgraph import SimGraph, build_simgraph
@@ -8,7 +11,8 @@ from repro.core.simulate import BatchedEvaluator, evaluate_np
 from repro.core.tracer import Trace, collect_trace
 
 __all__ = [
-    "Baseline", "BatchedEvaluator", "Design", "DseResult", "Fifo",
-    "FifoAdvisor", "SimGraph", "SimResult", "Task", "Trace",
-    "build_simgraph", "collect_trace", "evaluate_np", "simulate",
+    "Baseline", "BatchedEvaluator", "ConfigCache", "Design", "DseResult",
+    "EvalBackend", "Fifo", "FifoAdvisor", "SimGraph", "SimResult", "Task",
+    "Trace", "available_backends", "build_simgraph", "collect_trace",
+    "evaluate_np", "get_backend", "register_backend", "simulate",
 ]

@@ -14,6 +14,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.backends import ConfigCache
 from repro.core.design import Design
 from repro.core.optimizers import OPTIMIZERS, EvalContext, OptResult
 from repro.core.pareto import (alpha_score, hypervolume_2d, pareto_front,
@@ -100,18 +101,24 @@ class FifoAdvisor:
                  occupancy_cap: bool = False,
                  local_bounds: bool = False,
                  use_pallas: bool = False,
+                 backend: str = "numpy",
                  max_iters: int = 256):
         t0 = time.perf_counter()
         self.design = design
         self.trace: Trace = collect_trace(design)
         self.graph: SimGraph = build_simgraph(design, self.trace)
         self.evaluator = BatchedEvaluator(self.graph, max_iters=max_iters,
+                                          backend=backend,
                                           use_pallas=use_pallas)
+        # One evaluation cache for the whole advisor session: every
+        # optimizer run (and the baselines) shares hits.
+        self.cache = ConfigCache(self.graph.n_fifos)
         self.trace_time_s = time.perf_counter() - t0
         self._upper_bounds = upper_bounds
         self._occupancy_cap = occupancy_cap
         self._local_bounds = local_bounds
         self._lb_cache: Optional[np.ndarray] = None
+        self._incr_base: Optional[np.ndarray] = None
         # Shared baselines (evaluated outside any optimizer's budget).
         ctx = self._fresh_ctx(seed=0)
         self.baseline_max = self._baseline(ctx.baseline_max())
@@ -127,17 +134,38 @@ class FifoAdvisor:
         return EvalContext(self.graph, self.evaluator,
                            upper_bounds=self._upper_bounds,
                            occupancy_cap=self._occupancy_cap,
-                           lower_bounds=self._lb_cache, seed=seed)
+                           lower_bounds=self._lb_cache, seed=seed,
+                           cache=self.cache)
 
     def _baseline(self, depths: np.ndarray) -> Baseline:
-        lat, bram, dead = self.evaluator.evaluate(depths[None, :])
+        m = np.asarray(depths, dtype=np.int64)[None, :]
+        lat, bram, dead, miss = self.cache.lookup(m)
+        if miss.any():
+            lat, bram, dead = self.evaluator.evaluate(m)
+            self.cache.insert(m, lat, bram, dead)
         return Baseline(depths=depths, latency=int(lat[0]),
                         bram=int(bram[0]), deadlocked=bool(dead[0]))
 
-    def incremental_latency(self, depths: np.ndarray) -> Tuple[int, bool]:
-        """One incremental re-simulation (the LightningSim primitive)."""
-        lat, _, dead = self.evaluator.evaluate(np.asarray(depths)[None, :])
+    def incremental_latency(self, depths: np.ndarray,
+                            base: Optional[np.ndarray] = None
+                            ) -> Tuple[int, bool]:
+        """One incremental re-simulation (the LightningSim primitive).
+
+        Re-solves only the task segments coupled to the FIFOs that changed
+        vs ``base`` (default: the previous ``incremental_latency`` config;
+        the first call is a full solve whose state seeds the cache).
+        """
+        depths = np.asarray(depths, dtype=np.int64).reshape(-1)
+        if base is None:
+            base = self._incr_base
+        lat, _, dead = self.evaluator.evaluate_incremental(
+            base, depths[None, :])
+        self._incr_base = depths.copy()
         return int(lat[0]), bool(dead[0])
+
+    def cache_stats(self):
+        """Shared evaluation-cache statistics for this advisor session."""
+        return self.cache.stats
 
     def run(self, optimizer: str = "grouped_sa", budget: int = 1000,
             seed: int = 0, **kwargs) -> DseResult:

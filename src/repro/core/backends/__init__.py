@@ -1,0 +1,37 @@
+"""Unified evaluation-backend subsystem.
+
+One shared operand-preparation layer (:mod:`.operands`), an abstract
+:class:`.EvalBackend` protocol with a registry, three exact implementations
+(numpy worklist, jit/vmap fixpoint scan, Pallas kernel), a tiered
+:class:`.DispatchPolicy` (bucketing + UNRESOLVED-row escalation), the
+vectorized :class:`.ConfigCache`, and the incremental re-simulation fast
+path (:func:`.solve_delta` — the LightningSim primitive).
+
+``repro.core.simulate.BatchedEvaluator`` is a thin façade over this
+package; new backends only need ``@register_backend``.
+"""
+
+from repro.core.backends.base import (BACKENDS, BIG, CONVERGED, DEADLOCK,
+                                      F32_EXACT_LIMIT, UNRESOLVED,
+                                      EvalBackend, available_backends,
+                                      get_backend, register_backend)
+from repro.core.backends.cache import CacheStats, ConfigCache
+from repro.core.backends.dispatch import BUCKETS, DispatchPolicy
+from repro.core.backends.fixpoint import FixpointBackend
+from repro.core.backends.operands import (GraphOperands, bram_count_jnp,
+                                          build_operands, depth_operands,
+                                          get_operands)
+from repro.core.backends.pallas import PallasBackend
+from repro.core.backends.worklist import (IncrementalStats, WorklistBackend,
+                                          WorklistState, affected_segments,
+                                          evaluate_np, solve, solve_delta)
+
+__all__ = [
+    "BACKENDS", "BIG", "BUCKETS", "CONVERGED", "CacheStats", "ConfigCache",
+    "DEADLOCK", "DispatchPolicy", "EvalBackend", "F32_EXACT_LIMIT",
+    "FixpointBackend", "GraphOperands", "IncrementalStats", "PallasBackend",
+    "UNRESOLVED", "WorklistBackend", "WorklistState", "affected_segments",
+    "available_backends", "bram_count_jnp", "build_operands",
+    "depth_operands", "evaluate_np", "get_backend", "get_operands",
+    "register_backend", "solve", "solve_delta",
+]

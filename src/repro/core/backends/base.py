@@ -1,0 +1,90 @@
+"""Evaluation-backend protocol and registry.
+
+A backend turns a :class:`~repro.core.simgraph.SimGraph` plus a batch of
+candidate depth vectors into exact ``(latency, bram, status)`` triples:
+
+    backend = get_backend("fixpoint")(max_iters=64)
+    backend.prepare(graph)                    # -> operands, built once
+    lat, bram, status = backend.evaluate(depth_matrix)   # (C, F) ints
+
+``status`` is per-row: CONVERGED rows carry an exact latency, DEADLOCK rows
+are infeasible, UNRESOLVED rows hit an iteration cap and must be escalated
+to the worklist arbiter (see :mod:`repro.core.backends.dispatch`).  All
+registered backends are exact and cross-validated in ``tests/test_backends``.
+
+Registering a new backend is one decorator::
+
+    @register_backend
+    class MyBackend(EvalBackend):
+        name = "mine"
+        def prepare(self, g): ...
+        def evaluate(self, depth_matrix): ...
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Dict, Tuple, Type
+
+import numpy as np
+
+from repro.core.simgraph import SimGraph
+
+BIG = np.float32(1e9)
+F32_EXACT_LIMIT = 1.5e7
+
+# per-row status codes
+CONVERGED = 0
+DEADLOCK = 1
+UNRESOLVED = 2
+
+
+class EvalBackend(abc.ABC):
+    """One evaluation strategy over a prepared simulation graph."""
+
+    #: registry key; subclasses may also list aliases
+    name: str = "abstract"
+    aliases: Tuple[str, ...] = ()
+    #: whether the dispatch policy should pad batches to bucket sizes so the
+    #: backend's jit cache sees a small, reusable set of batch shapes
+    wants_bucketing: bool = False
+
+    def __init__(self, max_iters: int = 64):
+        self.max_iters = int(max_iters)
+        self.g: SimGraph = None
+
+    @abc.abstractmethod
+    def prepare(self, g: SimGraph):
+        """Bind ``g`` and build (cached) operands; returns the operands."""
+
+    @abc.abstractmethod
+    def evaluate(self, depth_matrix: np.ndarray
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(C, F) int depths -> (latency int64, bram int64, status int8).
+
+        Latency entries are only meaningful on CONVERGED rows.
+        """
+
+
+BACKENDS: Dict[str, Type[EvalBackend]] = {}
+
+
+def register_backend(cls: Type[EvalBackend]) -> Type[EvalBackend]:
+    BACKENDS[cls.name] = cls
+    for alias in cls.aliases:
+        BACKENDS[alias] = cls
+    return cls
+
+
+def get_backend(name: str) -> Type[EvalBackend]:
+    try:
+        return BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; available: "
+            f"{sorted(set(BACKENDS))}") from None
+
+
+def available_backends() -> Tuple[str, ...]:
+    """Canonical (deduplicated) backend names."""
+    return tuple(sorted({cls.name for cls in BACKENDS.values()}))

@@ -1,0 +1,145 @@
+"""Vectorized evaluation cache over (C, F) depth matrices.
+
+DSE optimizers revisit configurations constantly (annealing plateaus,
+frontier refinement, shared baselines), and several optimizers run against
+the same design in one advisor session.  This cache memoizes exact
+``(latency, bram, deadlock)`` triples keyed by the full depth row, shared
+across every optimizer via :class:`~repro.core.advisor.FifoAdvisor`.
+
+Lookups are batched: a whole (C, F) matrix is hashed in one vectorized
+pass (multiply-accumulate over uint64 lanes), then resolved through an
+int-keyed dict with exact row verification against the stored config
+matrix — hash collisions degrade to misses, never to wrong results.
+Results live in flat, geometrically-grown arrays, so hits are gathered
+with one fancy-index per batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+_HASH_SEED = 0x9E3779B97F4A7C15
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    collisions: int = 0       # true hash collisions (counted as misses)
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.lookups, 1)
+
+
+class ConfigCache:
+    """Exact result memo over depth vectors, shared across optimizers."""
+
+    def __init__(self, n_fifos: int, initial_capacity: int = 1024):
+        self.n_fifos = int(n_fifos)
+        self.stats = CacheStats()
+        # odd multipliers -> bijective per-lane mixing before the fold
+        rng = np.random.default_rng(0xF1F0)
+        self._mults = (rng.integers(1, 2**63, size=max(self.n_fifos, 1),
+                                    dtype=np.int64).astype(np.uint64)
+                       | np.uint64(1))
+        self._map: Dict[int, int] = {}
+        self._n = 0
+        cap = max(int(initial_capacity), 16)
+        self._rows = np.zeros((cap, self.n_fifos), dtype=np.int64)
+        self._lat = np.zeros(cap, dtype=np.int64)
+        self._bram = np.zeros(cap, dtype=np.int64)
+        self._dead = np.zeros(cap, dtype=bool)
+
+    def __len__(self) -> int:
+        return self._n
+
+    # ------------------------------------------------------------- hashing
+    def _hash_rows(self, m: np.ndarray) -> np.ndarray:
+        """(C, F) int64 -> (C,) uint64 row hashes, fully vectorized."""
+        u = m.astype(np.uint64, copy=False)
+        mixed = u * self._mults[None, :]
+        h = np.full(m.shape[0], np.uint64(_HASH_SEED))
+        for f in range(m.shape[1]):          # F is small; lanes are C-wide
+            x = mixed[:, f]
+            h ^= x + np.uint64(_HASH_SEED) + (h << np.uint64(6)) \
+                + (h >> np.uint64(2))
+        return h
+
+    # ------------------------------------------------------------- lookup
+    def lookup(self, depth_matrix: np.ndarray
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """(C, F) depths -> (lat, bram, dead, miss_mask).
+
+        Hit rows are filled from the cache; rows flagged in ``miss_mask``
+        must be evaluated and then recorded via :meth:`insert`.
+        """
+        m = np.atleast_2d(np.asarray(depth_matrix, dtype=np.int64))
+        C = m.shape[0]
+        lat = np.zeros(C, dtype=np.int64)
+        bram = np.zeros(C, dtype=np.int64)
+        dead = np.zeros(C, dtype=bool)
+        miss = np.ones(C, dtype=bool)
+        if self._n:
+            hashes = self._hash_rows(m)
+            idx = np.full(C, -1, dtype=np.int64)
+            for i in range(C):
+                idx[i] = self._map.get(int(hashes[i]), -1)
+            cand = np.flatnonzero(idx >= 0)
+            if cand.size:
+                # exact verification: collisions fall back to miss
+                ok = (self._rows[idx[cand]] == m[cand]).all(axis=1)
+                self.stats.collisions += int((~ok).sum())
+                hit_rows = cand[ok]
+                src = idx[hit_rows]
+                lat[hit_rows] = self._lat[src]
+                bram[hit_rows] = self._bram[src]
+                dead[hit_rows] = self._dead[src]
+                miss[hit_rows] = False
+        n_miss = int(miss.sum())
+        self.stats.misses += n_miss
+        self.stats.hits += C - n_miss
+        return lat, bram, dead, miss
+
+    # ------------------------------------------------------------- insert
+    def _grow_to(self, n: int):
+        cap = self._rows.shape[0]
+        if n <= cap:
+            return
+        new_cap = cap
+        while new_cap < n:
+            new_cap *= 2
+        for name in ("_rows", "_lat", "_bram", "_dead"):
+            old = getattr(self, name)
+            shape = (new_cap,) + old.shape[1:]
+            new = np.zeros(shape, dtype=old.dtype)
+            new[: self._n] = old[: self._n]
+            setattr(self, name, new)
+
+    def insert(self, depth_matrix: np.ndarray, lat: np.ndarray,
+               bram: np.ndarray, dead: np.ndarray):
+        """Record evaluated rows (duplicates of cached rows are skipped)."""
+        m = np.atleast_2d(np.asarray(depth_matrix, dtype=np.int64))
+        C = m.shape[0]
+        self._grow_to(self._n + C)
+        hashes = self._hash_rows(m)
+        for i in range(C):
+            h = int(hashes[i])
+            j = self._map.get(h)
+            if j is not None:
+                # already present (or a collision slot: keep first winner)
+                continue
+            j = self._n
+            self._rows[j] = m[i]
+            self._lat[j] = lat[i]
+            self._bram[j] = bram[i]
+            self._dead[j] = dead[i]
+            self._map[h] = j
+            self._n += 1

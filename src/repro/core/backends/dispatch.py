@@ -1,0 +1,69 @@
+"""Tiered dispatch policy: bucketing, jit-cache reuse, and escalation.
+
+Owns the three batch-shaping concerns that used to be tangled into
+``BatchedEvaluator``:
+
+1. **Bucketing** — backends whose compiled callable specializes on the
+   batch dimension (``wants_bucketing``) receive batches padded up to a
+   small fixed set of sizes, so the jit cache holds at most
+   ``len(BUCKETS)`` entries per graph instead of one per distinct C.
+   Padding repeats the final row; pad results are sliced off.
+2. **Status resolution** — DEADLOCK rows become infeasible (-1 latency);
+   CONVERGED rows pass through.
+3. **Escalation** — UNRESOLVED rows (the iteration cap fired before the
+   fixpoint converged: deadlocks never converge by construction, and rare
+   feasible rows converge slowly) are re-solved exactly by the worklist
+   arbiter, counted in ``stats.n_fallbacks``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.backends.base import DEADLOCK, EvalBackend, UNRESOLVED
+from repro.core.backends.worklist import WorklistBackend
+
+BUCKETS = (1, 8, 32, 128, 512, 2048)
+
+
+class DispatchPolicy:
+    """Routes depth batches through a backend and resolves every row."""
+
+    def __init__(self, worklist: WorklistBackend,
+                 buckets: Tuple[int, ...] = BUCKETS):
+        self.worklist = worklist
+        self.buckets = tuple(buckets)
+
+    def bucket_size(self, c: int) -> Optional[int]:
+        return next((b for b in self.buckets if b >= c), None)
+
+    def pad_batch(self, m: np.ndarray) -> np.ndarray:
+        """Pad C up to the covering bucket by repeating the last row."""
+        c = m.shape[0]
+        bucket = self.bucket_size(c)
+        if bucket is None or bucket == c:
+            return m
+        pad = np.repeat(m[-1:], bucket - c, axis=0)
+        return np.concatenate([m, pad], axis=0)
+
+    def dispatch(self, backend: EvalBackend, depth_matrix: np.ndarray,
+                 stats=None) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(C, F) depths -> (latency int64, bram int64, deadlock bool)."""
+        m = np.atleast_2d(np.asarray(depth_matrix))
+        C = m.shape[0]
+        batch = self.pad_batch(m) if backend.wants_bucketing else m
+        lat, bram, status = backend.evaluate(batch)
+        lat, bram, status = lat[:C], bram[:C], status[:C]
+
+        dead = status == DEADLOCK
+        unresolved = np.flatnonzero(status == UNRESOLVED)
+        if unresolved.size:
+            wl_lat, _, wl_status = self.worklist.evaluate(m[unresolved])
+            lat[unresolved] = wl_lat
+            dead[unresolved] = wl_status == DEADLOCK
+            if stats is not None:
+                stats.n_fallbacks += int(unresolved.size)
+        lat = np.where(dead, -1, lat)
+        return lat, bram, dead

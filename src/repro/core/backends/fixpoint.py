@@ -1,0 +1,73 @@
+"""Batched fixpoint backends: jit/vmap max-plus scan and the Pallas kernel.
+
+Both compute event times as the least fixpoint of a monotone max-plus map;
+each Jacobi step is
+
+    cross-edge gathers (data edges + depth-dependent back-pressure)
+    -> segmented max-plus *associative scan* along each task's ops
+
+vmapped over a batch of candidate depth vectors and jit-compiled.  A true
+deadlock is a positive cycle: iterates grow strictly, provably never
+converging; rows are flagged DEADLOCK as soon as any time exceeds the
+design's schedule upper bound, and anything still unresolved at the
+iteration cap is reported UNRESOLVED for the dispatch policy to escalate to
+the worklist arbiter.
+
+The two backends share all operand preparation
+(:mod:`repro.core.backends.operands`) and the whole jit wrapper
+(:func:`repro.kernels.fifo_eval.ops.make_batched_eval`); they differ only
+in the inner fixpoint implementation:
+
+``FixpointBackend``  ``lax.associative_scan`` + ``lax.while_loop`` in stock
+                     jnp (the TPU-native formulation, DESIGN.md §6)
+``PallasBackend``    the hand-rolled Hillis-Steele kernel in
+                     :mod:`repro.kernels.fifo_eval` (interpret mode on CPU)
+
+Numeric domain: times are exact in float32 while below 2**24; the façade
+asserts the design's schedule upper bound stays below ~1.5e7 cycles.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.simgraph import SimGraph
+
+from repro.core.backends.base import EvalBackend, register_backend
+from repro.core.backends.operands import get_operands
+
+
+class _ScanBackend(EvalBackend):
+    """Common wrapper: shared operands + one jitted batched callable."""
+
+    use_ref = True
+    interpret = True
+    wants_bucketing = True
+
+    def prepare(self, g: SimGraph):
+        from repro.kernels.fifo_eval.ops import make_batched_eval
+        self.g = g
+        self.ops = get_operands(g)
+        self._call = make_batched_eval(
+            g, interpret=self.interpret, use_ref=self.use_ref,
+            max_iters=self.max_iters)
+        return self.ops
+
+    def evaluate(self, depth_matrix: np.ndarray
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        m = np.atleast_2d(np.asarray(depth_matrix, dtype=np.int32))
+        lat, bram, status = self._call(m)
+        lat = np.asarray(np.rint(lat), dtype=np.int64)
+        bram = np.asarray(bram, dtype=np.int64)
+        return lat, bram, np.asarray(status, dtype=np.int8)
+
+
+@register_backend
+class FixpointBackend(_ScanBackend):
+    """jit(vmap) Jacobi + segmented-scan fixpoint in stock jnp."""
+
+    name = "fixpoint"
+    aliases = ("jax",)
+    use_ref = True

@@ -1,0 +1,196 @@
+"""Shared operand preparation for every evaluation backend.
+
+Every backend consumes the same packed :class:`repro.core.simgraph.SimGraph`
+but needs it massaged into padded, lane-aligned tensors (the fixpoint scan
+and the Pallas kernel both want 128-lane event vectors).  Historically that
+padding logic was duplicated between ``core/simulate.py`` and
+``kernels/fifo_eval/ops.py``; this module is now the single source of truth:
+
+``GraphOperands``
+    The depth-INDEPENDENT operands: event tensors padded to a 128-lane
+    multiple, segment-start / read masks, data-edge gather indices, the
+    per-event ``end_bonus`` (task end delay at each task's last event), and
+    the flattened read-event table for back-pressure gathers.  Built exactly
+    once per graph (cached on the graph object) and shared by the fixpoint
+    and Pallas backends — and by any future accelerator backend.
+
+``depth_operands``
+    The depth-DEPENDENT operands for a batch of candidate configurations:
+    per-event read latencies, back-pressure gather indices/masks, and the
+    structural-deadlock flag.  Pure jnp, traceable under jit/vmap, shared
+    verbatim by the fixpoint scan, the jnp reference oracle, and the Pallas
+    kernel wrapper.
+
+Padding contract (identical to the Pallas kernel's expectations): events are
+padded to ``E_pad`` (a multiple of 128, minimum 128); the first padded event
+opens a fresh segment (``seg_start[E] = 1``) so the pad chain can never leak
+times into real events; padded events carry ``delta = 0``, no data edge, no
+back-pressure edge, and ``end_bonus = NEG`` so they contribute nothing to
+the latency reduction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.bram import BRAM18K_CONFIGS, SRL_BITS, SRL_DEPTH
+from repro.core.design import READ, WRITE
+from repro.core.simgraph import SimGraph
+
+LANES = 128
+NEG = np.float32(-1e9)
+
+
+def bram_count_jnp(depths: jnp.ndarray, widths: jnp.ndarray) -> jnp.ndarray:
+    """Algorithm 1, jnp-vectorized (mirrors bram.bram_count_np)."""
+    d = depths.astype(jnp.int32)
+    w0 = jnp.broadcast_to(widths.astype(jnp.int32), d.shape)
+    n = jnp.zeros_like(d)
+    w = w0
+    for d_i, w_i in BRAM18K_CONFIGS:
+        n = n + (w // w_i) * (-(-d // d_i))
+        w = w % w_i
+        fits = (w > 0) & (d <= d_i)
+        n = n + fits.astype(jnp.int32)
+        w = jnp.where(fits, 0, w)
+    srl = (d <= SRL_DEPTH) | (d * w0 <= SRL_BITS)
+    return jnp.where(srl, 0, n)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphOperands:
+    """Depth-independent, lane-aligned event tensors for one SimGraph."""
+
+    n_events: int            # E, real events
+    e_pad: int               # E padded to a LANES multiple (>= LANES)
+    n_fifos: int
+    n_flat_reads: int        # R, length of the padded read_evt_flat table
+    bound: float             # schedule upper bound (deadlock threshold)
+    taskless_lat: float      # latency floor from tasks with no FIFO events
+    # (1, E_pad) f32 — shaped for the Pallas kernel's shared operands
+    delta: jnp.ndarray
+    seg_start: jnp.ndarray
+    is_read: jnp.ndarray
+    has_data: jnp.ndarray
+    end_bonus: jnp.ndarray
+    # (1, E_pad) i32
+    data_idx: jnp.ndarray
+    # (E_pad,) per-event tables for the depth-dependent gathers
+    fifo: jnp.ndarray        # i32 fifo of each event
+    rank: jnp.ndarray        # i32 per-fifo op rank
+    is_write: jnp.ndarray    # bool
+    evt_read_base: jnp.ndarray   # i32 read_base[fifo[e]]
+    evt_n_reads: jnp.ndarray     # i32 n_reads[fifo[e]]
+    # (F,) / (R,)
+    widths: jnp.ndarray      # i32
+    read_evt_flat: jnp.ndarray   # i32
+
+
+def _pad_to(a: np.ndarray, n: int, fill, dtype) -> np.ndarray:
+    out = np.full(n, fill, dtype=dtype)
+    out[: len(a)] = a
+    return out
+
+
+def build_operands(g: SimGraph) -> GraphOperands:
+    """Build the padded event tensors for ``g`` (use :func:`get_operands`)."""
+    E = g.n_events
+    e_pad = max(LANES, -(-max(E, 1) // LANES) * LANES)
+    real = np.arange(e_pad) < E
+
+    kind = _pad_to(g.kind, e_pad, READ, np.int32)   # pad kind is irrelevant
+    fifo = _pad_to(g.fifo, e_pad, 0, np.int64)
+    delta = _pad_to(g.delta, e_pad, 0, np.float32)
+    seg_start = _pad_to(g.seg_start, e_pad, 0, np.float32)
+    if E < e_pad:
+        seg_start[E] = 1.0                          # isolate the pad chain
+    rank = _pad_to(g.rank, e_pad, 0, np.int64)
+    data_src = _pad_to(g.data_src, e_pad, -1, np.int64)
+
+    is_read = ((kind == READ) & real).astype(np.float32)
+    is_write = (kind == WRITE) & real
+    has_data = ((data_src >= 0) & (is_read > 0)).astype(np.float32)
+    data_idx = np.clip(data_src, 0, e_pad - 1).astype(np.int32)
+
+    end_bonus = np.full(e_pad, float(NEG), dtype=np.float32)
+    taskless_lat = 0.0
+    for t in range(g.n_tasks):
+        le = int(g.last_evt[t])
+        if le >= 0:
+            end_bonus[le] = float(g.end_delay[t])
+        else:
+            taskless_lat = max(taskless_lat, float(g.end_delay[t]))
+
+    R = max(int(g.n_reads.sum()), 1)
+    read_evt_flat = np.zeros(R, dtype=np.int64)
+    read_evt_flat[: len(g.read_evt_flat)] = g.read_evt_flat
+
+    return GraphOperands(
+        n_events=E,
+        e_pad=e_pad,
+        n_fifos=g.n_fifos,
+        n_flat_reads=R,
+        bound=float(g.latency_upper_bound()),
+        taskless_lat=taskless_lat,
+        delta=jnp.asarray(delta)[None, :],
+        seg_start=jnp.asarray(seg_start)[None, :],
+        is_read=jnp.asarray(is_read)[None, :],
+        has_data=jnp.asarray(has_data)[None, :],
+        end_bonus=jnp.asarray(end_bonus)[None, :],
+        data_idx=jnp.asarray(data_idx)[None, :],
+        fifo=jnp.asarray(fifo, dtype=jnp.int32),
+        rank=jnp.asarray(rank, dtype=jnp.int32),
+        is_write=jnp.asarray(is_write),
+        evt_read_base=jnp.asarray(g.read_base.astype(np.int64)[fifo],
+                                  dtype=jnp.int32),
+        evt_n_reads=jnp.asarray(g.n_reads.astype(np.int64)[fifo],
+                                dtype=jnp.int32),
+        widths=jnp.asarray(g.widths, dtype=jnp.int32),
+        read_evt_flat=jnp.asarray(read_evt_flat, dtype=jnp.int32),
+    )
+
+
+def get_operands(g: SimGraph) -> GraphOperands:
+    """Cached :class:`GraphOperands` for ``g`` (built once per graph)."""
+    cached = getattr(g, "_operands_cache", None)
+    if cached is None:
+        cached = build_operands(g)
+        g._operands_cache = cached
+    return cached
+
+
+def depth_operands(ops: GraphOperands, depths: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                              jnp.ndarray]:
+    """Depth-dependent per-config operands (jnp, jit/vmap traceable).
+
+    depths: (C, F) integer depth matrix.  Returns
+
+    - ``rd_lat_e``  (C, E_pad) f32: read latency at each event's fifo
+      (1 cycle SRL, 2 cycles BRAM — depends on the candidate depth),
+    - ``bp_idx``    (C, E_pad) i32: back-pressure gather index — write j of
+      fifo f waits on read event ``j - d_f``,
+    - ``bp_valid``  (C, E_pad) f32: mask of writes with an active
+      back-pressure edge,
+    - ``structural`` (C,) bool: config deadlocks structurally (a write's
+      back-pressure partner read does not exist).
+    """
+    depths = depths.astype(jnp.int32)
+    is_bram = ~((depths <= SRL_DEPTH) | (depths * ops.widths <= SRL_BITS))
+    rd_lat_f = 1.0 + is_bram.astype(jnp.float32)          # (C, F)
+    rd_lat_e = rd_lat_f[:, ops.fifo]                      # (C, E_pad)
+
+    bp_pos = ops.rank[None, :] - depths[:, ops.fifo]      # (C, E_pad)
+    overrun = ops.is_write[None, :] & (bp_pos >= ops.evt_n_reads[None, :])
+    structural = jnp.any(overrun, axis=1)                 # (C,)
+    bp_valid = (ops.is_write[None, :] & (bp_pos >= 0) & ~overrun
+                ).astype(jnp.float32)
+    flat = jnp.clip(ops.evt_read_base[None, :] + bp_pos, 0,
+                    ops.n_flat_reads - 1)
+    bp_idx = ops.read_evt_flat[flat]                      # (C, E_pad)
+    return rd_lat_e, bp_idx, bp_valid, structural

@@ -1,0 +1,20 @@
+"""Pallas-kernel backend: the fifo_eval TPU kernel behind the shared
+operand/dispatch machinery (interpret mode on CPU, native on TPU)."""
+
+from __future__ import annotations
+
+from repro.core.backends.base import register_backend
+from repro.core.backends.fixpoint import _ScanBackend
+
+
+@register_backend
+class PallasBackend(_ScanBackend):
+    """The :mod:`repro.kernels.fifo_eval` Hillis-Steele kernel.
+
+    The kernel launches one grid program per configuration, so batch
+    padding buys nothing — bucketing is disabled.
+    """
+
+    name = "pallas"
+    use_ref = False
+    wants_bucketing = False

@@ -1,0 +1,526 @@
+"""Event-driven Kahn-worklist backend (the LightningSim CPU primitive).
+
+Exact longest-path solve of one configuration at a time, O(E + wakeups).
+This is the reference evaluator, the arbiter for rows the batched backends
+cannot classify within their iteration cap, and — crucially — the home of
+the *incremental* fast path that makes FIFO sizing tractable as black-box
+DSE: given a solved base configuration and a change to k FIFOs, only the
+task segments whose timing actually diverges from the base solve re-run.
+
+Incremental soundness.  Segments interact only through FIFO streams: a
+segment's event times depend on the write times of FIFOs it reads (data
+edges) and the read times of FIFOs it writes (back-pressure edges), each
+consumed in rank order.  The delta solve re-runs the changed FIFOs'
+endpoint segments from scratch and propagates *by observed difference*:
+
+- a re-run segment reads streams of un-rerun producers straight out of the
+  base solution (their inputs are unchanged, so their times stand);
+- every value a re-run segment appends to a stream is compared against the
+  base solution at the same rank — the consumer is only woken (and itself
+  re-run from scratch) when the value differs or did not exist in the base;
+- at quiescence, any re-run segment that produced *fewer* stream entries
+  than the base forces its consumer to re-run (the base entries it consumed
+  no longer exist).
+
+A segment that is never woken therefore sees bit-identical inputs to the
+base solve and keeps its base event times verbatim — including segments
+that were incomplete (deadlocked) in the base.  The result is the same
+least fixpoint the full worklist computes, at the cost of only the
+divergent region; a depth change that does not move any event time costs
+O(changed segments) instead of O(E).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.bram import design_bram_np, fifo_read_latency
+from repro.core.design import READ
+from repro.core.simgraph import SimGraph
+
+from repro.core.backends.base import (CONVERGED, DEADLOCK, EvalBackend,
+                                      register_backend)
+
+
+def _worklist_tables(g: SimGraph):
+    """Cached per-graph tables for the event-driven worklist."""
+    cached = getattr(g, "_worklist_cache", None)
+    if cached is not None:
+        return cached
+    E = g.n_events
+    starts = np.flatnonzero(g.seg_start)
+    bounds = np.concatenate([starts, [E]]).astype(np.int64)
+    n_segs = len(starts)
+    # segment of each event
+    seg_of_evt = np.searchsorted(starts, np.arange(E), side="right") - 1
+    F = g.n_fifos
+    reader_seg = np.full(F, -1, dtype=np.int64)
+    writer_seg = np.full(F, -1, dtype=np.int64)
+    for e in range(E):
+        f = int(g.fifo[e])
+        if g.kind[e] == READ:
+            reader_seg[f] = seg_of_evt[e]
+        else:
+            writer_seg[f] = seg_of_evt[e]
+    kind = g.kind.astype(np.int64)
+    fifo = g.fifo.astype(np.int64)
+    delta = g.delta.astype(np.int64)
+    rank = g.rank.astype(np.int64)
+    cached = (bounds, n_segs, kind, fifo, delta, rank, reader_seg, writer_seg)
+    g._worklist_cache = cached
+    return cached
+
+
+def _delta_tables(g: SimGraph):
+    """Cached tables for the incremental solver: per-fifo write events in
+    rank order (mirroring ``read_evt_flat``) and per-segment owned fifos."""
+    cached = getattr(g, "_delta_cache", None)
+    if cached is not None:
+        return cached
+    (bounds, n_segs, kind, fifo, _, _, reader_seg, writer_seg) = \
+        _worklist_tables(g)
+    F = g.n_fifos
+    write_events: List[List[int]] = [[] for _ in range(F)]
+    for e in range(g.n_events):
+        if kind[e] != READ:
+            write_events[int(g.fifo[e])].append(e)
+    write_evt = [np.asarray(w, dtype=np.int64) for w in write_events]
+    read_evt = [np.asarray(
+        g.read_evt_flat[g.read_base[f]: g.read_base[f] + g.n_reads[f]],
+        dtype=np.int64) for f in range(F)]
+    reads_of_seg: List[List[int]] = [[] for _ in range(n_segs)]
+    writes_of_seg: List[List[int]] = [[] for _ in range(n_segs)]
+    for f in range(F):
+        if reader_seg[f] >= 0:
+            reads_of_seg[int(reader_seg[f])].append(f)
+        if writer_seg[f] >= 0:
+            writes_of_seg[int(writer_seg[f])].append(f)
+    cached = (write_evt, read_evt, reads_of_seg, writes_of_seg)
+    g._delta_cache = cached
+    return cached
+
+
+@dataclasses.dataclass
+class WorklistState:
+    """Reusable artifact of one solve — the base for later deltas."""
+
+    depths: np.ndarray        # (F,) int64 the config this state solves
+    t: np.ndarray             # (E,) int64 event completion times
+    seg_cursor: np.ndarray    # (S,) int64 ops completed per segment
+    seg_complete: np.ndarray  # (S,) bool  per-segment completion
+    latency: int              # -1 when deadlocked
+    deadlocked: bool
+
+
+def _latency(g: SimGraph, t) -> int:
+    lat = 0
+    for ti in range(g.n_tasks):
+        le = int(g.last_evt[ti])
+        base = int(t[le]) if le >= 0 else 0
+        v = base + int(g.end_delay[ti])
+        if v > lat:
+            lat = v
+    return lat
+
+
+def solve(g: SimGraph, depths: np.ndarray) -> WorklistState:
+    """Full exact solve of one depth vector, returning a reusable state."""
+    depths = np.asarray(depths, dtype=np.int64)
+    E = g.n_events
+    rd_lat = [fifo_read_latency(int(d), int(w))
+              for d, w in zip(depths, g.widths)]
+    (bounds, n_segs, kind, fifo, delta, rank,
+     reader_seg, writer_seg) = _worklist_tables(g)
+
+    cursor = [0] * n_segs
+    prev_t = [0] * n_segs
+    t = [0] * E
+    wtimes: List[List[int]] = [[] for _ in range(g.n_fifos)]
+    rtimes: List[List[int]] = [[] for _ in range(g.n_fifos)]
+    dl = depths.tolist()
+
+    queue = deque(range(n_segs))
+    queued = [True] * n_segs
+    kindl = kind.tolist()
+    fifol = fifo.tolist()
+    deltal = delta.tolist()
+    rankl = rank.tolist()
+    boundsl = bounds.tolist()
+
+    while queue:
+        s = queue.popleft()
+        queued[s] = False
+        i = boundsl[s] + cursor[s]
+        hi = boundsl[s + 1]
+        pt = prev_t[s]
+        woke_read: set = set()
+        woke_write: set = set()
+        while i < hi:
+            f = fifol[i]
+            ready = pt + deltal[i]
+            if kindl[i] == READ:
+                wt = wtimes[f]
+                if len(wt) <= rankl[i]:
+                    break
+                ti = wt[rankl[i]] + rd_lat[f]
+                if ready > ti:
+                    ti = ready
+                rtimes[f].append(ti)
+                woke_read.add(f)
+            else:
+                j = rankl[i]
+                d = dl[f]
+                ti = ready
+                if j >= d:
+                    rt = rtimes[f]
+                    if len(rt) <= j - d:
+                        break
+                    slot = rt[j - d] + 1
+                    if slot > ti:
+                        ti = slot
+                wtimes[f].append(ti)
+                woke_write.add(f)
+            t[i] = ti
+            pt = ti
+            cursor[s] += 1
+            i += 1
+        prev_t[s] = pt
+        for f in woke_read:     # freed slots -> wake the writer
+            ws = writer_seg[f]
+            if ws >= 0 and not queued[ws]:
+                queue.append(ws)
+                queued[ws] = True
+        for f in woke_write:    # new data -> wake the reader
+            rs = reader_seg[f]
+            if rs >= 0 and not queued[rs]:
+                queue.append(rs)
+                queued[rs] = True
+
+    cursor_a = np.asarray(cursor, dtype=np.int64)
+    complete = cursor_a + bounds[:-1] >= bounds[1:]
+    deadlocked = not bool(complete.all())
+    lat = -1 if deadlocked else _latency(g, t)
+    return WorklistState(depths=depths.copy(),
+                         t=np.asarray(t, dtype=np.int64),
+                         seg_cursor=cursor_a, seg_complete=complete,
+                         latency=lat, deadlocked=deadlocked)
+
+
+def solve_delta(g: SimGraph, base: WorklistState, depths: np.ndarray,
+                counters: Optional[list] = None) -> WorklistState:
+    """Incremental re-solve against a solved base configuration.
+
+    Re-runs the changed FIFOs' endpoint segments and whatever the observed
+    timing differences transitively wake; everything else keeps its base
+    event times.  ``counters``, when given, is a 1-element list incremented
+    by the number of segments re-run (for stats/benchmarks).
+    """
+    depths = np.asarray(depths, dtype=np.int64)
+    changed = np.flatnonzero(base.depths != depths)
+    if changed.size == 0:
+        return base
+
+    (bounds, n_segs, kind, fifo, delta, rank,
+     reader_seg, writer_seg) = _worklist_tables(g)
+    write_evt, read_evt, reads_of_seg, writes_of_seg = _delta_tables(g)
+    rd_lat = [fifo_read_latency(int(d), int(w))
+              for d, w in zip(depths, g.widths)]
+    dl = depths.tolist()
+    kindl = kind.tolist()
+    fifol = fifo.tolist()
+    deltal = delta.tolist()
+    rankl = rank.tolist()
+    boundsl = bounds.tolist()
+    reader_segl = reader_seg.tolist()
+    writer_segl = writer_seg.tolist()
+    base_t = base.t
+    base_cursor = base.seg_cursor
+
+    # the solve loop only reads FIFO streams, never t: a numpy copy with
+    # per-event scalar writes beats a full tolist/asarray round-trip
+    t = base_t.copy()
+    cursor = base_cursor.tolist()
+    prev_t = [0] * n_segs
+    visited = [False] * n_segs
+    F = g.n_fifos
+    # Authoritative streams: the base snapshot while the owner is not
+    # re-run, swapped for a fresh list the moment the owner is visited.
+    # ``base_w/base_r`` keep the base snapshots for the diff checks.
+    cur_w: List[Optional[List[int]]] = [None] * F
+    cur_r: List[Optional[List[int]]] = [None] * F
+    base_w: List[Optional[List[int]]] = [None] * F
+    base_r: List[Optional[List[int]]] = [None] * F
+
+    def base_wstream(f: int) -> List[int]:
+        s = base_w[f]
+        if s is None:
+            ev = write_evt[f]
+            ws = writer_segl[f]
+            end = boundsl[ws] + cursor_base_l[ws] if ws >= 0 else 0
+            n = int(np.searchsorted(ev, end))
+            s = base_t[ev[:n]].tolist()
+            base_w[f] = s
+            if cur_w[f] is None:
+                cur_w[f] = s
+        return s
+
+    def base_rstream(f: int) -> List[int]:
+        s = base_r[f]
+        if s is None:
+            ev = read_evt[f]
+            rs = reader_segl[f]
+            end = boundsl[rs] + cursor_base_l[rs] if rs >= 0 else 0
+            n = int(np.searchsorted(ev, end))
+            s = base_t[ev[:n]].tolist()
+            base_r[f] = s
+            if cur_r[f] is None:
+                cur_r[f] = s
+        return s
+
+    cursor_base_l = base_cursor.tolist()
+    queue = deque()
+    queued = [False] * n_segs
+
+    def visit(s: int):
+        """Add segment s to the re-run set, restarting it from scratch.
+
+        Restart cascades through already-visited consumers: a visited
+        segment may have consumed s's *base* stream values (s was not
+        being re-run when it read them), and those values are about to be
+        re-produced — everything downstream of a reset stream restarts.
+        Unvisited consumers are untouched; they join later only if the
+        re-produced values actually differ from the base (wake-on-diff).
+
+        Every stream a visited segment can touch is materialized here, so
+        the hot loop below only ever does plain list indexing.
+        """
+        visited[s] = True
+        stack = [s]
+        seen = {s}
+        while stack:
+            x = stack.pop()
+            cursor[x] = 0
+            prev_t[x] = 0
+            for f in writes_of_seg[x]:
+                base_wstream(f)          # snapshot before the rebuild
+                base_rstream(f)          # back-pressure stream x consumes
+                cur_w[f] = []            # rebuilt from scratch
+                rs = reader_segl[f]
+                if rs >= 0 and visited[rs] and rs not in seen:
+                    seen.add(rs)
+                    stack.append(rs)
+            for f in reads_of_seg[x]:
+                base_rstream(f)
+                base_wstream(f)          # data stream x consumes
+                cur_r[f] = []
+                ws = writer_segl[f]
+                if ws >= 0 and visited[ws] and ws not in seen:
+                    seen.add(ws)
+                    stack.append(ws)
+            if not queued[x]:
+                queue.append(x)
+                queued[x] = True
+        return seen
+
+    for f in changed:
+        for s in (reader_segl[f], writer_segl[f]):
+            if s >= 0 and not visited[s]:
+                visit(s)
+
+    while True:
+        while queue:
+            s = queue.popleft()
+            queued[s] = False
+            i = boundsl[s] + cursor[s]
+            hi = boundsl[s + 1]
+            pt = prev_t[s]
+            wake: set = set()
+            restarted = False
+            while i < hi:
+                f = fifol[i]
+                ready = pt + deltal[i]
+                if kindl[i] == READ:
+                    wt = cur_w[f]
+                    if len(wt) <= rankl[i]:
+                        break
+                    ti = wt[rankl[i]] + rd_lat[f]
+                    if ready > ti:
+                        ti = ready
+                    rf = cur_r[f]
+                    k = len(rf)
+                    rf.append(ti)
+                    ws = writer_segl[f]
+                    if ws >= 0:
+                        if visited[ws]:
+                            wake.add(ws)
+                        else:
+                            bs = base_r[f]
+                            if k >= len(bs) or bs[k] != ti:
+                                # timing diverged: pull the writer into
+                                # the re-run set (visit() enqueues it)
+                                if s in visit(ws):
+                                    restarted = True
+                                    break
+                else:
+                    j = rankl[i]
+                    d = dl[f]
+                    ti = ready
+                    if j >= d:
+                        rt = cur_r[f]
+                        if len(rt) <= j - d:
+                            break
+                        slot = rt[j - d] + 1
+                        if slot > ti:
+                            ti = slot
+                    wf = cur_w[f]
+                    k = len(wf)
+                    wf.append(ti)
+                    rs = reader_segl[f]
+                    if rs >= 0:
+                        if visited[rs]:
+                            wake.add(rs)
+                        else:
+                            bs = base_w[f]
+                            if k >= len(bs) or bs[k] != ti:
+                                if s in visit(rs):
+                                    restarted = True
+                                    break
+                t[i] = ti
+                pt = ti
+                cursor[s] += 1
+                i += 1
+            if not restarted:
+                # a cascade that restarted s already reset its cursor and
+                # re-queued it; committing pt would corrupt that state
+                prev_t[s] = pt
+            for n in wake:
+                if not queued[n]:
+                    queue.append(n)
+                    queued[n] = True
+
+        # Shortfall pass: a re-run producer that ended with fewer stream
+        # entries than the base invalidates its consumer's base prefix.
+        progressed = False
+        for s in range(n_segs):
+            if not visited[s]:
+                continue
+            for f in writes_of_seg[s]:
+                rs = reader_segl[f]
+                if rs >= 0 and not visited[rs] \
+                        and len(cur_w[f]) < len(base_w[f]):
+                    visit(rs)
+                    progressed = True
+            for f in reads_of_seg[s]:
+                ws = writer_segl[f]
+                if ws >= 0 and not visited[ws] \
+                        and len(cur_r[f]) < len(base_r[f]):
+                    visit(ws)
+                    progressed = True
+        if not progressed:
+            break
+
+    if counters is not None:
+        counters[0] += sum(visited)
+
+    cursor_a = np.asarray(cursor, dtype=np.int64)
+    complete = cursor_a + bounds[:-1] >= bounds[1:]
+    deadlocked = not bool(complete.all())
+    lat = -1 if deadlocked else _latency(g, t)
+    return WorklistState(depths=depths.copy(), t=t,
+                         seg_cursor=cursor_a, seg_complete=complete,
+                         latency=lat, deadlocked=deadlocked)
+
+
+def evaluate_np(g: SimGraph, depths: np.ndarray) -> Tuple[int, bool]:
+    """Exact (latency, deadlocked) for one depth vector (full solve)."""
+    st = solve(g, depths)
+    return st.latency, st.deadlocked
+
+
+def affected_segments(g: SimGraph, changed_fifos: np.ndarray) -> np.ndarray:
+    """Structural upper bound on the segments a delta can re-run: the
+    forward closure of the changed FIFOs' endpoints over data and
+    back-pressure edges.  The observed-difference propagation in
+    :func:`solve_delta` typically re-runs far fewer."""
+    (_, n_segs, _, _, _, _, reader_seg, writer_seg) = _worklist_tables(g)
+    _, _, reads_of_seg, writes_of_seg = _delta_tables(g)
+    seen = np.zeros(n_segs, dtype=bool)
+    stack = []
+    for f in np.asarray(changed_fifos):
+        for s in (int(reader_seg[f]), int(writer_seg[f])):
+            if s >= 0 and not seen[s]:
+                seen[s] = True
+                stack.append(s)
+    while stack:
+        s = stack.pop()
+        for f in writes_of_seg[s]:
+            n = int(reader_seg[f])
+            if n >= 0 and not seen[n]:
+                seen[n] = True
+                stack.append(n)
+        for f in reads_of_seg[s]:
+            n = int(writer_seg[f])
+            if n >= 0 and not seen[n]:
+                seen[n] = True
+                stack.append(n)
+    return np.flatnonzero(seen)
+
+
+@dataclasses.dataclass
+class IncrementalStats:
+    n_full: int = 0           # full solves
+    n_delta: int = 0          # incremental solves
+    segs_resolved: int = 0    # segments re-run across all deltas
+    segs_total: int = 0       # segments a full solve would have run
+
+    @property
+    def resolve_fraction(self) -> float:
+        return self.segs_resolved / max(self.segs_total, 1)
+
+
+@register_backend
+class WorklistBackend(EvalBackend):
+    """Numpy Kahn worklist: exact, one config at a time, no iteration cap."""
+
+    name = "worklist"
+    aliases = ("numpy",)
+    wants_bucketing = False
+
+    def __init__(self, max_iters: int = 64):
+        super().__init__(max_iters)
+        self.incr_stats = IncrementalStats()
+
+    def prepare(self, g: SimGraph):
+        self.g = g
+        return _worklist_tables(g)
+
+    def evaluate(self, depth_matrix: np.ndarray
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        m = np.atleast_2d(np.asarray(depth_matrix, dtype=np.int64))
+        C = m.shape[0]
+        lat = np.zeros(C, dtype=np.int64)
+        status = np.zeros(C, dtype=np.int8)
+        for i in range(C):
+            li, dead = evaluate_np(self.g, m[i])
+            lat[i] = li
+            status[i] = DEADLOCK if dead else CONVERGED
+        bram = design_bram_np(m, np.asarray(self.g.widths))
+        return lat, bram, status
+
+    # ---------------------------------------------------- incremental API
+    def solve(self, depths: np.ndarray) -> WorklistState:
+        self.incr_stats.n_full += 1
+        return solve(self.g, depths)
+
+    def solve_delta(self, base: WorklistState,
+                    depths: np.ndarray) -> WorklistState:
+        counters = [0]
+        st = solve_delta(self.g, base, depths, counters=counters)
+        self.incr_stats.n_delta += 1
+        self.incr_stats.segs_total += int(base.seg_cursor.shape[0])
+        self.incr_stats.segs_resolved += counters[0]
+        return st

@@ -88,7 +88,10 @@ class SimulatedAnnealing(Optimizer):
                 rand_val = rng.integers(0, dims[rand_pos])
                 prop[resets, rand_pos[resets]] = rand_val[resets]
 
-            lat, bram, dead = ctx.evaluate(self._depths(prop))
+            # proposals differ from their chain's state by one coordinate:
+            # eligible for the incremental re-simulation fast path
+            lat, bram, dead = ctx.evaluate_delta(
+                self._depths(state), self._depths(prop))
             e_new = energy(lat, bram, dead)
             with np.errstate(invalid="ignore", over="ignore"):
                 accept = (e_new <= e_cur) | (

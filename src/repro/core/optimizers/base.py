@@ -9,10 +9,11 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.backends import ConfigCache
 from repro.core.bram import breakpoints
 from repro.core.pareto import pareto_front
 from repro.core.simgraph import SimGraph
@@ -53,9 +54,10 @@ class EvalContext:
                  upper_bounds: Optional[np.ndarray] = None,
                  occupancy_cap: bool = False, local_bounds: bool = False,
                  lower_bounds: Optional[np.ndarray] = None,
-                 seed: int = 0):
+                 seed: int = 0, cache: Optional[ConfigCache] = None):
         self.g = g
         self.ev = evaluator or BatchedEvaluator(g)
+        self.cache = cache if cache is not None else ConfigCache(g.n_fifos)
         self.rng = np.random.default_rng(seed)
         self.u = (np.asarray(upper_bounds, dtype=np.int64)
                   if upper_bounds is not None else g.upper_bounds.copy())
@@ -95,13 +97,16 @@ class EvalContext:
         self.group_grid_sizes = np.asarray(
             [max(self.grid_sizes[m].max(), 1) for m in self.groups])
 
+        # Per-fifo depth used for columns a grouped move does not set.
+        self._default_depths = np.asarray(
+            [c[-1] for c in self.candidates], dtype=np.int64)
+
         # History.
         self._configs: List[np.ndarray] = []
         self._lat: List[np.ndarray] = []
         self._bram: List[np.ndarray] = []
         self._dead: List[np.ndarray] = []
         self.n_evals = 0
-        self._cache: Dict[bytes, Tuple[int, int, bool]] = {}
 
     # ------------------------------------------------------------- depths
     def depths_from_indices(self, idx: np.ndarray) -> np.ndarray:
@@ -114,10 +119,15 @@ class EvalContext:
         return out
 
     def depths_from_group_indices(self, gidx: np.ndarray) -> np.ndarray:
-        """(C, n_groups) indices -> (C, F) depths (index shared per group)."""
+        """(C, n_groups) indices -> (C, F) depths (index shared per group).
+
+        Columns for FIFOs not covered by any group fall back to their
+        largest candidate depth (behaviourally unconstrained) instead of
+        uninitialized memory.
+        """
         gidx = np.atleast_2d(gidx)
         C = gidx.shape[0]
-        out = np.empty((C, self.g.n_fifos), dtype=np.int64)
+        out = np.tile(self._default_depths, (C, 1))
         for gi, members in enumerate(self.groups):
             for f in members:
                 cand = self.candidates[f]
@@ -131,39 +141,56 @@ class EvalContext:
         return np.full(self.g.n_fifos, 2, dtype=np.int64)
 
     # ---------------------------------------------------------- evaluation
-    def evaluate(self, depth_matrix: np.ndarray
-                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Evaluate configs (cached), record history, count budget."""
-        depth_matrix = np.atleast_2d(np.asarray(depth_matrix, dtype=np.int64))
-        C = depth_matrix.shape[0]
-        lat = np.zeros(C, dtype=np.int64)
-        bram = np.zeros(C, dtype=np.int64)
-        dead = np.zeros(C, dtype=bool)
-        miss_rows = []
-        for i in range(C):
-            key = depth_matrix[i].tobytes()
-            hit = self._cache.get(key)
-            if hit is None:
-                miss_rows.append(i)
+    def _finish(self, depth_matrix, lat, bram, dead, miss, base=None):
+        """Resolve cache misses, record history, count budget.
+
+        Only cache *misses* count against the simulator budget; hits are
+        recorded in the shared :class:`ConfigCache` stats.  When ``base``
+        is given and the evaluator prefers it, misses go through the
+        incremental re-simulation fast path (single-FIFO-move searches)."""
+        rows = np.flatnonzero(miss)
+        if rows.size:
+            sub = depth_matrix[rows]
+            if base is not None and self.ev.prefer_incremental:
+                l, b, dd = self.ev.evaluate_incremental(base[rows], sub)
             else:
-                lat[i], bram[i], dead[i] = hit
-        if miss_rows:
-            sub = depth_matrix[miss_rows]
-            l, b, dd = self.ev.evaluate(sub)
-            for j, i in enumerate(miss_rows):
-                lat[i], bram[i], dead[i] = l[j], b[j], dd[j]
-                self._cache[depth_matrix[i].tobytes()] = (
-                    int(l[j]), int(b[j]), bool(dd[j]))
-        # budget counts *samples drawn*, mirroring the paper
-        self.n_evals += C
+                l, b, dd = self.ev.evaluate(sub)
+            lat[rows], bram[rows], dead[rows] = l, b, dd
+            self.cache.insert(sub, l, b, dd)
+        self.n_evals += int(rows.size)
         self._configs.append(depth_matrix)
         self._lat.append(lat)
         self._bram.append(bram)
         self._dead.append(dead)
         return lat, bram, dead
 
+    def evaluate(self, depth_matrix: np.ndarray
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Evaluate configs (cached), record history, count budget."""
+        depth_matrix = np.atleast_2d(np.asarray(depth_matrix, dtype=np.int64))
+        lat, bram, dead, miss = self.cache.lookup(depth_matrix)
+        return self._finish(depth_matrix, lat, bram, dead, miss)
+
+    def evaluate_delta(self, base: np.ndarray, depth_matrix: np.ndarray
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Like :meth:`evaluate`, but rows are deltas of known base configs
+        (one shared (F,) base or a per-row (C, F) matrix): misses use the
+        evaluator's incremental re-simulation when it prefers it."""
+        depth_matrix = np.atleast_2d(np.asarray(depth_matrix, dtype=np.int64))
+        base = np.atleast_2d(np.asarray(base, dtype=np.int64))
+        if base.shape[0] == 1 and depth_matrix.shape[0] > 1:
+            base = np.broadcast_to(base, depth_matrix.shape)
+        lat, bram, dead, miss = self.cache.lookup(depth_matrix)
+        return self._finish(depth_matrix, lat, bram, dead, miss, base=base)
+
     def evaluate_one(self, depths: np.ndarray) -> Tuple[int, int, bool]:
         lat, bram, dead = self.evaluate(np.asarray(depths)[None, :])
+        return int(lat[0]), int(bram[0]), bool(dead[0])
+
+    def evaluate_one_delta(self, base: np.ndarray, depths: np.ndarray
+                           ) -> Tuple[int, int, bool]:
+        lat, bram, dead = self.evaluate_delta(
+            np.asarray(base)[None, :], np.asarray(depths)[None, :])
         return int(lat[0]), int(bram[0]), bool(dead[0])
 
     def result(self, name: str, runtime_s: float) -> OptResult:

@@ -44,7 +44,9 @@ class GreedySearch(Optimizer):
                 continue
             trial = cur.copy()
             trial[f] = 2
-            lat, _, dead = ctx.evaluate_one(trial)
+            # single-FIFO move vs the accepted config: the incremental
+            # re-simulation fast path re-solves only coupled segments
+            lat, _, dead = ctx.evaluate_one_delta(cur, trial)
             if not dead and lat <= limit:
                 cur = trial
             else:
@@ -61,7 +63,7 @@ class GreedySearch(Optimizer):
                     mid = (lo + hi) // 2
                     trial = cur.copy()
                     trial[f] = cand[mid]
-                    lat, _, dead = ctx.evaluate_one(trial)
+                    lat, _, dead = ctx.evaluate_one_delta(cur, trial)
                     if not dead and lat <= limit:
                         hi = mid
                     else:

@@ -1,6 +1,7 @@
 """Trace-based incremental FIFO-latency evaluation (the LightningSim core).
 
-Two exact evaluators over a :class:`repro.core.simgraph.SimGraph`:
+This module is the stable public façade over the evaluation-backend
+subsystem in :mod:`repro.core.backends`:
 
 ``evaluate_np``
     Kahn-worklist longest-path solve, one config at a time.  Readable
@@ -8,20 +9,20 @@ Two exact evaluators over a :class:`repro.core.simgraph.SimGraph`:
     cannot classify within its iteration cap.
 
 ``BatchedEvaluator``
-    The TPU-native formulation.  Event times are the least fixpoint of a
-    monotone max-plus map; we iterate Jacobi steps where each step is
+    Thin façade over the backend registry.  ``backend=`` selects
 
-        cross-edge gathers  (data edges + depth-dependent back-pressure)
-        -> segmented max-plus *associative scan* along each task's ops
+    ``"numpy"`` (alias ``"worklist"``, default) — the event-driven
+        worklist; mirrors the paper's CPU tool and is the fastest option on
+        this container (O(E) exact, ~10 ms at E=26k).  Also provides the
+        *incremental* fast path: ``evaluate_incremental`` re-solves only
+        the task segments coupled to the changed FIFOs.
+    ``"jax"`` (alias ``"fixpoint"``) — jit(vmap) Jacobi + segmented-scan
+        fixpoint; the TPU-native formulation (DESIGN.md §6).
+    ``"pallas"`` — the ``kernels/fifo_eval`` kernel (interpret mode on CPU).
 
-    vmapped over a batch of candidate depth vectors and jit-compiled.
-    Intra-task chains (the long dependency chains) are resolved wholesale by
-    the scan, so the iteration count equals the number of *cross* edges on
-    the critical path — small in practice (<= a few dozen).  A true deadlock
-    is a positive cycle: iterates grow strictly, provably never converging;
-    we flag DEADLOCK as soon as any time exceeds the design's schedule upper
-    bound, and classify anything still unresolved at the iteration cap with
-    ``evaluate_np``.
+    Batch bucketing, jit-cache reuse, and tiered UNRESOLVED-row escalation
+    to the worklist live in :class:`repro.core.backends.DispatchPolicy`.
+    All backends are exact and cross-validated in ``tests/test_backends``.
 
 Numeric domain: times are exact in float32 while below 2**24; we assert the
 design's schedule upper bound stays below ~1.5e7 cycles at build time.
@@ -31,210 +32,41 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from collections import OrderedDict
+from typing import Optional, Tuple
 
 import numpy as np
 
-import jax
-import jax.numpy as jnp
-from jax import lax
-
-from repro.core.bram import (BRAM18K_CONFIGS, SRL_BITS, SRL_DEPTH,
-                             design_bram_np, fifo_read_latency)
-from repro.core.design import READ, WRITE
+from repro.core.backends import (BIG, BUCKETS, CONVERGED, DEADLOCK,
+                                 F32_EXACT_LIMIT, UNRESOLVED, DispatchPolicy,
+                                 WorklistBackend, bram_count_jnp,
+                                 evaluate_np, get_backend)
+from repro.core.backends.worklist import WorklistState
+from repro.core.bram import design_bram_np
 from repro.core.simgraph import SimGraph
 
-BIG = np.float32(1e9)
-F32_EXACT_LIMIT = 1.5e7
+__all__ = [
+    "BIG", "CONVERGED", "DEADLOCK", "F32_EXACT_LIMIT", "UNRESOLVED",
+    "BatchStats", "BatchedEvaluator", "bram_count_jnp", "evaluate_np",
+]
 
-# status codes
-CONVERGED = 0
-DEADLOCK = 1
-UNRESOLVED = 2
-
-
-# --------------------------------------------------------------------------
-# numpy exact reference (single config)
-# --------------------------------------------------------------------------
-
-def _worklist_tables(g: SimGraph):
-    """Cached per-graph tables for the event-driven worklist."""
-    cached = getattr(g, "_worklist_cache", None)
-    if cached is not None:
-        return cached
-    E = g.n_events
-    starts = np.flatnonzero(g.seg_start)
-    bounds = np.concatenate([starts, [E]]).astype(np.int64)
-    n_segs = len(starts)
-    # segment of each event
-    seg_of_evt = np.searchsorted(starts, np.arange(E), side="right") - 1
-    F = g.n_fifos
-    reader_seg = np.full(F, -1, dtype=np.int64)
-    writer_seg = np.full(F, -1, dtype=np.int64)
-    for e in range(E):
-        f = int(g.fifo[e])
-        if g.kind[e] == READ:
-            reader_seg[f] = seg_of_evt[e]
-        else:
-            writer_seg[f] = seg_of_evt[e]
-    kind = g.kind.astype(np.int64)
-    fifo = g.fifo.astype(np.int64)
-    delta = g.delta.astype(np.int64)
-    rank = g.rank.astype(np.int64)
-    cached = (bounds, n_segs, kind, fifo, delta, rank, reader_seg, writer_seg)
-    g._worklist_cache = cached
-    return cached
-
-
-def evaluate_np(g: SimGraph, depths: np.ndarray) -> Tuple[int, bool]:
-    """Exact (latency, deadlocked) for one depth vector.
-
-    Event-driven Kahn worklist: O(E + wakeups).  This is the CPU fast path
-    of the incremental simulator (the LightningSim analogue) and the
-    arbiter for rows the batched backends cannot classify.
-    """
-    depths = np.asarray(depths, dtype=np.int64)
-    E = g.n_events
-    rd_lat = [fifo_read_latency(int(d), int(w))
-              for d, w in zip(depths, g.widths)]
-    (bounds, n_segs, kind, fifo, delta, rank,
-     reader_seg, writer_seg) = _worklist_tables(g)
-
-    cursor = [0] * n_segs
-    prev_t = [0] * n_segs
-    t = [0] * E
-    wtimes: List[List[int]] = [[] for _ in range(g.n_fifos)]
-    rtimes: List[List[int]] = [[] for _ in range(g.n_fifos)]
-    dl = depths.tolist()
-
-    from collections import deque
-    queue = deque(range(n_segs))
-    queued = [True] * n_segs
-    kindl = kind.tolist()
-    fifol = fifo.tolist()
-    deltal = delta.tolist()
-    rankl = rank.tolist()
-    boundsl = bounds.tolist()
-
-    while queue:
-        s = queue.popleft()
-        queued[s] = False
-        i = boundsl[s] + cursor[s]
-        hi = boundsl[s + 1]
-        pt = prev_t[s]
-        woke_read: set = set()
-        woke_write: set = set()
-        while i < hi:
-            f = fifol[i]
-            ready = pt + deltal[i]
-            if kindl[i] == READ:
-                wt = wtimes[f]
-                if len(wt) <= rankl[i]:
-                    break
-                ti = wt[rankl[i]] + rd_lat[f]
-                if ready > ti:
-                    ti = ready
-                rtimes[f].append(ti)
-                woke_read.add(f)
-            else:
-                j = rankl[i]
-                d = dl[f]
-                ti = ready
-                if j >= d:
-                    rt = rtimes[f]
-                    if len(rt) <= j - d:
-                        break
-                    slot = rt[j - d] + 1
-                    if slot > ti:
-                        ti = slot
-                wtimes[f].append(ti)
-                woke_write.add(f)
-            t[i] = ti
-            pt = ti
-            cursor[s] += 1
-            i += 1
-        prev_t[s] = pt
-        for f in woke_read:     # freed slots -> wake the writer
-            ws = writer_seg[f]
-            if ws >= 0 and not queued[ws]:
-                queue.append(ws)
-                queued[ws] = True
-        for f in woke_write:    # new data -> wake the reader
-            rs = reader_seg[f]
-            if rs >= 0 and not queued[rs]:
-                queue.append(rs)
-                queued[rs] = True
-
-    for s in range(n_segs):
-        if boundsl[s] + cursor[s] < boundsl[s + 1]:
-            return -1, True
-    lat = 0
-    for ti_ in range(g.n_tasks):
-        le = int(g.last_evt[ti_])
-        base = t[le] if le >= 0 else 0
-        v = base + int(g.end_delay[ti_])
-        if v > lat:
-            lat = v
-    return lat, False
-
-
-# --------------------------------------------------------------------------
-# jnp helpers
-# --------------------------------------------------------------------------
-
-def bram_count_jnp(depths: jnp.ndarray, widths: jnp.ndarray) -> jnp.ndarray:
-    """Algorithm 1, jnp-vectorized (mirrors bram.bram_count_np)."""
-    d = depths.astype(jnp.int32)
-    w0 = jnp.broadcast_to(widths.astype(jnp.int32), d.shape)
-    n = jnp.zeros_like(d)
-    w = w0
-    for d_i, w_i in BRAM18K_CONFIGS:
-        n = n + (w // w_i) * (-(-d // d_i))
-        w = w % w_i
-        fits = (w > 0) & (d <= d_i)
-        n = n + fits.astype(jnp.int32)
-        w = jnp.where(fits, 0, w)
-    srl = (d <= SRL_DEPTH) | (d * w0 <= SRL_BITS)
-    return jnp.where(srl, 0, n)
-
-
-def _combine(x, y):
-    """Max-plus composition of f(x)=max(x+a, m) elements."""
-    a1, m1 = x
-    a2, m2 = y
-    return a1 + a2, jnp.maximum(m1 + a2, m2)
-
-
-# --------------------------------------------------------------------------
-# Batched evaluator
-# --------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class BatchStats:
     n_calls: int = 0
     n_configs: int = 0
     n_fallbacks: int = 0
+    n_incremental: int = 0
     wall_s: float = 0.0
 
 
 class BatchedEvaluator:
-    """Incremental trace-based evaluation over candidate depth matrices.
+    """Incremental trace-based evaluation over candidate depth matrices."""
 
-    Backends:
+    BUCKETS = BUCKETS
 
-    ``numpy``  (default here)  — the event-driven worklist, one config at a
-        time.  This mirrors the paper's CPU tool and is the fastest option
-        on this container (O(E) exact, ~10 ms at E=26k).
-    ``jax``    — jit(vmap) Jacobi + segmented-scan fixpoint; the TPU-native
-        formulation (DESIGN.md §6).  Tiered iteration escalation: rows not
-        converged at ``max_iters`` fall back to the worklist (deadlocked
-        rows never converge, by construction).
-    ``pallas`` — the ``kernels/fifo_eval`` kernel (interpret mode on CPU).
-
-    All three are exact and cross-validated in tests.
-    """
-
-    BUCKETS = (1, 8, 32, 128, 512, 2048)
+    #: how many solved worklist states to keep for incremental re-solves
+    STATE_CACHE_CAP = 128
 
     def __init__(self, g: SimGraph, max_iters: int = 64,
                  backend: str = "numpy", use_pallas: bool = False):
@@ -247,170 +79,102 @@ class BatchedEvaluator:
         self.stats = BatchStats()
         if use_pallas:
             backend = "pallas"
-        if backend not in ("numpy", "jax", "pallas"):
-            raise ValueError(f"unknown backend {backend!r}")
         self.backend = backend
-        self.use_pallas = backend == "pallas"
-
-        E = max(g.n_events, 1)
-        R = max(int(g.n_reads.sum()), 1)
-        self._E = E
-        self._B = float(g.latency_upper_bound())
-
-        pad_i32 = lambda a, n: np.asarray(
-            np.concatenate([a, np.zeros(max(0, n - len(a)), a.dtype)]),
-            dtype=np.int32)
-
-        self.kind = jnp.asarray(pad_i32(g.kind.astype(np.int32), E))
-        self.fifo = jnp.asarray(pad_i32(g.fifo, E))
-        self.delta = jnp.asarray(pad_i32(g.delta.astype(np.int32), E),
-                                 dtype=jnp.float32)
-        self.seg_start = jnp.asarray(pad_i32(g.seg_start.astype(np.int32), E))
-        self.rank = jnp.asarray(pad_i32(g.rank.astype(np.int32), E))
-        self.data_src = jnp.asarray(pad_i32(g.data_src.astype(np.int32), E))
-        self.read_evt_flat = jnp.asarray(
-            pad_i32(g.read_evt_flat.astype(np.int32), R))
-        self.read_base = jnp.asarray(g.read_base.astype(np.int32))
-        self.n_reads = jnp.asarray(g.n_reads.astype(np.int32))
-        self.n_writes = jnp.asarray(g.n_writes.astype(np.int32))
-        self.widths = jnp.asarray(g.widths.astype(np.int32))
-        self.last_evt = jnp.asarray(
-            np.maximum(g.last_evt, 0).astype(np.int32))
-        self.has_evt = jnp.asarray((g.last_evt >= 0))
-        self.end_delay = jnp.asarray(g.end_delay.astype(np.int32),
-                                     dtype=jnp.float32)
-        # Real (unpadded) event mask.
-        self.evt_mask = jnp.asarray(
-            (np.arange(E) < g.n_events))
-
-        if self.use_pallas:
-            from repro.kernels.fifo_eval import ops as fifo_ops
-            self._pallas_eval = fifo_ops.make_batched_eval(
-                self, interpret=True)
-
-        self._jit_cache: Dict[int, callable] = {}
-
-    # ------------------------------------------------------------------
-    def _eval_one(self, depths: jnp.ndarray):
-        """(F,) int32 depths -> (latency f32, bram i32, status i8, iters)."""
-        g = self
-        depths = depths.astype(jnp.int32)
-        widths = g.widths
-        is_bram = ~((depths <= SRL_DEPTH) | (depths * widths <= SRL_BITS))
-        rd_lat_f = 1.0 + is_bram.astype(jnp.float32)
-
-        fifo = g.fifo
-        is_read = (g.kind == READ) & g.evt_mask
-        is_write = (g.kind == WRITE) & g.evt_mask
-
-        # back-pressure gather indices (depth-dependent)
-        bp_pos = g.rank - depths[fifo]
-        overrun = is_write & (bp_pos >= g.n_reads[fifo])
-        structural_deadlock = jnp.any(overrun)
-        bp_valid = is_write & (bp_pos >= 0) & ~overrun
-        flat_idx = jnp.clip(g.read_base[fifo] + bp_pos, 0,
-                            g.read_evt_flat.shape[0] - 1)
-        bp_idx = g.read_evt_flat[flat_idx]
-
-        data_idx = jnp.clip(g.data_src, 0, g._E - 1)
-        has_data = is_read & (g.data_src >= 0)
-        rd_lat_e = rd_lat_f[fifo]
-
-        neg = -BIG
-        a_base = jnp.where(g.seg_start == 1, neg, g.delta)
-
-        def step(t):
-            b_read = jnp.where(has_data, t[data_idx] + rd_lat_e, neg)
-            b_write = jnp.where(bp_valid, t[bp_idx] + 1.0, neg)
-            b = jnp.where(is_read, b_read, b_write)
-            m = jnp.where(g.seg_start == 1, jnp.maximum(b, g.delta), b)
-            A, M = lax.associative_scan(_combine, (a_base, m))
-            return jnp.maximum(A, M)
-
-        def cond(state):
-            t, prev, it, conv = state
-            over = jnp.max(t) > g._B
-            return (~conv) & (it < g.max_iters) & (~over)
-
-        def body(state):
-            t, prev, it, _ = state
-            t2 = step(t)
-            return t2, t, it + 1, jnp.all(t2 == t)
-
-        t0 = jnp.zeros(g._E, dtype=jnp.float32)
-        t, _, iters, conv = lax.while_loop(
-            cond, body, (step(t0), t0, jnp.int32(1), jnp.bool_(False)))
-
-        over = jnp.max(t) > g._B
-        status = jnp.where(
-            structural_deadlock | over, DEADLOCK,
-            jnp.where(conv, CONVERGED, UNRESOLVED)).astype(jnp.int8)
-
-        t_last = jnp.where(g.has_evt, t[g.last_evt], 0.0)
-        latency = jnp.max(t_last + g.end_delay)
-        bram = jnp.sum(bram_count_jnp(depths, widths)).astype(jnp.int32)
-        return latency, bram, status, iters
-
-    def _get_jit(self, c: int):
-        fn = self._jit_cache.get(c)
-        if fn is None:
-            fn = jax.jit(jax.vmap(self._eval_one))
-            self._jit_cache[c] = fn
-        return fn
+        self._impl = get_backend(backend)(max_iters=self.max_iters)
+        self._impl.prepare(g)
+        if isinstance(self._impl, WorklistBackend):
+            self._worklist = self._impl
+        else:
+            self._worklist = WorklistBackend(max_iters=self.max_iters)
+            self._worklist.prepare(g)
+        self.use_pallas = self._impl.name == "pallas"
+        self.dispatch = DispatchPolicy(self._worklist)
+        self._states: "OrderedDict[bytes, WorklistState]" = OrderedDict()
 
     # ------------------------------------------------------------------
     def evaluate(self, depth_matrix: np.ndarray
                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(C, F) int depths -> (latency int64, bram int64, deadlock bool).
 
-        Pads C up to a bucket size, runs the jitted batched evaluator, and
-        resolves UNRESOLVED rows exactly with ``evaluate_np``.
+        Routes through the dispatch policy: bucket-padded jit reuse for the
+        batched backends, exact worklist escalation for UNRESOLVED rows,
+        and -1 latency on deadlocked rows.
         """
-        depth_matrix = np.asarray(depth_matrix, dtype=np.int32)
-        if depth_matrix.ndim == 1:
-            depth_matrix = depth_matrix[None, :]
-        C = depth_matrix.shape[0]
+        depth_matrix = np.atleast_2d(np.asarray(depth_matrix))
         t_start = time.perf_counter()
+        lat, bram, dead = self.dispatch.dispatch(
+            self._impl, depth_matrix, self.stats)
+        self.stats.n_calls += 1
+        self.stats.n_configs += depth_matrix.shape[0]
+        self.stats.wall_s += time.perf_counter() - t_start
+        return lat, bram, dead
 
-        if self.backend == "numpy":
-            lat = np.zeros(C, dtype=np.int64)
-            dead = np.zeros(C, dtype=bool)
-            for i in range(C):
-                lat[i], dead[i] = evaluate_np(self.g, depth_matrix[i])
-            bram = design_bram_np(depth_matrix.astype(np.int64),
-                                  np.asarray(self.g.widths))
+    # ------------------------------------------------ incremental fast path
+    @property
+    def prefer_incremental(self) -> bool:
+        """Whether single-FIFO-move searches should use the delta path.
+
+        The incremental worklist always *works*, but only clearly wins when
+        the primary backend is the worklist itself; batched backends may
+        amortize better on real accelerators.
+        """
+        return self._impl is self._worklist
+
+    def _state_for(self, depths: np.ndarray) -> WorklistState:
+        key = depths.tobytes()
+        st = self._states.get(key)
+        if st is None:
+            st = self._worklist.solve(depths)
+            self._remember(key, st)
         else:
-            if self.backend == "pallas":
-                lat, bram, status = self._pallas_eval(depth_matrix)
+            self._states.move_to_end(key)
+        return st
+
+    def _remember(self, key: bytes, st: WorklistState):
+        self._states[key] = st
+        self._states.move_to_end(key)
+        while len(self._states) > self.STATE_CACHE_CAP:
+            self._states.popitem(last=False)
+
+    def evaluate_incremental(self, base_depths: Optional[np.ndarray],
+                             depth_matrix: np.ndarray
+                             ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Incremental (latency, bram, deadlock) against base config(s).
+
+        ``base_depths`` is one (F,) base row, a (C, F) per-row base matrix,
+        or None (full solves, states cached for future deltas).  Each row is
+        re-solved only over the task segments transitively coupled to the
+        FIFOs that differ from its base — the LightningSim primitive.
+        """
+        m = np.atleast_2d(np.asarray(depth_matrix, dtype=np.int64))
+        C = m.shape[0]
+        base = None
+        if base_depths is not None:
+            base = np.atleast_2d(np.asarray(base_depths, dtype=np.int64))
+            if base.shape[0] == 1 and C > 1:
+                base = np.broadcast_to(base, m.shape)
+        t_start = time.perf_counter()
+        lat = np.zeros(C, dtype=np.int64)
+        dead = np.zeros(C, dtype=bool)
+        for i in range(C):
+            if base is None:
+                st = self._state_for(m[i])
             else:
-                bucket = next((b for b in self.BUCKETS if b >= C), None)
-                padded = depth_matrix
-                if bucket is not None and bucket != C:
-                    pad = np.repeat(depth_matrix[-1:], bucket - C, axis=0)
-                    padded = np.concatenate([depth_matrix, pad], axis=0)
-                fn = self._get_jit(padded.shape[0])
-                lat, bram, status, _ = jax.device_get(
-                    fn(jnp.asarray(padded)))
-                lat, bram, status = lat[:C], bram[:C], status[:C]
-
-            lat = np.asarray(np.rint(lat), dtype=np.int64)
-            bram = np.asarray(bram, dtype=np.int64)
-            dead = np.asarray(status) == DEADLOCK
-            # Tiered escalation: anything not classified at the iteration
-            # cap (deadlocks never converge; rare slow-converging feasible
-            # rows) is resolved exactly by the worklist.
-            unresolved = np.flatnonzero(np.asarray(status) == UNRESOLVED)
-            for i in unresolved:
-                l, dd = evaluate_np(self.g, depth_matrix[i])
-                lat[i] = l
-                dead[i] = dd
-                self.stats.n_fallbacks += 1
-
+                base_st = self._state_for(base[i])
+                st = self._worklist.solve_delta(base_st, m[i])
+                self._remember(m[i].tobytes(), st)
+            lat[i] = st.latency
+            dead[i] = st.deadlocked
+        bram = design_bram_np(m, np.asarray(self.g.widths))
         self.stats.n_calls += 1
         self.stats.n_configs += C
+        self.stats.n_incremental += C
         self.stats.wall_s += time.perf_counter() - t_start
-        lat = np.where(dead, -1, lat)
         return lat, bram, dead
+
+    @property
+    def incr_stats(self):
+        return self._worklist.incr_stats
 
     # convenience -------------------------------------------------------
     def evaluate_one(self, depths: np.ndarray) -> Tuple[int, int, bool]:

@@ -1,13 +1,18 @@
-"""jit'd wrapper around the fifo_eval Pallas kernel.
+"""jit'd wrapper around the fifo_eval fixpoint implementations.
 
-Builds the padded, lane-aligned event tensors from a
-:class:`~repro.core.simgraph.SimGraph` once, then exposes a callable
-``(C, F) int depths -> (latency, bram, status)`` that computes the
+Consumes the shared lane-aligned event tensors from
+:mod:`repro.core.backends.operands` (built once per graph) and exposes a
+callable ``(C, F) int depths -> (latency, bram, status)``.  The
 depth-dependent per-config operands (read latencies, back-pressure gather
-indices) in stock jnp and launches the kernel for the heavy fixpoint.
+indices) come from the shared :func:`~repro.core.backends.operands
+.depth_operands`; only the heavy fixpoint differs between inners:
 
-The same factory can wrap either the kernel (``use_ref=False``) or the
-pure-jnp oracle in :mod:`repro.kernels.fifo_eval.ref` — tests diff the two.
+``use_ref=False``  the Pallas kernel (:mod:`repro.kernels.fifo_eval
+                   .fifo_eval`), interpret mode on CPU
+``use_ref=True``   the pure-jnp oracle (:mod:`repro.kernels.fifo_eval.ref`),
+                   which is also the ``fixpoint`` backend's implementation
+
+Tests diff the two against each other and against the numpy worklist.
 """
 
 from __future__ import annotations
@@ -20,108 +25,53 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.bram import SRL_BITS, SRL_DEPTH
-from repro.core.design import READ, WRITE
-from repro.core.simulate import (CONVERGED, DEADLOCK, UNRESOLVED,
-                                 bram_count_jnp)
-from repro.kernels.fifo_eval.fifo_eval import NEG, fifo_eval_pallas
+from repro.core.backends.base import CONVERGED, DEADLOCK, UNRESOLVED
+from repro.core.backends.operands import (bram_count_jnp, depth_operands,
+                                          get_operands)
+from repro.core.simgraph import SimGraph
+from repro.kernels.fifo_eval.fifo_eval import fifo_eval_pallas
 from repro.kernels.fifo_eval.ref import fifo_eval_ref
 
 
-def make_batched_eval(ev, interpret: bool = True, use_ref: bool = False,
+def make_batched_eval(ev_or_graph, interpret: bool = True,
+                      use_ref: bool = False,
                       max_iters: int = None) -> Callable:
-    """Build the batched evaluation closure for ``ev.g`` (a SimGraph)."""
-    g = ev.g
-    max_iters = int(max_iters if max_iters is not None else ev.max_iters)
-    bound = float(g.latency_upper_bound())
+    """Build the batched evaluation closure for a SimGraph.
 
-    E = g.n_events
-    E_pad = max(128, -(-max(E, 1) // 128) * 128)
-
-    def padded(a, fill, dtype):
-        out = np.full(E_pad, fill, dtype=dtype)
-        out[:E] = a
-        return out
-
-    kind = padded(g.kind, READ, np.int32)          # pad kind irrelevant
-    fifo_np = padded(g.fifo, 0, np.int64)
-    delta = padded(g.delta, 0, np.float32)
-    seg_start = padded(g.seg_start, 0, np.float32)
-    if E < E_pad:
-        seg_start[E] = 1.0                          # isolate the pad chain
-    rank = padded(g.rank, 0, np.int64)
-    data_src = padded(g.data_src, -1, np.int64)
-
-    is_read = ((kind == READ) & (np.arange(E_pad) < E)).astype(np.float32)
-    is_write = ((kind == WRITE) & (np.arange(E_pad) < E))
-    has_data = ((data_src >= 0) & (is_read > 0)).astype(np.float32)
-    data_idx = np.clip(data_src, 0, E_pad - 1).astype(np.int32)
-
-    end_bonus = np.full(E_pad, float(NEG), dtype=np.float32)
-    taskless_lat = 0.0
-    for t in range(g.n_tasks):
-        le = int(g.last_evt[t])
-        if le >= 0:
-            end_bonus[le] = float(g.end_delay[t])
-        else:
-            taskless_lat = max(taskless_lat, float(g.end_delay[t]))
-
-    R = max(int(g.n_reads.sum()), 1)
-    read_evt_flat = np.zeros(R, dtype=np.int64)
-    read_evt_flat[:len(g.read_evt_flat)] = g.read_evt_flat
-
-    consts = dict(
-        delta=jnp.asarray(delta)[None, :],
-        segst=jnp.asarray(seg_start)[None, :],
-        is_read=jnp.asarray(is_read)[None, :],
-        has_data=jnp.asarray(has_data)[None, :],
-        data_idx=jnp.asarray(data_idx)[None, :],
-        end_bonus=jnp.asarray(end_bonus)[None, :],
-    )
-    fifo_j = jnp.asarray(fifo_np, dtype=jnp.int32)
-    rank_j = jnp.asarray(rank, dtype=jnp.int32)
-    widths_j = jnp.asarray(g.widths, dtype=jnp.int32)
-    n_reads_j = jnp.asarray(g.n_reads, dtype=jnp.int32)
-    read_base_j = jnp.asarray(g.read_base, dtype=jnp.int32)
-    read_flat_j = jnp.asarray(read_evt_flat, dtype=jnp.int32)
-    is_write_j = jnp.asarray(is_write)
+    Accepts either a :class:`~repro.core.simgraph.SimGraph` or any object
+    with ``.g`` / ``.max_iters`` (e.g. a ``BatchedEvaluator``).
+    """
+    g: SimGraph = getattr(ev_or_graph, "g", ev_or_graph)
+    if max_iters is None:
+        max_iters = getattr(ev_or_graph, "max_iters", 64)
+    max_iters = int(max_iters)
+    ops = get_operands(g)
 
     inner = fifo_eval_ref if use_ref else functools.partial(
         fifo_eval_pallas, interpret=interpret)
 
     @jax.jit
     def run(depths):                     # (C, F) int32
-        depths = depths.astype(jnp.int32)
-        is_bram = ~((depths <= SRL_DEPTH) | (depths * widths_j <= SRL_BITS))
-        rd_lat_f = 1.0 + is_bram.astype(jnp.float32)      # (C, F)
-        rd_lat_e = rd_lat_f[:, fifo_j]                    # (C, E_pad)
-
-        bp_pos = rank_j[None, :] - depths[:, fifo_j]      # (C, E_pad)
-        overrun = is_write_j[None, :] & (bp_pos >= n_reads_j[fifo_j][None, :])
-        structural = jnp.any(overrun, axis=1)             # (C,)
-        bp_valid = (is_write_j[None, :] & (bp_pos >= 0) & ~overrun
-                    ).astype(jnp.float32)
-        flat = jnp.clip(read_base_j[fifo_j][None, :] + bp_pos, 0, R - 1)
-        bp_idx = read_flat_j[flat]                        # (C, E_pad)
-
-        out = inner(consts["delta"], consts["segst"], consts["is_read"],
-                    consts["has_data"], consts["data_idx"],
-                    consts["end_bonus"],
+        rd_lat_e, bp_idx, bp_valid, structural = depth_operands(ops, depths)
+        out = inner(ops.delta, ops.seg_start, ops.is_read,
+                    ops.has_data, ops.data_idx, ops.end_bonus,
                     rd_lat_e, bp_idx, bp_valid,
-                    max_iters=max_iters, bound=bound)
-        lat = jnp.maximum(out[:, 0], taskless_lat)
+                    max_iters=max_iters, bound=ops.bound)
+        lat = jnp.maximum(out[:, 0], ops.taskless_lat)
         conv = out[:, 1] > 0
         over = out[:, 2] > 0
         status = jnp.where(
             structural | over, DEADLOCK,
             jnp.where(conv, CONVERGED, UNRESOLVED)).astype(jnp.int8)
-        bram = jnp.sum(bram_count_jnp(depths, widths_j[None, :]),
+        bram = jnp.sum(bram_count_jnp(depths.astype(jnp.int32),
+                                      ops.widths[None, :]),
                        axis=1).astype(jnp.int32)
         return lat, bram, status
 
     def call(depth_matrix: np.ndarray
              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        lat, bram, status = jax.device_get(run(jnp.asarray(depth_matrix)))
+        lat, bram, status = jax.device_get(
+            run(jnp.asarray(depth_matrix, dtype=jnp.int32)))
         return lat, bram, status
 
     return call

@@ -1,0 +1,167 @@
+"""Minimal stand-in for the ``hypothesis`` property-testing API.
+
+The test suite declares ``hypothesis`` as a test dependency (see
+``pyproject.toml``), but some execution environments cannot install it.
+``conftest.py`` registers this shim in ``sys.modules`` *only when the real
+package is missing*, so the suite always collects and runs.
+
+Semantics: each ``@given`` test runs ``max_examples`` times (default 25)
+against values drawn from a deterministically seeded RNG (seeded from the
+test's qualified name), so failures are reproducible run-to-run.  This is
+deliberately simpler than real hypothesis — no shrinking, no database, no
+adaptive search — but exercises the same property over a comparable sample
+of the input space.
+
+Implements exactly the surface this repo's tests use: ``given``,
+``settings``, and the ``strategies`` (``st``) members ``integers``,
+``floats``, ``lists``, ``tuples``, ``sampled_from``, and ``composite``.
+"""
+
+from __future__ import annotations
+
+import random
+import sys
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 25
+
+__version__ = "0.0-shim"
+
+
+class SearchStrategy:
+    """Base strategy: subclasses draw one example from an RNG."""
+
+    def example(self, rng: random.Random):
+        raise NotImplementedError
+
+    def map(self, fn):
+        return _Mapped(self, fn)
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, inner, fn):
+        self.inner = inner
+        self.fn = fn
+
+    def example(self, rng):
+        return self.fn(self.inner.example(rng))
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value, max_value):
+        self.min_value = int(min_value)
+        self.max_value = int(max_value)
+
+    def example(self, rng):
+        return rng.randint(self.min_value, self.max_value)
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value, max_value):
+        self.min_value = float(min_value)
+        self.max_value = float(max_value)
+
+    def example(self, rng):
+        return rng.uniform(self.min_value, self.max_value)
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def example(self, rng):
+        return rng.choice(self.elements)
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements, min_size=0, max_size=None):
+        self.elements = elements
+        self.min_size = int(min_size)
+        self.max_size = int(max_size if max_size is not None
+                            else min_size + 10)
+
+    def example(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        return [self.elements.example(rng) for _ in range(n)]
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, *strategies):
+        self.strategies = strategies
+
+    def example(self, rng):
+        return tuple(s.example(rng) for s in self.strategies)
+
+
+class _Composite(SearchStrategy):
+    def __init__(self, fn, args, kwargs):
+        self.fn = fn
+        self.args = args
+        self.kwargs = kwargs
+
+    def example(self, rng):
+        def draw(strategy):
+            return strategy.example(rng)
+        return self.fn(draw, *self.args, **self.kwargs)
+
+
+def composite(fn):
+    def builder(*args, **kwargs):
+        return _Composite(fn, args, kwargs)
+    return builder
+
+
+def settings(max_examples: int = None, deadline=None, **_ignored):
+    """Decorator recording run options for ``given`` (subset of the real
+    API; unknown options are accepted and ignored)."""
+    def decorate(fn):
+        opts = dict(getattr(fn, "_shim_settings", {}))
+        if max_examples is not None:
+            opts["max_examples"] = int(max_examples)
+        fn._shim_settings = opts
+        return fn
+    return decorate
+
+
+def given(*arg_strategies, **kw_strategies):
+    def decorate(fn):
+        opts = getattr(fn, "_shim_settings", {})
+        n = opts.get("max_examples", DEFAULT_MAX_EXAMPLES)
+        seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+
+        def runner():
+            rng = random.Random(seed)
+            for _ in range(n):
+                args = [s.example(rng) for s in arg_strategies]
+                kwargs = {k: s.example(rng)
+                          for k, s in kw_strategies.items()}
+                fn(*args, **kwargs)
+
+        # NOTE: no functools.wraps — pytest must see a zero-arg signature,
+        # not the wrapped function's strategy parameters (it would try to
+        # resolve them as fixtures).
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        runner.__qualname__ = fn.__qualname__
+        runner.hypothesis_shim = True
+        return runner
+    return decorate
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _Integers
+strategies.floats = _Floats
+strategies.lists = _Lists
+strategies.tuples = _Tuples
+strategies.sampled_from = _SampledFrom
+strategies.composite = composite
+strategies.SearchStrategy = SearchStrategy
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` in ``sys.modules``."""
+    shim = sys.modules[__name__]
+    sys.modules.setdefault("hypothesis", shim)
+    sys.modules.setdefault("hypothesis.strategies", strategies)

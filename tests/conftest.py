@@ -7,3 +7,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # NOTE: no xla_force_host_platform_device_count here — smoke tests and
 # benches must see the 1-device default; only launch/dryrun.py (run as a
 # subprocess) requests 512 host devices.
+
+# Property tests use hypothesis; fall back to the vendored shim when the
+# real package is not installed (some execution environments cannot pip
+# install).  The real package always wins when present.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_shim
+    _hypothesis_shim.install()

@@ -1,0 +1,252 @@
+"""Unified evaluation-backend subsystem: cross-backend equivalence, the
+dispatch policy, the vectorized config cache, and the incremental
+re-simulation fast path.
+
+The three registered backends (numpy worklist, jit/vmap fixpoint scan,
+Pallas kernel in interpret mode) share operand preparation but differ in
+the entire solve; exact agreement on randomized designs — latency, BRAM,
+and deadlock — is the subsystem's core invariant.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import build_simgraph
+from repro.core.backends import (ConfigCache, available_backends,
+                                 get_backend)
+from repro.core.backends import worklist as wl
+from repro.core.design import Design
+from repro.core.optimizers import EvalContext
+from repro.core.simulate import BatchedEvaluator
+from repro.designs.builder import map_stage, producer, sink, streams
+from repro.designs.ddcf import mult_by_2
+
+
+def random_chain(seed: int) -> Design:
+    """Random producer -> k map stages -> sink chain (always sequentially
+    executable; arbitrary rate mismatches and lane counts)."""
+    rng = np.random.default_rng(seed)
+    count = int(rng.integers(4, 32))
+    k = int(rng.integers(1, 4))
+    lanes = int(rng.choice([1, 2]))
+    d = Design(f"chain{seed}")
+    cur = streams(d, "s0", lanes)
+    producer(d, "prod", cur, [1.0] * count, ii=int(rng.integers(1, 4)),
+             start_delay=int(rng.integers(0, 6)))
+    for i in range(k):
+        nxt = streams(d, f"s{i + 1}", lanes)
+        map_stage(d, f"m{i}", cur, nxt, count, ii=int(rng.integers(1, 4)),
+                  extra_delay=int(rng.integers(0, 5)))
+        cur = nxt
+    sink(d, "sink", cur, count, ii=int(rng.integers(1, 4)))
+    return d
+
+
+def test_registry_has_three_canonical_backends():
+    assert set(available_backends()) == {"worklist", "fixpoint", "pallas"}
+    # aliases resolve to the same classes
+    assert get_backend("numpy") is get_backend("worklist")
+    assert get_backend("jax") is get_backend("fixpoint")
+    with pytest.raises(ValueError):
+        get_backend("nope")
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_backend_equivalence_on_random_designs(seed):
+    """worklist == fixpoint == pallas(interpret) on randomized designs and
+    randomized depth matrices (latency, BRAM, and deadlock)."""
+    d = random_chain(seed)
+    g = build_simgraph(d)
+    rng = np.random.default_rng(seed + 100)
+    u = g.upper_bounds
+    cfgs = np.stack([u, np.full(g.n_fifos, 2)] +
+                    [rng.integers(2, np.maximum(3, u + 1))
+                     for _ in range(6)])
+    results = {}
+    for backend in ("numpy", "jax", "pallas"):
+        ev = BatchedEvaluator(g, backend=backend, max_iters=128)
+        results[backend] = ev.evaluate(cfgs)
+    for backend in ("jax", "pallas"):
+        for a, b in zip(results["numpy"], results[backend]):
+            np.testing.assert_array_equal(a, b, err_msg=backend)
+
+
+def test_backend_equivalence_on_known_deadlock():
+    """mult_by_2(n) deadlocks iff depth(x) < n - 1; every backend must
+    agree on both sides of the boundary."""
+    d = mult_by_2(16)
+    g = build_simgraph(d)
+    cfgs = np.array([[14, 2], [15, 2], [16, 2], [2, 2]])
+    expect_dead = np.array([True, False, False, True])
+    for backend in ("numpy", "jax", "pallas"):
+        ev = BatchedEvaluator(g, backend=backend, max_iters=128)
+        _, _, dead = ev.evaluate(cfgs)
+        np.testing.assert_array_equal(dead, expect_dead, err_msg=backend)
+
+
+def test_dispatch_escalates_unresolved_rows():
+    """A tiny iteration cap forces UNRESOLVED rows; the dispatch policy
+    must escalate them to the worklist and still return exact results."""
+    d = mult_by_2(24)
+    g = build_simgraph(d)
+    ev = BatchedEvaluator(g, backend="jax", max_iters=3)
+    lat, _, dead = ev.evaluate(np.array([[24, 2], [2, 2]]))
+    assert ev.stats.n_fallbacks >= 1
+    ref_lat, ref_dead = wl.evaluate_np(g, np.array([24, 2]))
+    assert not dead[0] and int(lat[0]) == ref_lat
+    assert bool(dead[1])
+
+
+def test_dispatch_bucket_padding_matches_unpadded():
+    """Bucketing pads C to fixed jit shapes; results must be identical to
+    evaluating the exact batch."""
+    d = random_chain(3)
+    g = build_simgraph(d)
+    rng = np.random.default_rng(3)
+    u = g.upper_bounds
+    cfgs = np.stack([rng.integers(2, np.maximum(3, u + 1))
+                     for _ in range(5)])     # 5 -> bucket 8
+    ev = BatchedEvaluator(g, backend="jax", max_iters=128)
+    ev_ref = BatchedEvaluator(g, backend="numpy")
+    for a, b in zip(ev.evaluate(cfgs), ev_ref.evaluate(cfgs)):
+        np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------------------ incremental
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_incremental_random_walk_matches_full(seed):
+    """Chained single/multi-FIFO deltas agree with full solves at every
+    step, including deadlocked intermediate states as bases."""
+    d = random_chain(seed + 10)
+    g = build_simgraph(d)
+    rng = np.random.default_rng(seed)
+    F = g.n_fifos
+    u = np.maximum(g.upper_bounds, 3)
+    state = wl.solve(g, np.maximum(2, u))
+    for step in range(30):
+        nxt = state.depths.copy()
+        for _ in range(int(rng.integers(1, 3))):
+            f = int(rng.integers(0, F))
+            nxt[f] = int(rng.integers(1, u[f] + 2))
+        state = wl.solve_delta(g, state, nxt)
+        full = wl.solve(g, nxt)
+        assert state.deadlocked == full.deadlocked, step
+        assert state.latency == full.latency, step
+        np.testing.assert_array_equal(state.t, full.t)
+        np.testing.assert_array_equal(state.seg_cursor, full.seg_cursor)
+
+
+def test_incremental_from_deadlocked_base():
+    d = mult_by_2(24)
+    g = build_simgraph(d)
+    base = wl.solve(g, np.array([2, 2]))
+    assert base.deadlocked
+    st = wl.solve_delta(g, base, np.array([40, 2]))
+    full = wl.solve(g, np.array([40, 2]))
+    assert (st.latency, st.deadlocked) == (full.latency, full.deadlocked)
+    assert not st.deadlocked
+
+
+def test_evaluator_incremental_api_matches_evaluate():
+    d = mult_by_2(24)
+    g = build_simgraph(d)
+    ev = BatchedEvaluator(g, backend="numpy")
+    base = np.array([40, 2])
+    trials = np.array([[24, 2], [2, 2], [40, 8]])
+    lat_i, bram_i, dead_i = ev.evaluate_incremental(base, trials)
+    lat_f, bram_f, dead_f = ev.evaluate(trials)
+    np.testing.assert_array_equal(lat_i, np.where(dead_f, -1, lat_f))
+    np.testing.assert_array_equal(bram_i, bram_f)
+    np.testing.assert_array_equal(dead_i, dead_f)
+    assert ev.stats.n_incremental == 3
+
+
+def test_advisor_incremental_latency_chain():
+    from repro.core import FifoAdvisor
+    adv = FifoAdvisor(mult_by_2(32))
+    lat, dead = adv.incremental_latency(np.array([40, 2]))
+    assert not dead and lat > 0
+    # second call deltas against the first config implicitly
+    lat2, dead2 = adv.incremental_latency(np.array([40, 4]))
+    ref, refd = wl.evaluate_np(adv.graph, np.array([40, 4]))
+    assert (lat2, dead2) == (ref, refd)
+    assert adv.evaluator.incr_stats.n_delta >= 1
+
+
+# ------------------------------------------------------------- ConfigCache
+
+def test_config_cache_hits_and_exactness():
+    cache = ConfigCache(n_fifos=3)
+    m = np.array([[2, 3, 4], [5, 6, 7], [2, 3, 4]])
+    lat, bram, dead, miss = cache.lookup(m)
+    assert miss.all()
+    cache.insert(m, np.array([10, 20, 10]), np.array([1, 2, 1]),
+                 np.array([False, True, False]))
+    lat, bram, dead, miss = cache.lookup(m)
+    assert not miss.any()
+    np.testing.assert_array_equal(lat, [10, 20, 10])
+    np.testing.assert_array_equal(bram, [1, 2, 1])
+    np.testing.assert_array_equal(dead, [False, True, False])
+    assert cache.stats.hits == 3 and cache.stats.misses == 3
+    # unseen rows still miss
+    _, _, _, miss = cache.lookup(np.array([[9, 9, 9]]))
+    assert miss.all()
+
+
+def test_config_cache_grows_past_initial_capacity():
+    cache = ConfigCache(n_fifos=2, initial_capacity=16)
+    rng = np.random.default_rng(0)
+    m = rng.integers(2, 1000, size=(200, 2))
+    m = np.unique(m, axis=0)
+    cache.insert(m, np.arange(len(m)), np.arange(len(m)),
+                 np.zeros(len(m), dtype=bool))
+    lat, _, _, miss = cache.lookup(m)
+    assert not miss.any()
+    np.testing.assert_array_equal(lat, np.arange(len(m)))
+
+
+def test_eval_context_budget_counts_only_misses():
+    """Satellite fix: cache hits must not burn simulator budget."""
+    d = mult_by_2(16)
+    g = build_simgraph(d)
+    ctx = EvalContext(g)
+    m = np.array([[15, 2], [15, 3]])
+    ctx.evaluate(m)
+    assert ctx.n_evals == 2
+    ctx.evaluate(m)                      # pure cache hits
+    assert ctx.n_evals == 2
+    assert ctx.cache.stats.hits == 2
+    # history still records the hit rows (frontier bookkeeping)
+    assert sum(c.shape[0] for c in ctx._configs) == 4
+
+
+def test_shared_cache_across_contexts():
+    """The advisor-level cache is shared: a second optimizer context gets
+    hits for configs the first one evaluated."""
+    d = mult_by_2(16)
+    g = build_simgraph(d)
+    ev = BatchedEvaluator(g)
+    cache = ConfigCache(g.n_fifos)
+    ctx1 = EvalContext(g, ev, cache=cache)
+    ctx2 = EvalContext(g, ev, cache=cache)
+    m = np.array([[15, 2]])
+    ctx1.evaluate(m)
+    ctx2.evaluate(m)
+    assert ctx2.n_evals == 0
+    assert cache.stats.hits == 1
+
+
+def test_depths_from_group_indices_initializes_all_columns():
+    """Satellite fix: FIFOs outside every group get their largest
+    candidate depth, not uninitialized memory."""
+    d = mult_by_2(16)
+    g = build_simgraph(d)
+    ctx = EvalContext(g)
+    # simulate a design whose groups don't cover fifo 1
+    ctx.groups = [np.array([0])]
+    ctx.group_grid_sizes = np.array([ctx.grid_sizes[0]])
+    out = ctx.depths_from_group_indices(np.array([[0], [1]]))
+    assert out.shape == (2, g.n_fifos)
+    expected = ctx.candidates[1][-1]
+    np.testing.assert_array_equal(out[:, 1], [expected, expected])
