@@ -8,7 +8,6 @@ DES, so the expected diff is exactly 0 — any nonzero diff is a bug.
 
 from __future__ import annotations
 
-import time
 from typing import Dict
 
 import numpy as np

@@ -9,7 +9,6 @@ pallas — the fifo_eval kernel in interpret mode (correctness-grade only on
 
 from __future__ import annotations
 
-import time
 from typing import Dict
 
 import numpy as np

@@ -1,0 +1,172 @@
+"""Campaign throughput vs the sequential per-(design, optimizer) loop.
+
+Measures the same workload — every design x optimizer pair at the same
+budget/seed — three ways:
+
+``campaign_pool``    the campaign engine, parallel worklist workers
+``campaign_inline``  the campaign engine, single-process evaluation
+``seq_fresh``        the status quo this PR replaces: one
+                     ``FifoAdvisor(design).run(optimizer)`` at a time
+                     (fresh advisor per pair — no shared trace, no shared
+                     cache)
+``seq_shared``       a stronger hand-rolled loop: one advisor per design
+                     reused across optimizers (shared trace + cache)
+
+All modes must produce IDENTICAL per-task frontiers (asserted) — the
+campaign only reroutes evaluation, it never changes results.
+
+Timing protocol: the host may be noisy, so every repeat measures all
+modes back-to-back, the order alternates between repeats, speedups are
+computed per repeat (same-window ratio), and the reported number is the
+median across repeats.
+
+Optimizer set: row-count-budgeted optimizers only, so budget accounting
+(and therefore the search trajectory) is independent of cache hit/miss
+history and every mode provably walks the same trajectory.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import budget, design_set, full_mode, save_json
+
+OPTIMIZERS = ("grouped_sa", "grouped_random", "sa", "random")
+
+
+def _campaign(designs, opts, bdg, workers: int) -> Dict:
+    from repro.core.campaign import Campaign, CampaignSpec
+    spec = CampaignSpec(designs=tuple(designs), optimizers=tuple(opts),
+                        budget=bdg, seed=0, workers=workers)
+    t0 = time.perf_counter()
+    store = Campaign(spec).run()
+    wall = time.perf_counter() - t0
+    return {"wall_s": wall,
+            "frontiers": {k: store[k].frontier_points
+                          for k in store.keys()},
+            "hypervolumes": store.hypervolumes(),
+            "n_evals": store.total_evals()}
+
+
+def _sequential(designs, opts, bdg, shared: bool) -> Dict:
+    from repro.core import FifoAdvisor
+    from repro.designs import make_design
+    t0 = time.perf_counter()
+    frontiers, hvs, n_evals = {}, {}, 0
+    if shared:
+        for d in designs:
+            adv = FifoAdvisor(make_design(d))
+            for o in opts:
+                r = adv.run(o, budget=bdg, seed=0)
+                frontiers[f"{d}:{o}:s0"] = r.frontier_points
+                hvs[f"{d}:{o}:s0"] = r.hypervolume()
+                n_evals += r.result.n_evals
+    else:
+        for d in designs:
+            for o in opts:
+                adv = FifoAdvisor(make_design(d))
+                r = adv.run(o, budget=bdg, seed=0)
+                frontiers[f"{d}:{o}:s0"] = r.frontier_points
+                hvs[f"{d}:{o}:s0"] = r.hypervolume()
+                n_evals += r.result.n_evals
+    return {"wall_s": time.perf_counter() - t0, "frontiers": frontiers,
+            "hypervolumes": hvs, "n_evals": n_evals}
+
+
+def run(repeats: int = 3) -> Dict:
+    from repro.core.campaign import default_workers
+    designs = design_set()
+    if not full_mode():
+        designs = designs[:4]   # campaigns over the full set take long
+    bdg = budget()
+    workers = default_workers()
+
+    modes = {
+        "campaign_pool": lambda: _campaign(designs, OPTIMIZERS, bdg,
+                                           workers),
+        "campaign_inline": lambda: _campaign(designs, OPTIMIZERS, bdg, 0),
+        "seq_fresh": lambda: _sequential(designs, OPTIMIZERS, bdg,
+                                         shared=False),
+        "seq_shared": lambda: _sequential(designs, OPTIMIZERS, bdg,
+                                          shared=True),
+    }
+    order = list(modes)
+    walls: Dict[str, list] = {m: [] for m in modes}
+    reference = None
+    for rep in range(repeats):
+        # alternate order so slow host periods hit every mode equally
+        seq = order if rep % 2 == 0 else order[::-1]
+        for mode in seq:
+            out = modes[mode]()
+            walls[mode].append(out["wall_s"])
+            if reference is None:
+                reference = out
+            else:
+                assert set(out["frontiers"]) == set(
+                    reference["frontiers"])
+                for k, pts in out["frontiers"].items():
+                    assert np.array_equal(pts, reference["frontiers"][k]), \
+                        f"frontier mismatch in {mode} for {k}"
+
+    def median(xs):
+        return float(np.median(xs))
+
+    # per-repeat same-window ratios, then the median ratio
+    def ratio(a: str, b: str):
+        return median([wa / wb for wa, wb in zip(walls[a], walls[b])])
+
+    summary = {
+        "designs": list(designs),
+        "optimizers": list(OPTIMIZERS),
+        "budget": bdg,
+        "workers": workers,
+        "repeats": repeats,
+        "n_tasks": len(designs) * len(OPTIMIZERS),
+        "wall_s": {m: [round(w, 3) for w in ws]
+                   for m, ws in walls.items()},
+        "median_wall_s": {m: round(median(ws), 3)
+                          for m, ws in walls.items()},
+        "speedup_pool_vs_seq_fresh": round(
+            ratio("seq_fresh", "campaign_pool"), 3),
+        "speedup_inline_vs_seq_fresh": round(
+            ratio("seq_fresh", "campaign_inline"), 3),
+        "speedup_pool_vs_seq_shared": round(
+            ratio("seq_shared", "campaign_pool"), 3),
+        "speedup_inline_vs_seq_shared": round(
+            ratio("seq_shared", "campaign_inline"), 3),
+        "identical_frontiers": True,   # asserted above
+        "hypervolumes": {k: float(v) for k, v in
+                         reference["hypervolumes"].items()},
+    }
+    summary["campaign_speedup"] = max(
+        summary["speedup_pool_vs_seq_fresh"],
+        summary["speedup_inline_vs_seq_fresh"])
+    save_json("campaign.json", summary)
+    return summary
+
+
+def main():
+    out = run()
+    print(f"campaign benchmark: {out['n_tasks']} tasks "
+          f"({len(out['designs'])} designs x "
+          f"{len(out['optimizers'])} optimizers, budget "
+          f"{out['budget']}), {out['repeats']} repeats\n")
+    for mode, med in out["median_wall_s"].items():
+        print(f"  {mode:18s} median {med:7.2f}s   runs "
+              f"{out['wall_s'][mode]}")
+    print(f"\n  identical per-task frontiers across all modes: "
+          f"{out['identical_frontiers']}")
+    print(f"  campaign vs sequential per-pair loop:  "
+          f"pooled {out['speedup_pool_vs_seq_fresh']:.2f}x   "
+          f"inline {out['speedup_inline_vs_seq_fresh']:.2f}x")
+    print(f"  campaign vs shared-advisor loop:       "
+          f"pooled {out['speedup_pool_vs_seq_shared']:.2f}x   "
+          f"inline {out['speedup_inline_vs_seq_shared']:.2f}x")
+    print(f"  headline campaign_speedup: {out['campaign_speedup']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,7 @@ from typing import Dict
 
 import numpy as np
 
-from benchmarks.common import budget, full_mode, save_json
+from benchmarks.common import full_mode, save_json
 from repro.core import FifoAdvisor, build_simgraph
 from repro.core.optimizers import PAPER_OPTIMIZERS
 from repro.core.simulate import BatchedEvaluator

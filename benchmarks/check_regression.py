@@ -1,0 +1,130 @@
+"""Benchmark regression gate: fresh quick-mode results vs committed ones.
+
+Compares same-named ``*.quick.json`` files between a baseline directory
+(the committed ``benchmarks/results``) and a current directory (what the
+CI run just produced) and FAILS (exit 1) when a key metric regresses
+beyond tolerance:
+
+* ``accuracy.quick.json``  — ``all_exact`` must stay true (the batched
+  backends must agree with the DES oracle bit for bit);
+* ``runtime.quick.json``   — per-design shared-cache hit rate must not
+  drop more than ``--hit-rate-tol`` (joined on design name);
+* ``campaign.quick.json``  — the campaign speedup over the sequential
+  per-pair loop must stay above ``--campaign-floor`` AND above
+  ``--campaign-frac`` of the committed baseline value (wall-clock ratios
+  on shared CI runners are noisy, so the tolerance is generous — this
+  gate catches "the campaign engine stopped helping", not percent-level
+  drift), and per-task frontiers must still be identical across modes.
+
+Exit code 0 = gate passed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def load(directory: str, name: str):
+    path = os.path.join(directory, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_accuracy(base, cur, failures):
+    if cur is None:
+        failures.append("accuracy.quick.json missing from current run")
+        return
+    diverged = [r["design"] for r in cur.get("table", [])
+                if r.get("max_abs_diff", 0) != 0]
+    if base is not None and base.get("all_exact") and not cur.get(
+            "all_exact"):
+        failures.append(
+            "accuracy regression: all_exact was true in baseline, now "
+            f"false (diverging designs: {diverged})")
+    elif not cur.get("all_exact"):
+        failures.append(f"accuracy: all_exact is false ({diverged})")
+
+
+def check_cache_hit_rate(base, cur, tol, failures):
+    if cur is None:
+        failures.append("runtime.quick.json missing from current run")
+        return
+    if base is None:
+        return   # first run establishes the baseline
+    base_rows = {r["design"]: r for r in base.get("per_design", [])}
+    for row in cur.get("per_design", []):
+        ref = base_rows.get(row["design"])
+        if ref is None:
+            continue
+        b = ref.get("cache", {}).get("hit_rate")
+        c = row.get("cache", {}).get("hit_rate")
+        if b is not None and c is not None and c < b - tol:
+            failures.append(
+                f"cache hit-rate regression on {row['design']}: "
+                f"{c:.3f} < baseline {b:.3f} - {tol}")
+
+
+def check_campaign(base, cur, floor, frac, failures):
+    if cur is None:
+        failures.append("campaign.quick.json missing from current run")
+        return
+    if not cur.get("identical_frontiers"):
+        failures.append(
+            "campaign regression: per-task frontiers differ between the "
+            "campaign and the sequential loop")
+    speedup = cur.get("campaign_speedup", 0.0)
+    if speedup < floor:
+        failures.append(
+            f"campaign speedup {speedup:.2f}x below hard floor "
+            f"{floor:.2f}x")
+    if base is not None:
+        ref = base.get("campaign_speedup")
+        if ref and speedup < frac * ref:
+            failures.append(
+                f"campaign speedup regression: {speedup:.2f}x < "
+                f"{frac:.0%} of baseline {ref:.2f}x")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True,
+                    help="directory with the committed result JSONs")
+    ap.add_argument("--current", required=True,
+                    help="directory with the freshly produced JSONs")
+    ap.add_argument("--hit-rate-tol", type=float, default=0.05)
+    # wall-clock ratios on shared runners are noisy even with the
+    # benchmark's median-of-ratios protocol; the floor catches "the
+    # campaign engine actively slows things down", not percent drift
+    ap.add_argument("--campaign-floor", type=float, default=0.8,
+                    help="hard minimum campaign speedup")
+    ap.add_argument("--campaign-frac", type=float, default=0.5,
+                    help="required fraction of the baseline speedup")
+    args = ap.parse_args(argv)
+
+    failures = []
+    check_accuracy(load(args.baseline, "accuracy.quick.json"),
+                   load(args.current, "accuracy.quick.json"), failures)
+    check_cache_hit_rate(load(args.baseline, "runtime.quick.json"),
+                         load(args.current, "runtime.quick.json"),
+                         args.hit_rate_tol, failures)
+    check_campaign(load(args.baseline, "campaign.quick.json"),
+                   load(args.current, "campaign.quick.json"),
+                   args.campaign_floor, args.campaign_frac, failures)
+
+    if failures:
+        print("REGRESSION GATE FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("regression gate passed "
+          "(accuracy exact, cache hit rate held, campaign speedup held)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,16 +5,17 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Dict, List
+from typing import List
 
 import numpy as np
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
-# fast default subset (FULL=1 runs everything)
-FAST_DESIGNS = ["atax", "gemm", "gesummv", "FeedForward", "Autoencoder",
-                "k7mmtree_balanced", "k15mmseq", "k15mmtree",
-                "ResidualBlock", "mvt"]
+def _fast_designs() -> List[str]:
+    """Fast default subset (FULL=1 runs everything) — the canonical list
+    lives in repro.designs so the campaign CLI stays in sync."""
+    from repro.designs import FAST_DESIGNS
+    return list(FAST_DESIGNS)
 
 
 def full_mode() -> bool:
@@ -27,10 +28,10 @@ def quick_mode() -> bool:
 
 
 def design_set() -> List[str]:
-    from repro.designs import STREAMHLS_DESIGNS
+    from repro.designs import QUICK_DESIGNS, STREAMHLS_DESIGNS
     if quick_mode():
-        return ["gemm", "FeedForward"]
-    return sorted(STREAMHLS_DESIGNS) if full_mode() else FAST_DESIGNS
+        return list(QUICK_DESIGNS)
+    return sorted(STREAMHLS_DESIGNS) if full_mode() else _fast_designs()
 
 
 def budget() -> int:
@@ -40,6 +41,12 @@ def budget() -> int:
 
 
 def save_json(name: str, payload) -> str:
+    """Write a result JSON; quick-mode runs get a ``.quick.json`` suffix
+    so CI smoke results never clobber the committed full-run baselines
+    (the regression gate diffs same-named files)."""
+    if (quick_mode() and name.endswith(".json")
+            and not name.endswith(".quick.json")):
+        name = name[: -len(".json")] + ".quick.json"
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, name)
     with open(path, "w") as f:

@@ -4,14 +4,12 @@ searchers)."""
 
 from __future__ import annotations
 
-import time
 from typing import Dict
 
 import numpy as np
 
 from benchmarks.common import budget, save_json
 from repro.core import FifoAdvisor
-from repro.core.optimizers import OPTIMIZERS, EvalContext
 from repro.core.pareto import alpha_score
 from repro.designs import make_design
 

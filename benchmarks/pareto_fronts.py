@@ -5,7 +5,7 @@ from __future__ import annotations
 
 from typing import Dict
 
-from benchmarks.common import budget, full_mode, save_json
+from benchmarks.common import budget, save_json
 from repro.core import FifoAdvisor
 from repro.core.optimizers import PAPER_OPTIMIZERS
 from repro.designs import make_design

@@ -10,9 +10,9 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (accuracy, batched_eval, case_study, convergence,
-                            improvement, pareto_fronts, pruning, roofline,
-                            runtime)
+    from benchmarks import (accuracy, batched_eval, campaign, case_study,
+                            convergence, improvement, pareto_fronts,
+                            pruning, roofline, runtime)
 
     print("name,seconds,derived")
 
@@ -56,6 +56,12 @@ def main() -> None:
     n_us = be["gemm"]["numpy"]["us_per_config"]
     print(f"batched_eval,{time.perf_counter() - t0:.2f},"
           f"gemm_numpy_us_per_cfg={n_us}")
+
+    t0 = time.perf_counter()
+    cp = campaign.run()
+    print(f"campaign,{time.perf_counter() - t0:.2f},"
+          f"speedup_vs_seq={cp['campaign_speedup']:.2f}x;"
+          f"identical_frontiers={cp['identical_frontiers']}")
 
     t0 = time.perf_counter()
     pr = pruning.run()

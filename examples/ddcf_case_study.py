@@ -4,7 +4,6 @@ feasibility depends on the runtime graph — only simulation can size it.
   PYTHONPATH=src python examples/ddcf_case_study.py
 """
 
-import numpy as np
 
 from repro.core import FifoAdvisor
 from repro.designs import flowgnn_pna

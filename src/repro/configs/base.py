@@ -17,7 +17,7 @@ Input shapes (identical for every LM arch, per the assignment):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 
 @dataclasses.dataclass(frozen=True)

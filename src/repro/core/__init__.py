@@ -1,4 +1,11 @@
-"""FIFOAdvisor core: the paper's contribution as a composable library."""
+"""FIFOAdvisor core: the paper's contribution as a composable library.
+
+This package imports eagerly but stays jax-free: every jax-backed piece
+(operand prep, fixpoint/pallas backends) loads lazily inside
+:mod:`repro.core.backends`, so numpy-only consumers — the campaign
+worker processes in particular — can import the whole core (worklist
+evaluation, advisor, optimizers) without paying the jax/XLA import.
+"""
 
 from repro.core.advisor import Baseline, DseResult, FifoAdvisor
 from repro.core.backends import (ConfigCache, EvalBackend,

@@ -10,15 +10,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.core.backends import ConfigCache
 from repro.core.design import Design
 from repro.core.optimizers import OPTIMIZERS, EvalContext, OptResult
-from repro.core.pareto import (alpha_score, hypervolume_2d, pareto_front,
-                               select_alpha_point)
+from repro.core.pareto import hypervolume_2d, select_alpha_point
 from repro.core.simgraph import SimGraph, build_simgraph
 from repro.core.simulate import BatchedEvaluator
 from repro.core.tracer import Trace, collect_trace
@@ -123,6 +122,13 @@ class FifoAdvisor:
         ctx = self._fresh_ctx(seed=0)
         self.baseline_max = self._baseline(ctx.baseline_max())
         self.baseline_min = self._baseline(ctx.baseline_min())
+
+    def make_context(self, seed: int = 0) -> EvalContext:
+        """A fresh :class:`EvalContext` sharing this advisor's evaluator,
+        candidate pruning, and design-wide evaluation cache.  This is the
+        hook the campaign scheduler uses to drive optimizers stepwise
+        outside :meth:`run`."""
+        return self._fresh_ctx(seed)
 
     def _fresh_ctx(self, seed: int) -> EvalContext:
         if self._local_bounds and self._lb_cache is None:

@@ -4,34 +4,64 @@ One shared operand-preparation layer (:mod:`.operands`), an abstract
 :class:`.EvalBackend` protocol with a registry, three exact implementations
 (numpy worklist, jit/vmap fixpoint scan, Pallas kernel), a tiered
 :class:`.DispatchPolicy` (bucketing + UNRESOLVED-row escalation), the
-vectorized :class:`.ConfigCache`, and the incremental re-simulation fast
-path (:func:`.solve_delta` — the LightningSim primitive).
+cross-design :class:`.HeteroDispatcher`, the vectorized
+:class:`.ConfigCache`, and the incremental re-simulation fast path
+(:func:`.solve_delta` — the LightningSim primitive).
 
 ``repro.core.simulate.BatchedEvaluator`` is a thin façade over this
 package; new backends only need ``@register_backend``.
+
+The jax-backed pieces (operands, fixpoint, pallas) are imported LAZILY via
+PEP 562 so that numpy-only consumers — notably the campaign worker
+processes, which only ever run the worklist — can import this package
+without paying the jax import (or touching XLA at all).  ``get_backend``
+resolves the lazy backends by name on first use.
 """
+
+import importlib
 
 from repro.core.backends.base import (BACKENDS, BIG, CONVERGED, DEADLOCK,
                                       F32_EXACT_LIMIT, UNRESOLVED,
                                       EvalBackend, available_backends,
                                       get_backend, register_backend)
 from repro.core.backends.cache import CacheStats, ConfigCache
-from repro.core.backends.dispatch import BUCKETS, DispatchPolicy
-from repro.core.backends.fixpoint import FixpointBackend
-from repro.core.backends.operands import (GraphOperands, bram_count_jnp,
-                                          build_operands, depth_operands,
-                                          get_operands)
-from repro.core.backends.pallas import PallasBackend
+from repro.core.backends.dispatch import (BUCKETS, DispatchPolicy,
+                                          HeteroDispatcher, HeteroStats)
 from repro.core.backends.worklist import (IncrementalStats, WorklistBackend,
                                           WorklistState, affected_segments,
                                           evaluate_np, solve, solve_delta)
 
+#: names resolved on attribute access from jax-importing submodules
+_LAZY_ATTRS = {
+    "FixpointBackend": "repro.core.backends.fixpoint",
+    "PallasBackend": "repro.core.backends.pallas",
+    "GraphOperands": "repro.core.backends.operands",
+    "HeteroOperands": "repro.core.backends.operands",
+    "bram_count_jnp": "repro.core.backends.operands",
+    "build_operands": "repro.core.backends.operands",
+    "depth_operands": "repro.core.backends.operands",
+    "extend_operands": "repro.core.backends.operands",
+    "get_operands": "repro.core.backends.operands",
+    "stack_hetero": "repro.core.backends.operands",
+}
+
+
+def __getattr__(name):
+    module = _LAZY_ATTRS.get(name)
+    if module is None:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(module), name)
+
+
 __all__ = [
     "BACKENDS", "BIG", "BUCKETS", "CONVERGED", "CacheStats", "ConfigCache",
     "DEADLOCK", "DispatchPolicy", "EvalBackend", "F32_EXACT_LIMIT",
-    "FixpointBackend", "GraphOperands", "IncrementalStats", "PallasBackend",
-    "UNRESOLVED", "WorklistBackend", "WorklistState", "affected_segments",
+    "FixpointBackend", "GraphOperands", "HeteroDispatcher", "HeteroOperands",
+    "HeteroStats", "IncrementalStats", "PallasBackend", "UNRESOLVED",
+    "WorklistBackend", "WorklistState", "affected_segments",
     "available_backends", "bram_count_jnp", "build_operands",
-    "depth_operands", "evaluate_np", "get_backend", "get_operands",
-    "register_backend", "solve", "solve_delta",
+    "depth_operands", "evaluate_np", "extend_operands", "get_backend",
+    "get_operands", "register_backend", "solve", "solve_delta",
+    "stack_hetero",
 ]

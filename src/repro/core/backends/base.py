@@ -76,15 +76,36 @@ def register_backend(cls: Type[EvalBackend]) -> Type[EvalBackend]:
     return cls
 
 
+#: backends whose defining module is imported on first request, so the
+#: numpy-only worklist path never pays the jax import
+_LAZY_BACKEND_MODULES = {
+    "worklist": "repro.core.backends.worklist",
+    "numpy": "repro.core.backends.worklist",
+    "fixpoint": "repro.core.backends.fixpoint",
+    "jax": "repro.core.backends.fixpoint",
+    "pallas": "repro.core.backends.pallas",
+}
+
+
 def get_backend(name: str) -> Type[EvalBackend]:
+    if name not in BACKENDS and name in _LAZY_BACKEND_MODULES:
+        import importlib
+        importlib.import_module(_LAZY_BACKEND_MODULES[name])
     try:
         return BACKENDS[name]
     except KeyError:
         raise ValueError(
             f"unknown backend {name!r}; available: "
-            f"{sorted(set(BACKENDS))}") from None
+            f"{sorted(set(BACKENDS) | set(_LAZY_BACKEND_MODULES))}"
+            ) from None
 
 
 def available_backends() -> Tuple[str, ...]:
-    """Canonical (deduplicated) backend names."""
-    return tuple(sorted({cls.name for cls in BACKENDS.values()}))
+    """Canonical backend names usable in this environment (lazy jax
+    backends are advertised only when jax is actually importable)."""
+    import importlib.util
+    names = {cls.name for cls in BACKENDS.values()}
+    names.add("worklist")
+    if importlib.util.find_spec("jax") is not None:
+        names.update({"fixpoint", "pallas"})
+    return tuple(sorted(names))

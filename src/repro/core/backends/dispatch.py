@@ -14,16 +14,26 @@ Owns the three batch-shaping concerns that used to be tangled into
    fixpoint converged: deadlocks never converge by construction, and rare
    feasible rows converge slowly) are re-solved exactly by the worklist
    arbiter, counted in ``stats.n_fallbacks``.
+
+:class:`HeteroDispatcher` extends the same concerns across *designs*: it
+packs rows from many SimGraphs into one lane-aligned hetero batch (shared
+E*/F*/R* envelope, one jit cache for the whole campaign instead of one
+per graph), with per-design worklist escalation.  jax is imported lazily
+so this module stays importable in numpy-only worker processes.
 """
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.backends.base import DEADLOCK, EvalBackend, UNRESOLVED
+from repro.core.backends.base import (DEADLOCK, F32_EXACT_LIMIT,
+                                      EvalBackend, UNRESOLVED)
 from repro.core.backends.worklist import WorklistBackend
+from repro.core.simgraph import SimGraph
 
 BUCKETS = (1, 8, 32, 128, 512, 2048)
 
@@ -67,3 +77,112 @@ class DispatchPolicy:
                 stats.n_fallbacks += int(unresolved.size)
         lat = np.where(dead, -1, lat)
         return lat, bram, dead
+
+
+@dataclasses.dataclass
+class HeteroStats:
+    n_dispatches: int = 0
+    n_rows: int = 0          # real rows evaluated
+    n_pad_rows: int = 0      # bucket-padding overhead rows
+    n_fallbacks: int = 0     # UNRESOLVED rows escalated to a worklist
+    wall_s: float = 0.0
+
+
+class HeteroDispatcher:
+    """One vectorized dispatch for rows spanning MANY designs.
+
+    Built once per campaign from every participating
+    :class:`~repro.core.simgraph.SimGraph`: computes the shared
+    ``(E*, F*, R*)`` envelope, re-pads each design's operands to it, and
+    compiles ONE jitted fixpoint whose cache is keyed only on the bucketed
+    total row count — where per-design dispatch would compile
+    ``len(BUCKETS)`` variants per graph, a campaign compiles
+    ``len(buckets)`` variants total.  UNRESOLVED rows are escalated to the
+    owning design's worklist arbiter, exactly like
+    :class:`DispatchPolicy`.
+    """
+
+    #: finer-grained than BUCKETS: cross-design batches vary more in size
+    BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
+
+    def __init__(self, graphs: Dict[str, SimGraph],
+                 worklists: Optional[Dict[str, WorklistBackend]] = None,
+                 max_iters: int = 64,
+                 buckets: Sequence[int] = BUCKETS):
+        from repro.core.backends.operands import (extend_operands,
+                                                  get_operands)
+        from repro.kernels.fifo_eval.ops import make_hetero_batched_eval
+        for k, g in graphs.items():
+            # same guard as BatchedEvaluator: the f32 fixpoint is only
+            # exact while times stay below 2**24
+            if g.latency_upper_bound() > F32_EXACT_LIMIT:
+                raise ValueError(
+                    f"design {k!r}: schedule bound exceeds the "
+                    "float32-exact domain; split the design or reduce "
+                    "trip counts")
+        opses = {k: get_operands(g) for k, g in graphs.items()}
+        self.e_pad = max(o.e_pad for o in opses.values())
+        self.f_max = max(o.n_fifos for o in opses.values())
+        self.r_max = max(o.n_flat_reads for o in opses.values())
+        self._ext = {k: extend_operands(o, self.e_pad, self.f_max,
+                                        self.r_max)
+                     for k, o in opses.items()}
+        if worklists is None:
+            worklists = {}
+            for k, g in graphs.items():
+                wl = WorklistBackend(max_iters=max_iters)
+                wl.prepare(g)
+                worklists[k] = wl
+        self.worklists = worklists
+        self._call = make_hetero_batched_eval(max_iters)
+        self.buckets = tuple(buckets)
+        self.stats = HeteroStats()
+
+    def _pad_rows(self, batch: dict, c: int) -> Tuple[dict, int]:
+        bucket = next((b for b in self.buckets if b >= c), None)
+        if bucket is None or bucket == c:
+            return batch, c
+        pad = bucket - c
+        return {k: np.concatenate([v, np.repeat(v[-1:], pad, axis=0)])
+                for k, v in batch.items()}, bucket
+
+    def dispatch(self, items: List[Tuple[str, np.ndarray]]
+                 ) -> List[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+        """``[(design_key, (c_i, F_i) depths), ...]`` -> per-item results.
+
+        Every returned triple is exact ``(latency i64, bram i64,
+        deadlock bool)`` with -1 latency on deadlocked rows.
+        """
+        from repro.core.backends.operands import stack_hetero
+        t_start = time.perf_counter()
+        mats = [np.atleast_2d(np.asarray(m, dtype=np.int64))
+                for _, m in items]
+        batch = stack_hetero(
+            [(self._ext[k], m) for (k, _), m in zip(items, mats)])
+        C = batch["depths"].shape[0]
+        padded, c_padded = self._pad_rows(batch, C)
+        lat, bram, status = self._call(padded)
+        lat, bram, status = lat[:C], bram[:C], status[:C]
+
+        out = []
+        row0 = 0
+        for (key, _), m in zip(items, mats):
+            c = m.shape[0]
+            sl = slice(row0, row0 + c)
+            row0 += c
+            lat_i, bram_i = lat[sl].copy(), bram[sl].copy()
+            dead_i = status[sl] == DEADLOCK
+            unresolved = np.flatnonzero(status[sl] == UNRESOLVED)
+            if unresolved.size:
+                wl_lat, _, wl_status = self.worklists[key].evaluate(
+                    m[unresolved])
+                lat_i[unresolved] = wl_lat
+                dead_i[unresolved] = wl_status == DEADLOCK
+                self.stats.n_fallbacks += int(unresolved.size)
+            lat_i = np.where(dead_i, -1, lat_i)
+            out.append((lat_i, bram_i, dead_i))
+        self.stats.n_dispatches += 1
+        self.stats.n_rows += C
+        self.stats.n_pad_rows += c_padded - C
+        self.stats.wall_s += time.perf_counter() - t_start
+        return out

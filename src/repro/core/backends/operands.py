@@ -21,6 +21,15 @@ padding logic was duplicated between ``core/simulate.py`` and
     verbatim by the fixpoint scan, the jnp reference oracle, and the Pallas
     kernel wrapper.
 
+``HeteroOperands`` / ``extend_operands`` / ``stack_hetero``
+    The hetero-batch packer: one design's operands re-padded to a
+    campaign-wide ``(E*, F*, R*)`` envelope (numpy, built once per design
+    per campaign), and the per-round stacking of rows from *different*
+    designs into one lane-aligned cross-design batch for the fixpoint
+    backend (``repro.kernels.fifo_eval.ops.make_hetero_batched_eval``).
+    Unlike :class:`GraphOperands`, every per-event table is materialized
+    per row so a single vmapped dispatch can mix graphs.
+
 Padding contract (identical to the Pallas kernel's expectations): events are
 padded to ``E_pad`` (a multiple of 128, minimum 128); the first padded event
 opens a fresh segment (``seg_start[E] = 1``) so the pad chain can never leak
@@ -162,6 +171,124 @@ def get_operands(g: SimGraph) -> GraphOperands:
         cached = build_operands(g)
         g._operands_cache = cached
     return cached
+
+
+@dataclasses.dataclass(frozen=True)
+class HeteroOperands:
+    """One design's event tables re-padded to a shared hetero envelope.
+
+    All arrays are numpy (the per-round stacking is a host-side gather;
+    the stacked batch is shipped to the device once per dispatch).  The
+    extension region ``[own e_pad, E*)`` follows the standard padding
+    contract: it opens a fresh segment, carries no edges, zero delta, and
+    ``end_bonus = NEG``, so it can never leak times into real events.
+    Padded FIFO columns get width 1 (with depth padded to 2 they are SRL
+    by construction, contributing zero BRAM), and padded read-table slots
+    are never gathered because ``evt_n_reads`` masks them out.
+    """
+
+    e_pad: int               # shared E* (lane-aligned)
+    n_fifos_max: int         # shared F*
+    n_flat_reads_max: int    # shared R*
+    n_fifos: int             # this design's real F
+    n_flat_reads: int        # this design's real R
+    bound: float
+    taskless_lat: float
+    # (E*,) event tables
+    delta: np.ndarray        # f32
+    seg_start: np.ndarray    # f32
+    is_read: np.ndarray      # f32
+    has_data: np.ndarray     # f32
+    end_bonus: np.ndarray    # f32
+    data_idx: np.ndarray     # i32
+    fifo: np.ndarray         # i32
+    rank: np.ndarray         # i32
+    is_write: np.ndarray     # bool
+    evt_read_base: np.ndarray    # i32
+    evt_n_reads: np.ndarray      # i32
+    # (F*,) / (R*,)
+    widths: np.ndarray       # i32
+    read_evt_flat: np.ndarray    # i32
+
+
+def _extend(a: np.ndarray, n: int, fill) -> np.ndarray:
+    out = np.full(n, fill, dtype=a.dtype)
+    out[: len(a)] = a
+    return out
+
+
+def extend_operands(ops: GraphOperands, e_pad: int, f_max: int,
+                    r_max: int) -> HeteroOperands:
+    """Re-pad one design's :class:`GraphOperands` to a shared envelope."""
+    assert e_pad % LANES == 0 and e_pad >= ops.e_pad
+    assert f_max >= ops.n_fifos and r_max >= ops.n_flat_reads
+    seg_start = _extend(np.asarray(ops.seg_start)[0], e_pad, 0.0)
+    if e_pad > ops.e_pad:
+        seg_start[ops.e_pad] = 1.0     # isolate the extension chain
+    return HeteroOperands(
+        e_pad=e_pad,
+        n_fifos_max=f_max,
+        n_flat_reads_max=r_max,
+        n_fifos=ops.n_fifos,
+        n_flat_reads=ops.n_flat_reads,
+        bound=ops.bound,
+        taskless_lat=ops.taskless_lat,
+        delta=_extend(np.asarray(ops.delta)[0], e_pad, 0.0),
+        seg_start=seg_start,
+        is_read=_extend(np.asarray(ops.is_read)[0], e_pad, 0.0),
+        has_data=_extend(np.asarray(ops.has_data)[0], e_pad, 0.0),
+        end_bonus=_extend(np.asarray(ops.end_bonus)[0], e_pad, float(NEG)),
+        data_idx=_extend(np.asarray(ops.data_idx)[0], e_pad, 0),
+        fifo=_extend(np.asarray(ops.fifo), e_pad, 0),
+        rank=_extend(np.asarray(ops.rank), e_pad, 0),
+        is_write=_extend(np.asarray(ops.is_write), e_pad, False),
+        evt_read_base=_extend(np.asarray(ops.evt_read_base), e_pad, 0),
+        evt_n_reads=_extend(np.asarray(ops.evt_n_reads), e_pad, 0),
+        widths=_extend(np.asarray(ops.widths), f_max, 1),
+        read_evt_flat=_extend(np.asarray(ops.read_evt_flat), r_max, 0),
+    )
+
+
+#: fields of :class:`HeteroOperands` broadcast per row by the stacker
+_HETERO_ROW_FIELDS = ("delta", "seg_start", "is_read", "has_data",
+                      "end_bonus", "data_idx", "fifo", "rank", "is_write",
+                      "evt_read_base", "evt_n_reads", "widths",
+                      "read_evt_flat")
+
+
+def stack_hetero(entries) -> dict:
+    """Stack ``[(HeteroOperands, (c_i, F_i) depths), ...]`` into one batch.
+
+    Returns the dict of (C, ...) arrays consumed by
+    ``make_hetero_batched_eval``; rows from different designs are simply
+    concatenated — every row carries its own event tables, bound, and
+    latency floor.  Depth rows are padded to F* with depth 2 (zero-BRAM
+    SRL columns that no event references).
+    """
+    entries = [(h, np.atleast_2d(np.asarray(m, dtype=np.int64)))
+               for h, m in entries]
+    batch = {}
+    for name in _HETERO_ROW_FIELDS:
+        batch[name] = np.concatenate([
+            np.broadcast_to(getattr(h, name),
+                            (m.shape[0],) + getattr(h, name).shape)
+            for h, m in entries], axis=0)
+    batch["bound"] = np.concatenate(
+        [np.full(m.shape[0], h.bound, dtype=np.float32)
+         for h, m in entries])
+    batch["taskless"] = np.concatenate(
+        [np.full(m.shape[0], h.taskless_lat, dtype=np.float32)
+         for h, m in entries])
+    batch["n_flat_reads"] = np.concatenate(
+        [np.full(m.shape[0], h.n_flat_reads, dtype=np.int32)
+         for h, m in entries])
+    depths = []
+    for h, m in entries:
+        pad = np.full((m.shape[0], h.n_fifos_max), 2, dtype=np.int64)
+        pad[:, : m.shape[1]] = m
+        depths.append(pad)
+    batch["depths"] = np.concatenate(depths, axis=0)
+    return batch
 
 
 def depth_operands(ops: GraphOperands, depths: jnp.ndarray

@@ -1,0 +1,50 @@
+"""Cross-design DSE campaign engine.
+
+Runs many ``(design, optimizer, seed)`` tasks as one scheduled workload:
+stepwise optimizers interleaved round-robin, cache-aware routing into
+pooled worklist workers or one cross-design hetero-batched fixpoint
+dispatch, persistent ``.npz`` checkpoints with deterministic replay
+resume, and a result store tracking per-task frontiers and hypervolume.
+
+Attributes resolve lazily (PEP 562) so the numpy-only worker processes
+can import ``repro.core.campaign.pool`` without dragging in the advisor
+(and with it jax).
+"""
+
+import importlib
+
+_ATTRS = {
+    "Campaign": "repro.core.campaign.scheduler",
+    "CampaignSpec": "repro.core.campaign.scheduler",
+    "CampaignTask": "repro.core.campaign.scheduler",
+    "DesignContext": "repro.core.campaign.scheduler",
+    "QUICK_DESIGNS": "repro.core.campaign.scheduler",
+    "TaskSpec": "repro.core.campaign.scheduler",
+    "default_workers": "repro.core.campaign.scheduler",
+    "WorkerPool": "repro.core.campaign.pool",
+    "ResultStore": "repro.core.campaign.store",
+    "CheckpointMismatch": "repro.core.campaign.state",
+    "load_checkpoint": "repro.core.campaign.state",
+    "replay": "repro.core.campaign.state",
+    "save_checkpoint": "repro.core.campaign.state",
+}
+
+
+def __getattr__(name):
+    module = _ATTRS.get(name)
+    if module is None:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(module), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_ATTRS))
+
+
+__all__ = [
+    "Campaign", "CampaignSpec", "CampaignTask", "CheckpointMismatch",
+    "DesignContext", "QUICK_DESIGNS", "ResultStore", "TaskSpec",
+    "WorkerPool", "default_workers", "load_checkpoint", "replay",
+    "save_checkpoint",
+]

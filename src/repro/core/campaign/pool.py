@@ -1,0 +1,193 @@
+"""Worklist worker pool for campaign evaluation.
+
+Workers are persistent processes running ONLY the numpy evaluation chain
+(designs -> trace -> SimGraph -> worklist).  Each worker keeps, per
+design, a :class:`~repro.core.backends.worklist.WorklistBackend` plus an
+LRU of solved :class:`WorklistState`'s so the incremental re-simulation
+fast path works inside the worker exactly as it does in
+:class:`~repro.core.simulate.BatchedEvaluator` (the scheduler keeps each
+task sticky to one worker for state locality).
+
+Start method: ``fork`` when available and jax has not been imported in
+this process — children then inherit the campaign's already-built graphs
+and worklist tables for free (the whole evaluation chain is jax-free, so
+there are no XLA threads to trip over).  Once jax IS loaded (hetero mode,
+test suites), the pool falls back to ``spawn``: clean ~0.3 s numpy-only
+interpreter per worker that re-traces its designs on first use.
+
+All results are exact, so parallel evaluation is bit-identical to the
+sequential path — campaign frontiers do not depend on worker count.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import sys
+import time
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+#: cap on queued-but-undrained jobs per worker: bounds the result-pipe
+#: backlog so neither side of the pipe pair can fill and deadlock (see
+#: WorkerPool.submit)
+MAX_OUTSTANDING = 8
+
+
+class _WorkerDesign:
+    """One design's evaluation engine inside a worker process — a plain
+    :class:`~repro.core.simulate.BatchedEvaluator` on the numpy worklist
+    (same dispatch policy, in-batch dedup, incremental state LRU as the
+    scheduler's own evaluators; the whole chain imports jax-free)."""
+
+    def __init__(self, name: str, max_iters: int, graph=None):
+        from repro.core.simulate import BatchedEvaluator
+
+        if graph is None:
+            from repro.core.simgraph import build_simgraph
+            from repro.core.tracer import collect_trace
+            from repro.designs import make_design
+            design = make_design(name)
+            graph = build_simgraph(design, collect_trace(design))
+        self.ev = BatchedEvaluator(graph, max_iters=max_iters,
+                                   backend="numpy")
+
+    def evaluate(self, depths: np.ndarray, base: Optional[np.ndarray]
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        if base is None:
+            return self.ev.evaluate(depths)
+        return self.ev.evaluate_incremental(base, depths)
+
+
+def _worker_main(conn, max_iters: int, graphs: Optional[Dict] = None):
+    designs: Dict[str, _WorkerDesign] = {}
+    graphs = graphs or {}
+    try:
+        while True:
+            msg = conn.recv()
+            if msg is None:
+                break
+            name, depths, base = msg
+            try:
+                wd = designs.get(name)
+                if wd is None:
+                    wd = designs[name] = _WorkerDesign(
+                        name, max_iters, graphs.get(name))
+                t0 = time.perf_counter()
+                lat, bram, dead = wd.evaluate(depths, base)
+                conn.send(
+                    ("ok", lat, bram, dead, time.perf_counter() - t0))
+            except Exception as exc:  # surfaced in the parent
+                conn.send(("err", f"{type(exc).__name__}: {exc}"))
+    except (EOFError, KeyboardInterrupt):  # parent died / interrupt
+        pass
+    finally:
+        conn.close()
+
+
+def pick_start_method() -> str:
+    """fork when it is free of XLA-thread hazards, else spawn."""
+    if "fork" in mp.get_all_start_methods() and "jax" not in sys.modules:
+        return "fork"
+    return "spawn"
+
+
+class WorkerPool:
+    """A fixed set of persistent worklist workers fed round by round."""
+
+    def __init__(self, n_workers: int, max_iters: int = 64,
+                 start_method: Optional[str] = None,
+                 graphs: Optional[Dict] = None):
+        self.n_workers = int(n_workers)
+        self.start_method = start_method or pick_start_method()
+        # graphs can only ride along through fork's copy-on-write pages;
+        # spawn workers rebuild their designs by name on first use
+        payload = graphs if self.start_method == "fork" else None
+        ctx = mp.get_context(self.start_method)
+        self._pipes = []
+        self._procs = []
+        for _ in range(self.n_workers):
+            parent_conn, child_conn = ctx.Pipe()
+            proc = ctx.Process(target=_worker_main,
+                               args=(child_conn, max_iters, payload),
+                               daemon=True)
+            proc.start()
+            child_conn.close()
+            self._pipes.append(parent_conn)
+            self._procs.append(proc)
+
+    def _recv(self, w: int):
+        msg = self._pipes[w].recv()
+        if msg[0] == "err":
+            raise RuntimeError(f"campaign worker {w} failed: {msg[1]}")
+        return msg[1:]
+
+    def _drain_ready(self, handle: Dict):
+        """Collect any results already sitting in the pipes (non-blocking)
+        so a worker's result-send can never back up against our job-send
+        — the classic pipe-pair deadlock."""
+        for w, queue in handle["per_worker"].items():
+            while queue and self._pipes[w].poll():
+                handle["results"][queue.popleft()] = self._recv(w)
+
+    def submit(self, jobs: List[Tuple[int, str, np.ndarray,
+                                      Optional[np.ndarray]]]) -> Dict:
+        """Ship ``(worker, design, depths, base)`` jobs to their workers
+        and return a collection handle; the caller may do its own work
+        before :meth:`collect` blocks on the results.
+
+        Flow control: before each send, ready results are drained, and a
+        worker with :data:`MAX_OUTSTANDING` queued jobs is blocking-drained
+        first — so the per-worker result backlog stays far below the pipe
+        buffer and neither side can block on a full pipe simultaneously.
+        """
+        per_worker: Dict[int, deque] = {}
+        handle = {"per_worker": per_worker, "results": {}, "n": len(jobs)}
+        for j, (w, name, depths, base) in enumerate(jobs):
+            self._drain_ready(handle)
+            queue = per_worker.setdefault(w, deque())
+            while len(queue) >= MAX_OUTSTANDING:
+                handle["results"][queue.popleft()] = self._recv(w)
+            self._pipes[w].send((name, depths, base))
+            queue.append(j)
+        return handle
+
+    def collect(self, handle: Dict) -> List[Tuple[np.ndarray, np.ndarray,
+                                                  np.ndarray, float]]:
+        """Results in the submission order of the ``submit`` jobs; each
+        is ``(lat, bram, dead, worker_eval_seconds)``."""
+        per_worker = handle["per_worker"]
+        out: List = [None] * handle["n"]
+        for j, res in handle["results"].items():
+            out[j] = res
+        # drain in round-robin so no single worker's pipe backs up
+        while any(per_worker.values()):
+            for w, queue in per_worker.items():
+                if queue:
+                    out[queue.popleft()] = self._recv(w)
+        return out
+
+    def run_jobs(self, jobs) -> List:
+        """submit + collect in one blocking call."""
+        return self.collect(self.submit(jobs))
+
+    def close(self):
+        for pipe in self._pipes:
+            try:
+                pipe.send(None)
+                pipe.close()
+            except (BrokenPipeError, OSError):  # already gone
+                pass
+        for proc in self._procs:
+            proc.join(timeout=5)
+            if proc.is_alive():  # pragma: no cover - defensive
+                proc.terminate()
+        self._pipes, self._procs = [], []
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -1,0 +1,487 @@
+"""Cross-design DSE campaign scheduler.
+
+A *campaign* runs many ``(design, optimizer, seed)`` tasks as one
+scheduled workload.  Every optimizer is driven through the stepwise
+``propose()/observe()`` API (``repro.core.optimizers.base``), so one
+scheduler round interleaves every active task:
+
+1. collect each task's outstanding :class:`EvalRequest`;
+2. resolve cache hits against the task's design-wide
+   :class:`~repro.core.backends.ConfigCache`;
+3. route the misses —
+   * incremental-eligible rows (single-FIFO deltas) to the task's sticky
+     worklist worker (or inline), preserving the LightningSim fast path,
+   * full-solve rows either to the worker pool (rows are split across
+     workers for load balance) or, in hetero mode, packed across designs
+     into ONE lane-aligned fixpoint dispatch
+     (:class:`~repro.core.backends.HeteroDispatcher`);
+4. record results into each task's history/budget and ``observe()`` them.
+
+All evaluation paths are exact, so the per-task histories — and therefore
+frontiers and hypervolumes — are bit-identical to running each task alone
+through ``FifoAdvisor.run()`` with the same seed.  Campaign state
+checkpoints to a single ``.npz`` (see ``repro.core.campaign.state``) and
+resumes deterministically by replaying the recorded histories through the
+generators.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.advisor import FifoAdvisor
+from repro.core.optimizers import OPTIMIZERS, EvalRequest, OptResult
+from repro.core.pareto import hypervolume_2d
+from repro.designs import QUICK_DESIGNS, make_design
+
+__all__ = ["Campaign", "CampaignSpec", "CampaignTask", "DesignContext",
+           "QUICK_DESIGNS", "TaskSpec", "default_workers"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskSpec:
+    """One DSE task: an optimizer run on a design with a seed/budget."""
+
+    design: str
+    optimizer: str
+    seed: int = 0
+    budget: int = 300
+    kwargs: Tuple[Tuple[str, object], ...] = ()
+
+    @property
+    def key(self) -> str:
+        return f"{self.design}:{self.optimizer}:s{self.seed}"
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignSpec:
+    """What to run and how to evaluate it."""
+
+    designs: Tuple[str, ...]
+    optimizers: Tuple[str, ...]
+    budget: int = 300
+    seed: int = 0
+    #: per-design evaluator backend ("numpy" worklist is the CPU fast path)
+    backend: str = "numpy"
+    max_iters: int = 256
+    #: worklist worker processes; 0 = evaluate inline in this process
+    workers: int = 0
+    #: pack cross-design full-solve batches into one fixpoint dispatch
+    #: (the TPU-native path; on CPU the pooled worklist is faster).
+    #: Hetero dispatch runs in the scheduler process, so ``workers`` is
+    #: ignored in this mode (no pool is spawned)
+    hetero: bool = False
+    #: rounds between automatic checkpoints (when a path is configured)
+    checkpoint_every: int = 8
+    #: record per-round (n_evals, hypervolume) trajectories per task —
+    #: costs a full frontier recomputation per task per round, so it is
+    #: off by default and meant for convergence studies
+    track_hypervolume: bool = False
+
+    def __post_init__(self):
+        object.__setattr__(self, "designs", tuple(self.designs))
+        object.__setattr__(self, "optimizers", tuple(self.optimizers))
+
+    def tasks(self) -> List[TaskSpec]:
+        return [TaskSpec(design=d, optimizer=o, seed=self.seed,
+                         budget=self.budget)
+                for d in self.designs for o in self.optimizers]
+
+
+class DesignContext:
+    """Shared per-design state: trace, evaluator, cache, baselines."""
+
+    def __init__(self, name: str, spec: CampaignSpec):
+        self.name = name
+        self.advisor = FifoAdvisor(make_design(name), backend=spec.backend,
+                                   max_iters=spec.max_iters)
+
+    @property
+    def graph(self):
+        return self.advisor.graph
+
+    @property
+    def cache(self):
+        return self.advisor.cache
+
+    @property
+    def evaluator(self):
+        return self.advisor.evaluator
+
+
+class CampaignTask:
+    """One stepwise optimizer bound to its design context."""
+
+    def __init__(self, spec: TaskSpec, dctx: DesignContext):
+        self.spec = spec
+        self.dctx = dctx
+        self.ctx = dctx.advisor.make_context(seed=spec.seed)
+        cls = OPTIMIZERS[spec.optimizer]
+        self.opt = cls(self.ctx, budget=spec.budget, **dict(spec.kwargs))
+        self.step_miss: List[int] = []   # per-step simulated-row counts
+        self.eval_s = 0.0                # attributed evaluation seconds
+        self.result: Optional[OptResult] = None
+        self.worker: Optional[int] = None    # sticky pool affinity
+        self.hv_trace: List[Tuple[int, float]] = []  # (n_evals, hv)
+
+    @property
+    def key(self) -> str:
+        return self.spec.key
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+    def finalize(self):
+        self.result = self.ctx.result(
+            self.opt.name, self.opt.step_s + self.eval_s)
+
+    def running_hypervolume(self) -> float:
+        res = self.ctx.result(self.opt.name, 0.0)
+        pts, _ = res.frontier()
+        bm = self.dctx.advisor.baseline_max
+        ref = (bm.latency * 2.0 + 1.0, bm.bram * 2.0 + 2.0)
+        return hypervolume_2d(pts, ref)
+
+
+@dataclasses.dataclass
+class _Pending:
+    task: CampaignTask
+    req: EvalRequest
+    lat: np.ndarray
+    bram: np.ndarray
+    dead: np.ndarray
+    miss_rows: np.ndarray
+
+
+class Campaign:
+    """Round-robin scheduler over many stepwise DSE tasks."""
+
+    def __init__(self, spec: CampaignSpec,
+                 tasks: Optional[Sequence[TaskSpec]] = None,
+                 checkpoint_path: Optional[str] = None):
+        self.spec = spec
+        self.checkpoint_path = checkpoint_path
+        self.round = 0
+        task_specs = list(tasks) if tasks is not None else spec.tasks()
+        self.designs: Dict[str, DesignContext] = {}
+        for ts in task_specs:
+            if ts.design not in self.designs:
+                self.designs[ts.design] = DesignContext(ts.design, spec)
+        self.tasks = [CampaignTask(ts, self.designs[ts.design])
+                      for ts in task_specs]
+        self.pool = None
+        if spec.workers > 0 and not spec.hetero:
+            # after the design contexts so forked workers inherit the
+            # built graphs + worklist tables; before any jax import so
+            # the fork start method stays available.  Hetero mode owns
+            # every full-solve row in the main process, so a pool would
+            # only ever idle — it is not created (incremental rows run
+            # inline there).
+            from repro.core.campaign.pool import WorkerPool
+            self.pool = WorkerPool(
+                spec.workers, max_iters=spec.max_iters,
+                graphs={k: d.graph for k, d in self.designs.items()})
+        # evaluation lanes: lane 0 is THIS process (overlapped with the
+        # pool via submit/collect), lanes 1..workers are pool workers.
+        # Stagger the per-design assignment so the same optimizer on
+        # different designs lands on different lanes (otherwise every
+        # incremental-heavy task can alias onto one lane).
+        n_lanes = spec.workers + 1 if self.pool is not None else 1
+        design_index = {k: i for i, k in enumerate(self.designs)}
+        per_design_count: Dict[str, int] = {}
+        for task in self.tasks:
+            k = task.spec.design
+            c = per_design_count.get(k, 0)
+            per_design_count[k] = c + 1
+            task.worker = (c + design_index[k]) % n_lanes
+        self.hetero = None
+        if spec.hetero:
+            from repro.core.backends.dispatch import HeteroDispatcher
+            graphs = {k: d.graph for k, d in self.designs.items()}
+            worklists = {k: d.evaluator._worklist
+                         for k, d in self.designs.items()}
+            self.hetero = HeteroDispatcher(graphs, worklists,
+                                           max_iters=spec.max_iters)
+
+    # ------------------------------------------------------------- rounds
+    def _route(self, pending: List[_Pending]):
+        """Resolve every pending request's cache-miss rows in place."""
+        incr: List[_Pending] = []
+        full: List[_Pending] = []
+        for p in pending:
+            if p.miss_rows.size == 0:
+                continue
+            ev = p.task.dctx.evaluator
+            if p.req.base is not None and ev.prefer_incremental:
+                incr.append(p)
+            else:
+                full.append(p)
+
+        def fill(p: _Pending, rows: np.ndarray, lat, bram, dead):
+            p.lat[rows], p.bram[rows], p.dead[rows] = lat, bram, dead
+
+        # full-solve rows: merge per design and dedup across tasks — one
+        # scheduler round turns into at most one unique-row batch per
+        # design (e.g. every SA variant proposing the Baseline-Max corner
+        # in the same round costs ONE solve)
+        merged = []
+        by_design: Dict[str, List[_Pending]] = {}
+        for p in full:
+            by_design.setdefault(p.task.dctx.name, []).append(p)
+        for name, plist in by_design.items():
+            big = np.concatenate(
+                [p.req.depths[p.miss_rows] for p in plist], axis=0)
+            uniq, inverse = np.unique(big, axis=0, return_inverse=True)
+            merged.append((name, plist, uniq, inverse))
+
+        def scatter(name, plist, inverse, ulat, ubram, udead, wall):
+            total = len(inverse)
+            off = 0
+            for p in plist:
+                n = p.miss_rows.size
+                sel = inverse[off:off + n]
+                off += n
+                fill(p, p.miss_rows, ulat[sel], ubram[sel], udead[sel])
+                p.task.eval_s += wall * n / max(total, 1)
+
+        def incr_inline(p: _Pending):
+            rows = p.miss_rows
+            t0 = time.perf_counter()
+            l, b, dd = p.task.dctx.evaluator.evaluate_incremental(
+                p.req.base[rows], p.req.depths[rows])
+            p.task.eval_s += time.perf_counter() - t0
+            fill(p, rows, l, b, dd)
+
+        if self.hetero is not None and merged:
+            for p in incr:
+                incr_inline(p)
+            t0 = time.perf_counter()
+            results = self.hetero.dispatch(
+                [(name, uniq) for name, _, uniq, _ in merged])
+            dt = time.perf_counter() - t0
+            total = sum(u.shape[0] for _, _, u, _ in merged)
+            for (name, plist, uniq, inverse), (l, b, dd) in zip(
+                    merged, results):
+                share = dt * uniq.shape[0] / max(total, 1)
+                scatter(name, plist, inverse, l, b, dd, share)
+            return
+
+        if self.pool is None:
+            for p in incr:
+                incr_inline(p)
+            for name, plist, uniq, inverse in merged:
+                ev = self.designs[name].evaluator
+                t0 = time.perf_counter()
+                l, b, dd = ev.evaluate(uniq)
+                dt = time.perf_counter() - t0
+                scatter(name, plist, inverse, l, b, dd, dt)
+            return
+
+        # ------- pooled: lane 0 is this process, overlapped with the
+        # pool between submit() and collect()
+        n_lanes = self.spec.workers + 1
+        load = [0.0] * n_lanes
+        jobs: List[Tuple[int, str, np.ndarray, Optional[np.ndarray]]] = []
+        job_sinks: List[Tuple[_Pending, np.ndarray]] = []
+        main_incr: List[_Pending] = []
+        for p in incr:
+            rows = p.miss_rows
+            lane = p.task.worker
+            load[lane] += rows.size * p.task.dctx.graph.n_events
+            if lane == 0:
+                main_incr.append(p)
+            else:
+                jobs.append((lane - 1, p.task.dctx.name,
+                             p.req.depths[rows], p.req.base[rows]))
+                job_sinks.append((p, rows))
+        # split each design's unique rows into per-lane chunks, balanced
+        # by row cost (~ event count of the owning design)
+        main_full: List[Tuple[int, np.ndarray]] = []
+        pool_full: List[Tuple[int, np.ndarray]] = []  # (merged_idx, sel)
+        for mi, (name, _plist, uniq, _inv) in enumerate(merged):
+            cost = self.designs[name].graph.n_events
+            sel: Dict[int, List[int]] = {}
+            for r in range(uniq.shape[0]):
+                lane = int(np.argmin(load))
+                load[lane] += cost
+                sel.setdefault(lane, []).append(r)
+            for lane, rsel in sel.items():
+                rsel = np.asarray(rsel)
+                if lane == 0:
+                    main_full.append((mi, rsel))
+                else:
+                    pool_full.append((mi, rsel))
+                    jobs.append((lane - 1, name, uniq[rsel], None))
+        handle = self.pool.submit(jobs) if jobs else None
+
+        acc: Dict[int, Tuple] = {}
+
+        def acc_for(mi):
+            uniq = merged[mi][2]
+            return acc.setdefault(mi, (
+                np.zeros(uniq.shape[0], dtype=np.int64),
+                np.zeros(uniq.shape[0], dtype=np.int64),
+                np.zeros(uniq.shape[0], dtype=bool), [0.0]))
+
+        # main-lane work runs while the pool workers chew on theirs
+        for p in main_incr:
+            incr_inline(p)
+        for mi, rsel in main_full:
+            name, _plist, uniq, _inv = merged[mi]
+            ev = self.designs[name].evaluator
+            t0 = time.perf_counter()
+            l, b, dd = ev.evaluate(uniq[rsel])
+            st = acc_for(mi)
+            st[0][rsel], st[1][rsel], st[2][rsel] = l, b, dd
+            st[3][0] += time.perf_counter() - t0
+
+        if handle is not None:
+            results = self.pool.collect(handle)
+            n_incr_jobs = len(job_sinks)
+            for (p, rows), (l, b, dd, dt) in zip(
+                    job_sinks, results[:n_incr_jobs]):
+                fill(p, rows, l, b, dd)
+                p.task.eval_s += dt
+            for (mi, rsel), (l, b, dd, dt) in zip(
+                    pool_full, results[n_incr_jobs:]):
+                st = acc_for(mi)
+                st[0][rsel], st[1][rsel], st[2][rsel] = l, b, dd
+                st[3][0] += dt
+        for mi, (ulat, ubram, udead, wall) in acc.items():
+            name, plist, uniq, inverse = merged[mi]
+            scatter(name, plist, inverse, ulat, ubram, udead, wall[0])
+
+    def _round(self) -> int:
+        """Advance every active task one step; returns #active tasks."""
+        pending: List[_Pending] = []
+        for task in self.tasks:
+            if task.done:
+                continue
+            req = task.opt.propose()
+            if req is None:
+                task.finalize()
+                continue
+            lat, bram, dead, miss = task.dctx.cache.lookup(req.depths)
+            pending.append(_Pending(task, req, lat, bram, dead,
+                                    np.flatnonzero(miss)))
+        self._route(pending)
+        for p in pending:
+            rows = p.miss_rows
+            if rows.size:
+                p.task.dctx.cache.insert(
+                    p.req.depths[rows], p.lat[rows], p.bram[rows],
+                    p.dead[rows])
+            p.task.ctx.record(p.req.depths, p.lat, p.bram, p.dead,
+                              rows.size)
+            p.task.step_miss.append(int(rows.size))
+            p.task.opt.observe(p.lat, p.bram, p.dead)
+            if self.spec.track_hypervolume:
+                p.task.hv_trace.append(
+                    (p.task.ctx.n_evals, p.task.running_hypervolume()))
+        self.round += 1
+        return len(pending)
+
+    # -------------------------------------------------------------- runs
+    def run(self, max_rounds: Optional[int] = None):
+        """Run rounds until every task finishes (or ``max_rounds``).
+
+        Returns the :class:`~repro.core.campaign.store.ResultStore` over
+        the finished tasks.  When a checkpoint path is configured, state
+        is saved every ``spec.checkpoint_every`` rounds and at exit.
+        """
+        from repro.core.campaign.state import save_checkpoint
+        self._ensure_pool()
+        rounds_done = 0
+        try:
+            while True:
+                active = self._round()
+                rounds_done += 1
+                due = (self.checkpoint_path is not None
+                       and self.spec.checkpoint_every > 0
+                       and self.round % self.spec.checkpoint_every == 0)
+                if active == 0:
+                    break
+                if due:
+                    save_checkpoint(self, self.checkpoint_path)
+                if max_rounds is not None and rounds_done >= max_rounds:
+                    break
+            if self.checkpoint_path is not None:
+                save_checkpoint(self, self.checkpoint_path)
+        finally:
+            self.close()
+        return self.result_store()
+
+    def result_store(self):
+        from repro.core.campaign.store import ResultStore
+        store = ResultStore()
+        for task in self.tasks:
+            if task.done:
+                store.add(task)
+        return store
+
+    @property
+    def finished(self) -> bool:
+        return all(t.done for t in self.tasks)
+
+    def _ensure_pool(self):
+        """Recreate the worker pool if a previous ``run()`` closed it
+        (e.g. a ``max_rounds`` pause) and work remains."""
+        if (self.pool is None and self.spec.workers > 0
+                and not self.spec.hetero and not self.finished):
+            from repro.core.campaign.pool import WorkerPool
+            self.pool = WorkerPool(
+                self.spec.workers, max_iters=self.spec.max_iters,
+                graphs={k: d.graph for k, d in self.designs.items()})
+
+    def close(self):
+        if self.pool is not None:
+            self.pool.close()
+            self.pool = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # ------------------------------------------------------------ resume
+    @classmethod
+    def resume(cls, path: str, workers: Optional[int] = None,
+               checkpoint_path: Optional[str] = None) -> "Campaign":
+        """Rebuild a campaign from a checkpoint and replay it to the
+        recorded position (see ``repro.core.campaign.state``).
+
+        ``workers`` optionally overrides the worker count (a runtime
+        concern, not part of the deterministic state); the checkpoint
+        keeps being written to ``checkpoint_path`` (default: ``path``).
+        """
+        from repro.core.campaign.state import load_checkpoint, replay
+        data = load_checkpoint(path)
+        spec_dict = dict(data["spec"])
+        if workers is not None:
+            spec_dict["workers"] = workers
+        spec = CampaignSpec(**spec_dict)
+        tasks = [TaskSpec(design=t["design"], optimizer=t["optimizer"],
+                          seed=t["seed"], budget=t["budget"],
+                          kwargs=tuple(map(tuple, t["kwargs"])))
+                 for t in data["tasks"]]
+        camp = cls(spec, tasks=tasks,
+                   checkpoint_path=checkpoint_path or path)
+        replay(camp, data)
+        return camp
+
+
+def default_workers() -> int:
+    """Worker count for ``--workers auto``.
+
+    The scheduler's own process is evaluation lane 0, so ``cpu - 1``
+    pool workers saturate the machine without oversubscribing (capped —
+    campaign rounds rarely keep more than a few lanes busy)."""
+    return max(1, min(4, (os.cpu_count() or 2) - 1))

@@ -31,7 +31,7 @@ The same generator is driven by two independent engines:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Generator, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Generator, List, Optional
 
 # Op kinds (shared integer encoding across tracer / oracle / simulators).
 READ = 0

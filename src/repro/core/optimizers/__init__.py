@@ -1,6 +1,7 @@
 """FIFOAdvisor optimizer zoo (paper §III-D + beyond-paper additions)."""
 
-from repro.core.optimizers.base import EvalContext, Optimizer, OptResult
+from repro.core.optimizers.base import (EvalContext, EvalRequest, Optimizer,
+                                        OptResult)
 from repro.core.optimizers.random_search import (GroupedRandomSearch,
                                                  RandomSearch)
 from repro.core.optimizers.annealing import (GroupedSimulatedAnnealing,
@@ -22,7 +23,7 @@ OPTIMIZERS = {
 PAPER_OPTIMIZERS = ("greedy", "random", "grouped_random", "sa", "grouped_sa")
 
 __all__ = [
-    "EvalContext", "Optimizer", "OptResult", "OPTIMIZERS",
+    "EvalContext", "EvalRequest", "Optimizer", "OptResult", "OPTIMIZERS",
     "PAPER_OPTIMIZERS", "RandomSearch", "GroupedRandomSearch",
     "SimulatedAnnealing", "GroupedSimulatedAnnealing", "GreedySearch",
     "NSGA2", "VmapSearch",

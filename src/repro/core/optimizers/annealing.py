@@ -15,11 +15,9 @@ against the sample budget, mirroring the paper's accounting.
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
-from repro.core.optimizers.base import EvalContext, Optimizer, OptResult
+from repro.core.optimizers.base import EvalContext, EvalRequest, Optimizer
 
 
 class SimulatedAnnealing(Optimizer):
@@ -45,8 +43,7 @@ class SimulatedAnnealing(Optimizer):
         return (ctx.depths_from_group_indices(idx) if self.grouped
                 else ctx.depths_from_indices(idx))
 
-    def run(self) -> OptResult:
-        t_start = time.perf_counter()
+    def _steps(self):
         ctx = self.ctx
         rng = ctx.rng
         dims = self._dims()
@@ -55,7 +52,7 @@ class SimulatedAnnealing(Optimizer):
         betas = np.linspace(0.0, 1.0, N)
 
         # Normalizers from the two baselines (evaluated first, on budget).
-        lat0, bram0, _ = ctx.evaluate(
+        lat0, bram0, _ = yield EvalRequest(
             np.stack([ctx.baseline_max(), ctx.baseline_min()]))
         L0 = max(float(lat0[0]), 1.0)
         B0 = max(float(bram0[0]), 1.0)
@@ -67,7 +64,7 @@ class SimulatedAnnealing(Optimizer):
 
         # init chains at the max-index corner (Baseline-Max-like: feasible)
         state = np.tile((dims - 1)[None, :], (N, 1)).astype(np.int64)
-        lat, bram, dead = ctx.evaluate(self._depths(state))
+        lat, bram, dead = yield EvalRequest(self._depths(state))
         budget -= N
         e_cur = energy(lat, bram, dead)
 
@@ -90,8 +87,8 @@ class SimulatedAnnealing(Optimizer):
 
             # proposals differ from their chain's state by one coordinate:
             # eligible for the incremental re-simulation fast path
-            lat, bram, dead = ctx.evaluate_delta(
-                self._depths(state), self._depths(prop))
+            lat, bram, dead = yield EvalRequest(
+                self._depths(prop), base=self._depths(state))
             e_new = energy(lat, bram, dead)
             with np.errstate(invalid="ignore", over="ignore"):
                 accept = (e_new <= e_cur) | (
@@ -101,8 +98,6 @@ class SimulatedAnnealing(Optimizer):
             state[accept] = prop[accept]
             e_cur = np.where(accept, e_new, e_cur)
             temp *= cool
-
-        return ctx.result(self.name, time.perf_counter() - t_start)
 
 
 class GroupedSimulatedAnnealing(SimulatedAnnealing):

@@ -3,6 +3,21 @@
 All optimizers operate on *index vectors* into per-FIFO (or per-group)
 pruned candidate grids (§III-C breakpoints), never on raw depths — this is
 the paper's search-space pruning, applied uniformly.
+
+Optimizers are *stepwise*: each subclass implements the ``_steps``
+generator, which yields :class:`EvalRequest` batches and receives the
+evaluated ``(latency, bram, deadlock)`` arrays back at the yield point.
+Two drivers consume the generator:
+
+* :meth:`Optimizer.run` — the legacy blocking API; fulfills every request
+  against the optimizer's own :class:`EvalContext` and returns the final
+  :class:`OptResult`.
+* :meth:`Optimizer.propose` / :meth:`Optimizer.observe` — the stepwise
+  API; a scheduler (``repro.core.campaign``) interleaves many optimizers
+  and routes their requests into shared, cross-design dispatches.
+
+Both drivers see identical request/result sequences, so they produce
+identical histories and frontiers for the same seed.
 """
 
 from __future__ import annotations
@@ -18,6 +33,31 @@ from repro.core.bram import breakpoints
 from repro.core.pareto import pareto_front
 from repro.core.simgraph import SimGraph
 from repro.core.simulate import BatchedEvaluator
+
+
+@dataclasses.dataclass
+class EvalRequest:
+    """One batch of depth configurations an optimizer wants evaluated.
+
+    ``base`` marks the rows as single-/few-FIFO deltas of already-solved
+    configurations (one shared (F,) row or a per-row (C, F) matrix),
+    making them eligible for the incremental re-simulation fast path.
+    """
+
+    depths: np.ndarray
+    base: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        self.depths = np.atleast_2d(np.asarray(self.depths, dtype=np.int64))
+        if self.base is not None:
+            base = np.atleast_2d(np.asarray(self.base, dtype=np.int64))
+            if base.shape[0] == 1 and self.depths.shape[0] > 1:
+                base = np.broadcast_to(base, self.depths.shape)
+            self.base = base
+
+    @property
+    def n_rows(self) -> int:
+        return self.depths.shape[0]
 
 
 @dataclasses.dataclass
@@ -141,6 +181,27 @@ class EvalContext:
         return np.full(self.g.n_fifos, 2, dtype=np.int64)
 
     # ---------------------------------------------------------- evaluation
+    def record(self, depth_matrix: np.ndarray, lat: np.ndarray,
+               bram: np.ndarray, dead: np.ndarray, n_new_evals: int):
+        """Append one evaluated batch to the history and count budget.
+
+        Used by :meth:`_finish` and by external schedulers
+        (``repro.core.campaign``) that resolve cache misses themselves;
+        ``n_new_evals`` is the number of rows that were actually simulated
+        (cache misses) — only those count against the budget.
+
+        The config matrix is COPIED into the history: optimizers may (and
+        greedy does) keep mutating their working arrays after a request
+        resolves, and ``np.asarray``/``atleast_2d`` alias rather than
+        copy.
+        """
+        self.n_evals += int(n_new_evals)
+        self._configs.append(np.array(depth_matrix, dtype=np.int64))
+        self._lat.append(lat)
+        self._bram.append(bram)
+        self._dead.append(dead)
+        return lat, bram, dead
+
     def _finish(self, depth_matrix, lat, bram, dead, miss, base=None):
         """Resolve cache misses, record history, count budget.
 
@@ -157,12 +218,7 @@ class EvalContext:
                 l, b, dd = self.ev.evaluate(sub)
             lat[rows], bram[rows], dead[rows] = l, b, dd
             self.cache.insert(sub, l, b, dd)
-        self.n_evals += int(rows.size)
-        self._configs.append(depth_matrix)
-        self._lat.append(lat)
-        self._bram.append(bram)
-        self._dead.append(dead)
-        return lat, bram, dead
+        return self.record(depth_matrix, lat, bram, dead, rows.size)
 
     def evaluate(self, depth_matrix: np.ndarray
                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -193,35 +249,108 @@ class EvalContext:
             np.asarray(base)[None, :], np.asarray(depths)[None, :])
         return int(lat[0]), int(bram[0]), bool(dead[0])
 
-    def result(self, name: str, runtime_s: float) -> OptResult:
+    def fulfill(self, req: EvalRequest
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Evaluate one :class:`EvalRequest` (cache + history + budget)."""
+        if req.base is not None:
+            return self.evaluate_delta(req.base, req.depths)
+        return self.evaluate(req.depths)
+
+    def history(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                               np.ndarray, np.ndarray]:
+        """Concatenated evaluation history and per-call batch lengths:
+        ``(configs (N, F), lat (N,), bram (N,), dead (N,), steps (S,))``.
+        The campaign checkpoint serializes exactly this."""
+        steps = np.asarray([c.shape[0] for c in self._configs],
+                           dtype=np.int64)
         if self._configs:
             cfgs = np.concatenate(self._configs, axis=0)
             lat = np.concatenate(self._lat)
             bram = np.concatenate(self._bram)
             dead = np.concatenate(self._dead)
-        else:  # pragma: no cover
+        else:
             F = self.g.n_fifos
             cfgs = np.zeros((0, F), dtype=np.int64)
             lat = bram = np.zeros(0, dtype=np.int64)
             dead = np.zeros(0, dtype=bool)
+        return cfgs, lat, bram, dead, steps
+
+    def result(self, name: str, runtime_s: float) -> OptResult:
+        cfgs, lat, bram, dead, _ = self.history()
         return OptResult(name=name, configs=cfgs, latency=lat, bram=bram,
                          deadlock=dead, runtime_s=runtime_s,
                          n_evals=self.n_evals)
 
 
 class Optimizer:
-    """Base class: subclasses implement ``run`` and return an OptResult."""
+    """Base class: subclasses implement the ``_steps`` generator.
+
+    The generator yields :class:`EvalRequest` batches and receives the
+    evaluated ``(latency, bram, deadlock)`` arrays at the yield point.
+    """
 
     name = "base"
 
     def __init__(self, ctx: EvalContext, budget: int = 1000):
         self.ctx = ctx
         self.budget = int(budget)
+        self._gen = None
+        self._pending: Optional[EvalRequest] = None
+        self._done = False
+        #: wall time spent inside the generator (proposal/acceptance logic,
+        #: excluding evaluation) — schedulers add their attributed eval time
+        self.step_s = 0.0
 
-    def run(self) -> OptResult:  # pragma: no cover - interface
+    def _steps(self):  # pragma: no cover - interface
+        """Yield :class:`EvalRequest`; receive ``(lat, bram, dead)``."""
         raise NotImplementedError
+        yield
 
-    def _timed(self, fn) -> OptResult:
+    # ------------------------------------------------------- stepwise API
+    def start(self) -> None:
+        """Prime the generator up to its first proposal (idempotent)."""
+        if self._gen is None and not self._done:
+            self._gen = self._steps()
+            self._advance(None)
+
+    def _advance(self, results) -> None:
         t0 = time.perf_counter()
-        fn()
+        try:
+            if results is None:
+                self._pending = next(self._gen)
+            else:
+                self._pending = self._gen.send(results)
+        except StopIteration:
+            self._pending = None
+            self._done = True
+        finally:
+            self.step_s += time.perf_counter() - t0
+
+    def propose(self) -> Optional[EvalRequest]:
+        """The outstanding batch to evaluate; None once the search ended."""
+        self.start()
+        return self._pending
+
+    def observe(self, lat: np.ndarray, bram: np.ndarray,
+                dead: np.ndarray) -> None:
+        """Deliver results for the outstanding proposal and step once."""
+        if self._pending is None:
+            raise RuntimeError(
+                f"{self.name}: observe() without a pending proposal")
+        self._advance((np.asarray(lat), np.asarray(bram), np.asarray(dead)))
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    # ------------------------------------------------------- blocking API
+    def run(self) -> OptResult:
+        """Drive ``_steps`` to completion against this optimizer's ctx."""
+        t0 = time.perf_counter()
+        while True:
+            req = self.propose()
+            if req is None:
+                break
+            lat, bram, dead = self.ctx.fulfill(req)
+            self.observe(lat, bram, dead)
         return self.ctx.result(self.name, time.perf_counter() - t0)

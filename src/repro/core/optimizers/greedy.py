@@ -10,11 +10,9 @@ for the smallest still-acceptable depth.
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
-from repro.core.optimizers.base import EvalContext, Optimizer, OptResult
+from repro.core.optimizers.base import EvalContext, EvalRequest, Optimizer
 
 
 class GreedySearch(Optimizer):
@@ -26,14 +24,13 @@ class GreedySearch(Optimizer):
         self.epsilon = float(epsilon)
         self.refine = refine
 
-    def run(self) -> OptResult:
-        t0 = time.perf_counter()
+    def _steps(self):
         ctx = self.ctx
         cur = ctx.baseline_max()
-        base_lat, _, base_dead = ctx.evaluate_one(cur)
-        if base_dead:  # pragma: no cover - Baseline-Max is deadlock-free
+        lat, _, dead = yield EvalRequest(cur)
+        if dead[0]:  # pragma: no cover - Baseline-Max is deadlock-free
             raise RuntimeError("Baseline-Max deadlocked")
-        limit = base_lat * (1.0 + self.epsilon)
+        limit = int(lat[0]) * (1.0 + self.epsilon)
 
         order = np.argsort(-ctx.g.max_occupancy, kind="stable")
         rejected = []
@@ -46,8 +43,8 @@ class GreedySearch(Optimizer):
             trial[f] = 2
             # single-FIFO move vs the accepted config: the incremental
             # re-simulation fast path re-solves only coupled segments
-            lat, _, dead = ctx.evaluate_one_delta(cur, trial)
-            if not dead and lat <= limit:
+            lat, _, dead = yield EvalRequest(trial, base=cur)
+            if not dead[0] and lat[0] <= limit:
                 cur = trial
             else:
                 rejected.append(int(f))
@@ -63,14 +60,12 @@ class GreedySearch(Optimizer):
                     mid = (lo + hi) // 2
                     trial = cur.copy()
                     trial[f] = cand[mid]
-                    lat, _, dead = ctx.evaluate_one_delta(cur, trial)
-                    if not dead and lat <= limit:
+                    lat, _, dead = yield EvalRequest(trial, base=cur)
+                    if not dead[0] and lat[0] <= limit:
                         hi = mid
                     else:
                         lo = mid
                 if cand[hi] < cur[f]:
                     cur[f] = cand[hi]
             # re-evaluate final config so it is part of the history
-            ctx.evaluate_one(cur)
-
-        return ctx.result(self.name, time.perf_counter() - t0)
+            yield EvalRequest(cur)

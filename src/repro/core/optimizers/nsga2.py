@@ -9,12 +9,9 @@ make it budget-hungry.
 
 from __future__ import annotations
 
-import time
-from typing import Tuple
-
 import numpy as np
 
-from repro.core.optimizers.base import EvalContext, Optimizer, OptResult
+from repro.core.optimizers.base import EvalContext, EvalRequest, Optimizer
 
 
 def _non_dominated_sort(obj: np.ndarray) -> np.ndarray:
@@ -77,16 +74,14 @@ class NSGA2(Optimizer):
     # Large finite penalty keeps crowding-distance arithmetic well-defined.
     _PENALTY = 1e12
 
-    def _objectives(self, idx: np.ndarray
-                    ) -> Tuple[np.ndarray, np.ndarray]:
-        lat, bram, dead = self.ctx.evaluate(self._depths(idx))
+    def _objectives(self, lat: np.ndarray, bram: np.ndarray,
+                    dead: np.ndarray) -> np.ndarray:
         penal = np.where(dead, self._PENALTY, 0.0)
-        obj = np.stack([lat + penal, bram + penal], axis=1).astype(np.float64)
-        return obj, dead
+        return np.stack([lat + penal, bram + penal],
+                        axis=1).astype(np.float64)
 
-    def run(self) -> OptResult:
-        t0 = time.perf_counter()
-        ctx, rng = self.ctx, self.ctx.rng
+    def _steps(self):
+        rng = self.ctx.rng
         dims = self._dims()
         D = len(dims)
         P = min(self.pop, max(8, self.budget // 4))
@@ -96,7 +91,8 @@ class NSGA2(Optimizer):
             [rng.integers(0, dims[d], size=P) for d in range(D)], axis=1)
         pop[0] = dims - 1      # Baseline-Max corner
         pop[1] = 0             # Baseline-Min corner
-        obj, _ = self._objectives(pop)
+        lat, bram, dead = yield EvalRequest(self._depths(pop))
+        obj = self._objectives(lat, bram, dead)
         remaining = self.budget - P
 
         while remaining >= P:
@@ -117,7 +113,8 @@ class NSGA2(Optimizer):
             if mmask.any():
                 noise = rng.integers(0, dims[None, :].repeat(P, 0))
                 child = np.where(mmask, noise, child)
-            cobj, _ = self._objectives(child)
+            lat, bram, dead = yield EvalRequest(self._depths(child))
+            cobj = self._objectives(lat, bram, dead)
             remaining -= P
             # environmental selection from parents + children
             allpop = np.concatenate([pop, child], axis=0)
@@ -127,5 +124,3 @@ class NSGA2(Optimizer):
             order = np.lexsort((-c, r))
             keep = order[:P]
             pop, obj = allpop[keep], allobj[keep]
-
-        return ctx.result(self.name, time.perf_counter() - t0)

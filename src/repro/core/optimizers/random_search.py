@@ -8,19 +8,16 @@ per stream-array group (Stream-HLS arrays behave alike).
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
-from repro.core.optimizers.base import EvalContext, Optimizer, OptResult
+from repro.core.optimizers.base import EvalRequest, Optimizer
 
 
 class RandomSearch(Optimizer):
     name = "random"
     batch = 128
 
-    def run(self) -> OptResult:
-        t0 = time.perf_counter()
+    def _steps(self):
         ctx = self.ctx
         remaining = self.budget
         F = ctx.g.n_fifos
@@ -29,17 +26,15 @@ class RandomSearch(Optimizer):
             idx = np.stack(
                 [ctx.rng.integers(0, ctx.grid_sizes[f], size=C)
                  for f in range(F)], axis=1)
-            ctx.evaluate(ctx.depths_from_indices(idx))
+            yield EvalRequest(ctx.depths_from_indices(idx))
             remaining -= C
-        return ctx.result(self.name, time.perf_counter() - t0)
 
 
 class GroupedRandomSearch(Optimizer):
     name = "grouped_random"
     batch = 128
 
-    def run(self) -> OptResult:
-        t0 = time.perf_counter()
+    def _steps(self):
         ctx = self.ctx
         remaining = self.budget
         G = len(ctx.groups)
@@ -48,6 +43,5 @@ class GroupedRandomSearch(Optimizer):
             gidx = np.stack(
                 [ctx.rng.integers(0, ctx.group_grid_sizes[gi], size=C)
                  for gi in range(G)], axis=1)
-            ctx.evaluate(ctx.depths_from_group_indices(gidx))
+            yield EvalRequest(ctx.depths_from_group_indices(gidx))
             remaining -= C
-        return ctx.result(self.name, time.perf_counter() - t0)

@@ -14,12 +14,9 @@ paper's sequential optimizers — measured in benchmarks/convergence.py.
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
-from repro.core.optimizers.base import EvalContext, Optimizer, OptResult
-from repro.core.pareto import pareto_front
+from repro.core.optimizers.base import EvalContext, EvalRequest, Optimizer
 
 
 class VmapSearch(Optimizer):
@@ -31,14 +28,14 @@ class VmapSearch(Optimizer):
         self.explore_batch = int(explore_batch)
         self.descend_batch = int(descend_batch)
 
-    def run(self) -> OptResult:
-        t0 = time.perf_counter()
+    def _steps(self):
         ctx, rng = self.ctx, self.ctx.rng
         G = len(ctx.groups)
         remaining = self.budget
 
         # seed with the two baselines
-        ctx.evaluate(np.stack([ctx.baseline_max(), ctx.baseline_min()]))
+        yield EvalRequest(
+            np.stack([ctx.baseline_max(), ctx.baseline_min()]))
         remaining -= 2
 
         explore = True
@@ -48,7 +45,7 @@ class VmapSearch(Optimizer):
                 gidx = np.stack(
                     [rng.integers(0, ctx.group_grid_sizes[gi], size=C)
                      for gi in range(G)], axis=1)
-                ctx.evaluate(ctx.depths_from_group_indices(gidx))
+                yield EvalRequest(ctx.depths_from_group_indices(gidx))
                 remaining -= C
             else:
                 res = ctx.result("tmp", 0.0)
@@ -77,8 +74,6 @@ class VmapSearch(Optimizer):
                     mask = rng.random((nb, F)) < 0.5
                     trial[:nb] = np.where(mask, trial[:nb],
                                           other.astype(np.int64))
-                ctx.evaluate(trial)
+                yield EvalRequest(trial)
                 remaining -= C
             explore = not explore
-
-        return ctx.result(self.name, time.perf_counter() - t0)

@@ -30,7 +30,7 @@ from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.design import DELAY, Design, READ, TaskCtx, WRITE
+from repro.core.design import DELAY, Design, READ, TaskCtx
 from repro.core.bram import fifo_read_latency
 
 

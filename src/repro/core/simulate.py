@@ -39,8 +39,7 @@ import numpy as np
 
 from repro.core.backends import (BIG, BUCKETS, CONVERGED, DEADLOCK,
                                  F32_EXACT_LIMIT, UNRESOLVED, DispatchPolicy,
-                                 WorklistBackend, bram_count_jnp,
-                                 evaluate_np, get_backend)
+                                 WorklistBackend, evaluate_np, get_backend)
 from repro.core.backends.worklist import WorklistState
 from repro.core.bram import design_bram_np
 from repro.core.simgraph import SimGraph
@@ -51,12 +50,21 @@ __all__ = [
 ]
 
 
+def __getattr__(name):
+    # re-exported lazily so the numpy worklist path never imports jax
+    if name == "bram_count_jnp":
+        from repro.core.backends.operands import bram_count_jnp
+        return bram_count_jnp
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 @dataclasses.dataclass
 class BatchStats:
     n_calls: int = 0
     n_configs: int = 0
     n_fallbacks: int = 0
     n_incremental: int = 0
+    n_dedup: int = 0          # duplicate in-batch rows solved once
     wall_s: float = 0.0
 
 
@@ -98,14 +106,26 @@ class BatchedEvaluator:
 
         Routes through the dispatch policy: bucket-padded jit reuse for the
         batched backends, exact worklist escalation for UNRESOLVED rows,
-        and -1 latency on deadlocked rows.
+        and -1 latency on deadlocked rows.  Duplicate rows within the
+        batch are solved once and scattered back (exact, order-preserving;
+        DSE batches repeat rows constantly — annealing chains initialize
+        at the same corner, frontier refiners revisit the same configs).
         """
         depth_matrix = np.atleast_2d(np.asarray(depth_matrix))
         t_start = time.perf_counter()
-        lat, bram, dead = self.dispatch.dispatch(
-            self._impl, depth_matrix, self.stats)
+        C = depth_matrix.shape[0]
+        uniq, inverse = np.unique(depth_matrix, axis=0,
+                                  return_inverse=True)
+        if uniq.shape[0] < C:
+            lat, bram, dead = self.dispatch.dispatch(
+                self._impl, uniq, self.stats)
+            lat, bram, dead = lat[inverse], bram[inverse], dead[inverse]
+            self.stats.n_dedup += C - uniq.shape[0]
+        else:
+            lat, bram, dead = self.dispatch.dispatch(
+                self._impl, depth_matrix, self.stats)
         self.stats.n_calls += 1
-        self.stats.n_configs += depth_matrix.shape[0]
+        self.stats.n_configs += C
         self.stats.wall_s += time.perf_counter() - t_start
         return lat, bram, dead
 

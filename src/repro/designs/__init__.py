@@ -1,6 +1,8 @@
 """Benchmark dataflow designs (Stream-HLS-style kernels + DDCF designs)."""
 
-from repro.designs.streamhls import STREAMHLS_DESIGNS, make_design
+from repro.designs.streamhls import (FAST_DESIGNS, QUICK_DESIGNS,
+                                     STREAMHLS_DESIGNS, make_design)
 from repro.designs.ddcf import flowgnn_pna, mult_by_2
 
-__all__ = ["STREAMHLS_DESIGNS", "make_design", "flowgnn_pna", "mult_by_2"]
+__all__ = ["FAST_DESIGNS", "QUICK_DESIGNS", "STREAMHLS_DESIGNS",
+           "make_design", "flowgnn_pna", "mult_by_2"]

@@ -13,7 +13,6 @@ registry ``STREAMHLS_DESIGNS`` maps name -> factory.
 
 from __future__ import annotations
 
-import math
 from typing import Callable, Dict, List
 
 from repro.core.design import Design
@@ -418,6 +417,15 @@ STREAMHLS_DESIGNS: Dict[str, Callable[[], Design]] = {
 
 TABLE_II_DESIGNS = [n for n in STREAMHLS_DESIGNS
                     if n not in ("gesummv", "k7mmtree_balanced", "ResMLP")]
+
+#: representative fast subset shared by the benchmarks (FULL=1 runs
+#: everything) and the campaign CLI's ``--designs fast``
+FAST_DESIGNS = ("atax", "gemm", "gesummv", "FeedForward", "Autoencoder",
+                "k7mmtree_balanced", "k15mmseq", "k15mmtree",
+                "ResidualBlock", "mvt")
+
+#: CI smoke pair (QUICK=1 / the campaign CLI's ``--designs quick``)
+QUICK_DESIGNS = ("gemm", "FeedForward")
 
 
 def make_design(name: str) -> Design:

@@ -27,7 +27,6 @@ Layout of the per-config output row (float32, 128 lanes):
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import numpy as np
 

@@ -28,9 +28,11 @@ import jax.numpy as jnp
 from repro.core.backends.base import CONVERGED, DEADLOCK, UNRESOLVED
 from repro.core.backends.operands import (bram_count_jnp, depth_operands,
                                           get_operands)
+from repro.core.bram import (BRAM_READ_LATENCY, SRL_BITS, SRL_DEPTH,
+                             SRL_READ_LATENCY)
 from repro.core.simgraph import SimGraph
 from repro.kernels.fifo_eval.fifo_eval import fifo_eval_pallas
-from repro.kernels.fifo_eval.ref import fifo_eval_ref
+from repro.kernels.fifo_eval.ref import fifo_eval_ref, fifo_eval_ref_hetero
 
 
 def make_batched_eval(ev_or_graph, interpret: bool = True,
@@ -73,5 +75,63 @@ def make_batched_eval(ev_or_graph, interpret: bool = True,
         lat, bram, status = jax.device_get(
             run(jnp.asarray(depth_matrix, dtype=jnp.int32)))
         return lat, bram, status
+
+    return call
+
+
+def make_hetero_batched_eval(max_iters: int = 64) -> Callable:
+    """Build the CROSS-DESIGN batched evaluation closure.
+
+    Consumes the stacked per-row batch dict produced by
+    :func:`repro.core.backends.operands.stack_hetero` — every row carries
+    its own (padded) event tables, so one vmapped dispatch can mix rows
+    from many SimGraphs.  The depth-dependent operand computation mirrors
+    :func:`~repro.core.backends.operands.depth_operands` with per-row
+    gathers (``take_along_axis`` instead of closed-over tables); the two
+    are cross-validated in ``tests/test_campaign.py``.
+
+    Returns ``call(batch) -> (latency i64, bram i64, status i8)``; the
+    jit cache is keyed on the batch shape, so callers should bucket the
+    total row count (see ``HeteroDispatcher``).
+    """
+
+    @jax.jit
+    def run(b):
+        d = b["depths"].astype(jnp.int32)              # (C, F*)
+        w = b["widths"].astype(jnp.int32)              # (C, F*)
+        is_bram = ~((d <= SRL_DEPTH) | (d * w <= SRL_BITS))
+        rd_lat_f = jnp.where(is_bram, float(BRAM_READ_LATENCY),
+                             float(SRL_READ_LATENCY))
+        fifo = b["fifo"].astype(jnp.int32)             # (C, E*)
+        rd_lat_e = jnp.take_along_axis(rd_lat_f, fifo, axis=1)
+        d_e = jnp.take_along_axis(d, fifo, axis=1)
+        bp_pos = b["rank"].astype(jnp.int32) - d_e
+        is_write = b["is_write"]
+        overrun = is_write & (bp_pos >= b["evt_n_reads"])
+        structural = jnp.any(overrun, axis=1)          # (C,)
+        bp_valid = (is_write & (bp_pos >= 0) & ~overrun
+                    ).astype(jnp.float32)
+        flat = jnp.clip(b["evt_read_base"] + bp_pos, 0,
+                        b["n_flat_reads"][:, None] - 1)
+        bp_idx = jnp.take_along_axis(
+            b["read_evt_flat"].astype(jnp.int32), flat, axis=1)
+        out = fifo_eval_ref_hetero(
+            b["delta"], b["seg_start"], b["is_read"], b["has_data"],
+            b["data_idx"].astype(jnp.int32), b["end_bonus"],
+            rd_lat_e, bp_idx, bp_valid, b["bound"], max_iters=max_iters)
+        lat = jnp.maximum(out[:, 0], b["taskless"])
+        conv = out[:, 1] > 0
+        over = out[:, 2] > 0
+        status = jnp.where(
+            structural | over, DEADLOCK,
+            jnp.where(conv, CONVERGED, UNRESOLVED)).astype(jnp.int8)
+        bram = jnp.sum(bram_count_jnp(d, w), axis=1).astype(jnp.int32)
+        return lat, bram, status
+
+    def call(batch: dict) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        lat, bram, status = jax.device_get(
+            run({k: jnp.asarray(v) for k, v in batch.items()}))
+        lat = np.asarray(np.rint(lat), dtype=np.int64)
+        return lat, np.asarray(bram, dtype=np.int64), np.asarray(status)
 
     return call

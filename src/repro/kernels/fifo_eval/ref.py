@@ -10,7 +10,6 @@ arithmetic in f32) is a kernel bug; tests sweep shapes and designs.
 
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +22,51 @@ def _combine(x, y):
     a1, m1 = x
     a2, m2 = y
     return a1 + a2, jnp.maximum(m1 + a2, m2)
+
+
+def fifo_eval_ref_hetero(
+    delta: jnp.ndarray, segst: jnp.ndarray, is_read: jnp.ndarray,
+    has_data: jnp.ndarray, data_idx: jnp.ndarray, end_bonus: jnp.ndarray,
+    rd_lat: jnp.ndarray, bp_idx: jnp.ndarray, bp_valid: jnp.ndarray,
+    bound: jnp.ndarray, *, max_iters: int,
+) -> jnp.ndarray:
+    """Cross-design variant of :func:`fifo_eval_ref`: every operand is
+    per-row (each row may come from a *different* SimGraph padded to a
+    shared ``E*`` envelope), and the deadlock bound is a (C,) vector.
+    Returns (C, 4): [latency, converged, over_bound, iters] per row."""
+
+    def one(delta_r, segst_r, is_read_r, has_data_r, data_idx_r,
+            end_bonus_r, rd_lat_r, bp_idx_r, bp_valid_r, bound_r):
+        a_base = jnp.where(segst_r > 0, NEG, delta_r)
+
+        def step(t):
+            bd = jnp.where(has_data_r > 0, t[data_idx_r] + rd_lat_r, NEG)
+            bb = jnp.where(bp_valid_r > 0, t[bp_idx_r] + 1.0, NEG)
+            b = jnp.where(is_read_r > 0, bd, bb)
+            m = jnp.where(segst_r > 0, jnp.maximum(b, delta_r), b)
+            A, M = lax.associative_scan(_combine, (a_base, m))
+            return jnp.maximum(A, M)
+
+        def cond(state):
+            t, it, conv = state
+            return (~conv) & (it < max_iters) & (jnp.max(t) <= bound_r)
+
+        def body(state):
+            t, it, _ = state
+            t2 = step(t)
+            return t2, it + 1, jnp.all(t2 == t)
+
+        t0 = jnp.zeros(delta_r.shape[0], dtype=jnp.float32)
+        t, iters, conv = lax.while_loop(
+            cond, body, (step(t0), jnp.int32(1), jnp.bool_(False)))
+        latency = jnp.max(t + end_bonus_r)
+        over = jnp.max(t) > bound_r
+        return jnp.stack([latency, conv.astype(jnp.float32),
+                          over.astype(jnp.float32),
+                          iters.astype(jnp.float32)])
+
+    return jax.vmap(one)(delta, segst, is_read, has_data, data_idx,
+                         end_bonus, rd_lat, bp_idx, bp_valid, bound)
 
 
 def fifo_eval_ref(

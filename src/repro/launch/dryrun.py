@@ -28,7 +28,6 @@ import time
 import traceback
 from typing import Dict, Optional, Tuple
 
-import numpy as np
 
 import jax
 import jax.numpy as jnp

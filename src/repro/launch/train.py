@@ -12,10 +12,8 @@ step path, deterministic stateless data (restart == exact replay).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
-import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +21,7 @@ import jax.numpy as jnp
 from repro.configs import get_arch
 from repro.train import checkpoint as ckpt_lib
 from repro.train.data import DataConfig, SyntheticLM
-from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.optimizer import OptConfig
 from repro.train.steps import init_train_state, make_train_step
 
 

@@ -7,7 +7,7 @@ Compute runs in ``cdt`` (bf16 on TPU), params are stored fp32.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,7 @@ experts (DeepSeek-V2) are plain dense FFNs added to the routed output.
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

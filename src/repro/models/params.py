@@ -8,7 +8,7 @@ dry-run/pjit, and (c) ShapeDtypeStructs for ``jax.eval_shape``-style use.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Optional, Tuple
 
 import numpy as np
 

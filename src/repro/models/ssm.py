@@ -25,7 +25,6 @@ from jax import lax
 
 from repro.configs.base import ArchConfig
 from repro.models.params import ParamSpec
-from repro.models.sharding import constrain
 
 
 def ssd_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:

@@ -14,7 +14,6 @@ ahead of the token embeddings.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import numpy as np

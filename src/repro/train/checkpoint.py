@@ -19,7 +19,7 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, List, Optional
+from typing import List, Optional
 
 import numpy as np
 

@@ -9,7 +9,7 @@ sharding comes for free wherever params carry an "fsdp" axis.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

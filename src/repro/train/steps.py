@@ -6,14 +6,13 @@ cell and the ones train.py/serve.py actually execute on small configs.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.models.transformer import forward, init_cache, model_specs
+from repro.models.transformer import forward, model_specs
 from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
 
 

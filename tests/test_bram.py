@@ -1,12 +1,11 @@
 """BRAM model (Algorithm 1) unit + property tests."""
 
 import numpy as np
-import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core.bram import (BRAM18K_CONFIGS, bram_count, bram_count_np,
-                             breakpoints, breakpoints_brute, design_bram_np,
+from repro.core.bram import (bram_count, bram_count_np, breakpoints,
+                             breakpoints_brute, design_bram_np,
                              fifo_read_latency, is_srl)
 
 

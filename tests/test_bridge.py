@@ -1,10 +1,8 @@
 """FIFOAdvisor <-> pipeline-parallel bridge (DESIGN.md §5)."""
 
-import numpy as np
 
 from repro.core import FifoAdvisor
-from repro.core.bridge import PipelineStage, pipeline_design, \
-    stages_from_layer_cost
+from repro.core.bridge import pipeline_design, stages_from_layer_cost
 from repro.core.oracle import simulate
 from repro.core.tracer import collect_trace
 

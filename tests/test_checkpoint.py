@@ -1,7 +1,5 @@
 """Checkpointing: round-trip, atomic commit, pruning, async, resume."""
 
-import json
-import os
 
 import numpy as np
 import pytest

@@ -9,9 +9,9 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ARCHS, SHAPES, get_arch
+from repro.configs import ARCHS, get_arch
 from repro.models import params as pm
-from repro.models.transformer import forward, init_cache, model_specs
+from repro.models.transformer import forward, model_specs
 from repro.train.optimizer import OptConfig, init_opt_state
 from repro.train.steps import (make_decode_step, make_prefill_step,
                                make_train_step)

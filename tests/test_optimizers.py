@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core import FifoAdvisor
-from repro.core.optimizers import OPTIMIZERS, PAPER_OPTIMIZERS
+from repro.core.optimizers import OPTIMIZERS
 from repro.designs import make_design
 from repro.designs.ddcf import flowgnn_pna, mult_by_2
 

@@ -4,8 +4,8 @@ import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core.pareto import (alpha_score, hypervolume_2d, pareto_front,
-                               pareto_mask, select_alpha_point)
+from repro.core.pareto import (hypervolume_2d, pareto_front, pareto_mask,
+                               select_alpha_point)
 
 
 def _dominates(a, b):

@@ -1,7 +1,6 @@
 """Beyond-paper local lower-bound pruning (core/prune.py): soundness +
 effectiveness."""
 
-import numpy as np
 import pytest
 
 from repro.core import FifoAdvisor, build_simgraph

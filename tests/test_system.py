@@ -10,7 +10,7 @@ and the DSE produces the paper's qualitative outcome (grouped optimizers
 import numpy as np
 import pytest
 
-from repro.core import FifoAdvisor, build_simgraph, collect_trace, simulate
+from repro.core import FifoAdvisor, build_simgraph, simulate
 from repro.core.simulate import BatchedEvaluator
 from repro.designs import STREAMHLS_DESIGNS, flowgnn_pna, make_design
 from repro.designs.streamhls import TABLE_II_DESIGNS
