@@ -90,6 +90,27 @@ def check_campaign(base, cur, floor, frac, failures):
                 f"{frac:.0%} of baseline {ref:.2f}x")
 
 
+def check_service(base, cur, floor, frac, failures):
+    if cur is None:
+        failures.append("service.quick.json missing from current run")
+        return
+    if not cur.get("identical_frontiers"):
+        failures.append(
+            "service regression: per-session results differ from solo "
+            "FifoAdvisor.run() — batching changed results")
+    speedup = cur.get("service_speedup", 0.0)
+    if speedup < floor:
+        failures.append(
+            f"service speedup {speedup:.2f}x below hard floor "
+            f"{floor:.2f}x")
+    if base is not None:
+        ref = base.get("service_speedup")
+        if ref and speedup < frac * ref:
+            failures.append(
+                f"service speedup regression: {speedup:.2f}x < "
+                f"{frac:.0%} of baseline {ref:.2f}x")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", required=True,
@@ -104,6 +125,13 @@ def main(argv=None) -> int:
                     help="hard minimum campaign speedup")
     ap.add_argument("--campaign-frac", type=float, default=0.5,
                     help="required fraction of the baseline speedup")
+    # the quick service mix (4 sessions, tiny budgets) amortizes much
+    # less than the real workload (1.7x at default budgets), so the
+    # quick floor only catches "the service actively slows clients down"
+    ap.add_argument("--service-floor", type=float, default=0.8,
+                    help="hard minimum service speedup")
+    ap.add_argument("--service-frac", type=float, default=0.5,
+                    help="required fraction of the baseline speedup")
     args = ap.parse_args(argv)
 
     failures = []
@@ -115,14 +143,17 @@ def main(argv=None) -> int:
     check_campaign(load(args.baseline, "campaign.quick.json"),
                    load(args.current, "campaign.quick.json"),
                    args.campaign_floor, args.campaign_frac, failures)
+    check_service(load(args.baseline, "service.quick.json"),
+                  load(args.current, "service.quick.json"),
+                  args.service_floor, args.service_frac, failures)
 
     if failures:
         print("REGRESSION GATE FAILED:")
         for f in failures:
             print(f"  - {f}")
         return 1
-    print("regression gate passed "
-          "(accuracy exact, cache hit rate held, campaign speedup held)")
+    print("regression gate passed (accuracy exact, cache hit rate held, "
+          "campaign + service speedups held)")
     return 0
 
 

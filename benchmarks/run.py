@@ -12,7 +12,7 @@ import time
 def main() -> None:
     from benchmarks import (accuracy, batched_eval, campaign, case_study,
                             convergence, improvement, pareto_fronts,
-                            pruning, roofline, runtime)
+                            pruning, roofline, runtime, service)
 
     print("name,seconds,derived")
 
@@ -62,6 +62,12 @@ def main() -> None:
     print(f"campaign,{time.perf_counter() - t0:.2f},"
           f"speedup_vs_seq={cp['campaign_speedup']:.2f}x;"
           f"identical_frontiers={cp['identical_frontiers']}")
+
+    t0 = time.perf_counter()
+    sv = service.run()
+    print(f"service,{time.perf_counter() - t0:.2f},"
+          f"speedup_vs_solo={sv['service_speedup']:.2f}x;"
+          f"identical_frontiers={sv['identical_frontiers']}")
 
     t0 = time.perf_counter()
     pr = pruning.run()

@@ -1,0 +1,153 @@
+"""Service throughput: concurrent sessions vs sequential solo runs.
+
+Measures the same client workload two ways:
+
+``service``   one :class:`AdvisoryService` serving N sessions at once —
+              shared design registry (trace once per design), shared
+              per-design caches, cross-session merge/dedup of each
+              round's evaluation rows
+``solo``      the status quo an advisory service replaces: each client
+              runs its own ``FifoAdvisor(design).run(optimizer)`` —
+              fresh trace, fresh cache, one at a time
+
+Per-session results must be BIT-IDENTICAL between the two modes
+(asserted: configs, latencies, frontiers, hypervolumes); the service
+only reroutes evaluation, it never changes what a client gets back.
+Budget accounting ``n_evals`` counts cache misses and therefore shrinks
+under sharing — it is reported, not compared.
+
+Timing protocol (same as ``benchmarks/campaign.py``): every repeat
+measures both modes back-to-back, the order alternates between repeats,
+the speedup is computed per repeat (same-window ratio), and the reported
+number is the median across repeats — shared CI hosts are noisy.
+
+Session mix: row-count-budgeted optimizers only (random/SA families),
+so trajectories are independent of cache hit/miss history and both
+modes provably walk identical searches.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from benchmarks.common import budget, design_set, full_mode, save_json
+
+OPTIMIZERS = ("grouped_sa", "grouped_random")
+
+
+def session_mix(designs: List[str]) -> List[Tuple[str, str, int]]:
+    """N = len(designs) x len(OPTIMIZERS) sessions, seeds staggered so
+    no two sessions are identical twins."""
+    return [(d, o, si)
+            for si, d in enumerate(designs) for o in OPTIMIZERS]
+
+
+def _frontier_key(d, o, s):
+    return f"{d}:{o}:s{s}"
+
+
+def run_service(mix, bdg, progress: bool) -> Dict:
+    from repro.core.service import AdvisoryService
+    t0 = time.perf_counter()
+    with AdvisoryService(progress_events=progress) as svc:
+        sids = [svc.open_session(d, optimizer=o, budget=bdg, seed=s).id
+                for d, o, s in mix]
+        svc.run_until_idle()
+        results = {_frontier_key(*spec): svc.result(sid)
+                   for sid, spec in zip(sids, mix)}
+        wall = time.perf_counter() - t0
+        return {"wall_s": wall, "results": results,
+                "rounds": svc.batcher.rounds,
+                "n_evals": sum(r.result.n_evals
+                               for r in results.values())}
+
+
+def run_solo(mix, bdg) -> Dict:
+    from repro.core import FifoAdvisor
+    from repro.designs import make_design
+    t0 = time.perf_counter()
+    results = {}
+    for d, o, s in mix:
+        adv = FifoAdvisor(make_design(d))
+        results[_frontier_key(d, o, s)] = adv.run(o, budget=bdg, seed=s)
+    return {"wall_s": time.perf_counter() - t0, "results": results,
+            "n_evals": sum(r.result.n_evals for r in results.values())}
+
+
+def assert_identical(a: Dict, b: Dict) -> None:
+    assert set(a) == set(b)
+    for k in a:
+        ra, rb = a[k], b[k]
+        assert np.array_equal(ra.result.configs, rb.result.configs), k
+        assert np.array_equal(ra.result.latency, rb.result.latency), k
+        assert np.array_equal(ra.frontier_points, rb.frontier_points), k
+        assert ra.hypervolume() == rb.hypervolume(), k
+
+
+def run(repeats: int = 3) -> Dict:
+    designs = design_set()
+    if not full_mode():
+        designs = designs[:2]   # 2 designs x 2 optimizers = 4 sessions
+    bdg = budget()
+    mix = session_mix(designs)
+
+    modes = {
+        "service": lambda: run_service(mix, bdg, progress=True),
+        "solo": lambda: run_solo(mix, bdg),
+    }
+    order = list(modes)
+    walls: Dict[str, list] = {m: [] for m in modes}
+    reference = None
+    for rep in range(repeats):
+        seq = order if rep % 2 == 0 else order[::-1]
+        for mode in seq:
+            out = modes[mode]()
+            walls[mode].append(out["wall_s"])
+            if reference is None:
+                reference = out
+            else:
+                assert_identical(out["results"], reference["results"])
+
+    ratios = [ws / wb for ws, wb in zip(walls["solo"], walls["service"])]
+    speedup = float(np.median(ratios))
+
+    summary = {
+        "designs": list(designs),
+        "optimizers": list(OPTIMIZERS),
+        "budget": bdg,
+        "n_sessions": len(mix),
+        "repeats": repeats,
+        "wall_s": {m: [round(w, 3) for w in ws]
+                   for m, ws in walls.items()},
+        "median_wall_s": {m: round(float(np.median(ws)), 3)
+                          for m, ws in walls.items()},
+        "per_repeat_speedup": [round(r, 3) for r in ratios],
+        "service_speedup": round(speedup, 3),
+        "identical_frontiers": True,   # asserted above
+        "hypervolumes": {k: float(v.hypervolume())
+                         for k, v in reference["results"].items()},
+    }
+    save_json("service.json", summary)
+    return summary
+
+
+def main():
+    out = run()
+    print(f"service benchmark: {out['n_sessions']} concurrent sessions "
+          f"({len(out['designs'])} designs x "
+          f"{len(out['optimizers'])} optimizers, budget "
+          f"{out['budget']}), {out['repeats']} repeats\n")
+    for mode, med in out["median_wall_s"].items():
+        print(f"  {mode:8s} median {med:7.2f}s   runs "
+              f"{out['wall_s'][mode]}")
+    print(f"\n  per-session results bit-identical to solo runs: "
+          f"{out['identical_frontiers']}")
+    print(f"  per-repeat speedups: {out['per_repeat_speedup']}")
+    print(f"  headline service_speedup: {out['service_speedup']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

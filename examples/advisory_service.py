@@ -1,0 +1,59 @@
+"""Advisory-service example: three clients, two designs, one batcher.
+
+  PYTHONPATH=src python examples/advisory_service.py
+
+Opens concurrent sessions on two designs through the in-process
+AdvisorClient, streams their progress events, cancels one mid-run, and
+shows that a served session's frontier is bit-identical to a solo
+FifoAdvisor.run() with the same seed.  The same protocol runs over TCP
+via `python -m repro.launch.serve` (see docs/service.md).
+"""
+
+import numpy as np
+
+from repro.core import FifoAdvisor
+from repro.core.service import AdvisorClient
+from repro.designs import make_design
+
+
+def main():
+    client = AdvisorClient()
+
+    # three clients arrive: two designs, mixed optimizers/seeds
+    a = client.open("gemm", optimizer="grouped_sa", budget=200, seed=0)
+    b = client.open("FeedForward", optimizer="grouped_random",
+                    budget=200, seed=1)
+    c = client.open("gemm", optimizer="grouped_random", budget=800,
+                    seed=2)
+
+    # interleave a few rounds, then one client disconnects
+    for _ in range(4):
+        client.request({"op": "step"})
+    print(f"cancelling {c} mid-run:", client.cancel(c))
+
+    client.drive()   # run the survivors to completion
+
+    for sid in (a, b):
+        st = client.status(sid)
+        print(f"{sid}: {st['design']}/{st['optimizer']} -> {st['state']} "
+              f"after {st['rounds']} rounds, {st['n_evals']} simulated")
+        for ev in client.events(sid)[-3:]:
+            print(f"   {ev['event']:9s} frontier={ev['frontier_size']} "
+                  f"hv={ev['hypervolume']:.0f}")
+
+    # the service guarantee: batched == solo, bit for bit
+    served = client.result(a)
+    solo = FifoAdvisor(make_design("gemm")).run("grouped_sa", budget=200,
+                                                seed=0)
+    assert np.array_equal(served.frontier_points, solo.frontier_points)
+    print("\nserved frontier == solo frontier:", True)
+    print("selected (alpha=0.7):", client.result_json(a)["selected"])
+
+    stats = client.request({"op": "stats"})["stats"]
+    print(f"service: {stats['n_sessions']} sessions, "
+          f"{stats['batcher']['rounds']} rounds, designs traced once: "
+          f"{sorted(stats['designs'])}")
+
+
+if __name__ == "__main__":
+    main()

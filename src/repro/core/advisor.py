@@ -25,14 +25,37 @@ from repro.core.tracer import Trace, collect_trace
 
 @dataclasses.dataclass
 class Baseline:
+    """One reference configuration: its depths and evaluated objectives.
+
+    ``baseline_max`` (declared/observed upper bounds — always feasible)
+    and ``baseline_min`` (all-depth-2 — the paper's deadlock probe) are
+    the two the advisor evaluates up front.
+    """
+
     depths: np.ndarray
     latency: int
     bram: int
     deadlocked: bool
 
+    def hv_reference(self) -> Tuple[float, float]:
+        """Hypervolume reference point anchored at this baseline (2x
+        both objectives, nudged off the axes so boundary points count).
+        The single definition used by results, campaign traces, and
+        service progress events — they must never disagree."""
+        return (self.latency * 2.0 + 1.0, self.bram * 2.0 + 2.0)
+
 
 @dataclasses.dataclass
 class DseResult:
+    """The outcome of one DSE search: history, frontier, selection.
+
+    Wraps the optimizer's raw :class:`OptResult` with the design's
+    baselines so frontier queries, the paper's alpha-point selection,
+    and hypervolume all resolve without re-touching the advisor.  The
+    single-run API, the campaign store, and the advisory service all
+    return this same type.
+    """
+
     design_name: str
     optimizer: str
     result: OptResult
@@ -42,10 +65,12 @@ class DseResult:
 
     @property
     def frontier_points(self) -> np.ndarray:
+        """(M, 2) Pareto-optimal (latency, BRAM) points, deduplicated."""
         return self.result.frontier()[0]
 
     @property
     def frontier_configs(self) -> np.ndarray:
+        """(M, F) depth vectors realizing :attr:`frontier_points`."""
         return self.result.frontier()[1]
 
     def selected(self, alpha: float = 0.7
@@ -62,11 +87,14 @@ class DseResult:
         return pts[sel], self.result.configs[idx[sel]]
 
     def hypervolume(self) -> float:
-        ref = (self.baseline_max.latency * 2.0 + 1.0,
-               self.baseline_max.bram * 2.0 + 2.0)
-        return hypervolume_2d(self.frontier_points, ref)
+        """2-D dominated hypervolume of the frontier vs the fixed
+        reference point derived from Baseline-Max (larger = better)."""
+        return hypervolume_2d(self.frontier_points,
+                              self.baseline_max.hv_reference())
 
     def summary(self, alpha: float = 0.7) -> Dict:
+        """JSON-ready digest: budgets, baselines, frontier size, and the
+        alpha-selected point with its vs-Baseline-Max ratios."""
         sel = self.selected(alpha)
         out = {
             "design": self.design_name,
@@ -93,7 +121,25 @@ class DseResult:
 
 
 class FifoAdvisor:
-    """Traces the design once; runs any number of DSE searches on it."""
+    """Traces the design once; runs any number of DSE searches on it.
+
+    Construction is the expensive part (trace + simgraph build + the two
+    baseline evaluations); afterwards every :meth:`run`, stepwise
+    context (:meth:`make_context`), and incremental probe shares the
+    trace, the pruned candidate grids, and one advisor-wide
+    :class:`ConfigCache`.  Long-lived advisors are how the design
+    registry (:mod:`repro.core.service`) serves many clients per trace.
+
+    Args:
+        design: the dataflow design to size.
+        upper_bounds: per-FIFO depth caps (default: declared/observed).
+        occupancy_cap: collapse candidates above observed occupancy
+            (beyond-paper pruning; behaviour-preserving).
+        local_bounds: sound per-FIFO lower bounds from task-pair
+            feasibility (beyond-paper pruning).
+        use_pallas / backend / max_iters: evaluator selection — see
+            ``docs/backends.md``.
+    """
 
     def __init__(self, design: Design,
                  upper_bounds: Optional[np.ndarray] = None,
@@ -175,6 +221,12 @@ class FifoAdvisor:
 
     def run(self, optimizer: str = "grouped_sa", budget: int = 1000,
             seed: int = 0, **kwargs) -> DseResult:
+        """One blocking DSE search; returns its :class:`DseResult`.
+
+        ``optimizer`` is a registry name (``docs/optimizers.md``),
+        ``budget`` is in simulated rows, ``kwargs`` go to the optimizer
+        constructor.  Repeated runs share this advisor's cache.
+        """
         cls = OPTIMIZERS[optimizer]
         ctx = self._fresh_ctx(seed)
         opt = cls(ctx, budget=budget, **kwargs)
@@ -186,6 +238,9 @@ class FifoAdvisor:
 
     def run_all(self, optimizers=None, budget: int = 1000,
                 seed: int = 0) -> Dict[str, DseResult]:
+        """Run several optimizers back to back (default: the paper's
+        five) and return ``{name: DseResult}``.  For many designs at
+        once, prefer a campaign (``docs/campaign.md``)."""
         from repro.core.optimizers import PAPER_OPTIMIZERS
         names = optimizers or PAPER_OPTIMIZERS
         return {n: self.run(n, budget=budget, seed=seed) for n in names}

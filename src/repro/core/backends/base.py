@@ -70,6 +70,9 @@ BACKENDS: Dict[str, Type[EvalBackend]] = {}
 
 
 def register_backend(cls: Type[EvalBackend]) -> Type[EvalBackend]:
+    """Class decorator: add ``cls`` to the registry under its ``name``
+    and every alias, making it selectable as
+    ``FifoAdvisor(design, backend=<name>)``.  Returns ``cls``."""
     BACKENDS[cls.name] = cls
     for alias in cls.aliases:
         BACKENDS[alias] = cls
@@ -88,6 +91,9 @@ _LAZY_BACKEND_MODULES = {
 
 
 def get_backend(name: str) -> Type[EvalBackend]:
+    """Resolve a registry name (or alias) to its backend class,
+    importing lazy jax-backed modules on first request; raises
+    ``ValueError`` with the available names on a miss."""
     if name not in BACKENDS and name in _LAZY_BACKEND_MODULES:
         import importlib
         importlib.import_module(_LAZY_BACKEND_MODULES[name])

@@ -109,34 +109,70 @@ class HeteroDispatcher:
                  worklists: Optional[Dict[str, WorklistBackend]] = None,
                  max_iters: int = 64,
                  buckets: Sequence[int] = BUCKETS):
-        from repro.core.backends.operands import (extend_operands,
-                                                  get_operands)
         from repro.kernels.fifo_eval.ops import make_hetero_batched_eval
-        for k, g in graphs.items():
-            # same guard as BatchedEvaluator: the f32 fixpoint is only
-            # exact while times stay below 2**24
-            if g.latency_upper_bound() > F32_EXACT_LIMIT:
-                raise ValueError(
-                    f"design {k!r}: schedule bound exceeds the "
-                    "float32-exact domain; split the design or reduce "
-                    "trip counts")
-        opses = {k: get_operands(g) for k, g in graphs.items()}
-        self.e_pad = max(o.e_pad for o in opses.values())
-        self.f_max = max(o.n_fifos for o in opses.values())
-        self.r_max = max(o.n_flat_reads for o in opses.values())
-        self._ext = {k: extend_operands(o, self.e_pad, self.f_max,
-                                        self.r_max)
-                     for k, o in opses.items()}
-        if worklists is None:
-            worklists = {}
-            for k, g in graphs.items():
-                wl = WorklistBackend(max_iters=max_iters)
-                wl.prepare(g)
-                worklists[k] = wl
-        self.worklists = worklists
+        self.max_iters = int(max_iters)
+        self.e_pad = 0
+        self.f_max = 0
+        self.r_max = 0
+        self._base: Dict[str, object] = {}   # per-design raw operands
+        self._ext: Dict[str, object] = {}    # envelope-padded operands
+        self.worklists: Dict[str, WorklistBackend] = {}
         self._call = make_hetero_batched_eval(max_iters)
         self.buckets = tuple(buckets)
         self.stats = HeteroStats()
+        worklists = worklists or {}
+        if graphs:
+            # pre-compute the shared envelope so registering N designs
+            # pads each exactly once (growth re-pads would be O(N^2))
+            from repro.core.backends.operands import get_operands
+            opses = [get_operands(g) for g in graphs.values()]
+            self.e_pad = max(o.e_pad for o in opses)
+            self.f_max = max(o.n_fifos for o in opses)
+            self.r_max = max(o.n_flat_reads for o in opses)
+        for k, g in graphs.items():
+            self.add_design(k, g, worklists.get(k))
+
+    def add_design(self, key: str, graph: SimGraph,
+                   worklist: Optional[WorklistBackend] = None) -> None:
+        """Register a design after construction (idempotent per key).
+
+        The advisory service traces designs lazily — the first session on
+        a new design lands mid-campaign — so the shared envelope must be
+        able to grow.  If the new design fits the current ``(E*, F*, R*)``
+        envelope, only its own operands are padded; if it exceeds it,
+        every registered design is re-padded from its raw operands (the
+        jitted evaluator is shape-polymorphic via its cache, so growth
+        costs one recompile on the next dispatch, nothing else).
+        """
+        if key in self._ext:
+            return
+        from repro.core.backends.operands import (extend_operands,
+                                                  get_operands)
+        # same guard as BatchedEvaluator: the f32 fixpoint is only
+        # exact while times stay below 2**24
+        if graph.latency_upper_bound() > F32_EXACT_LIMIT:
+            raise ValueError(
+                f"design {key!r}: schedule bound exceeds the "
+                "float32-exact domain; split the design or reduce "
+                "trip counts")
+        ops = get_operands(graph)
+        self._base[key] = ops
+        grew = (ops.e_pad > self.e_pad or ops.n_fifos > self.f_max
+                or ops.n_flat_reads > self.r_max)
+        self.e_pad = max(self.e_pad, ops.e_pad)
+        self.f_max = max(self.f_max, ops.n_fifos)
+        self.r_max = max(self.r_max, ops.n_flat_reads)
+        if grew:
+            self._ext = {k: extend_operands(o, self.e_pad, self.f_max,
+                                            self.r_max)
+                         for k, o in self._base.items()}
+        else:
+            self._ext[key] = extend_operands(ops, self.e_pad, self.f_max,
+                                             self.r_max)
+        if worklist is None:
+            worklist = WorklistBackend(max_iters=self.max_iters)
+            worklist.prepare(graph)
+        self.worklists[key] = worklist
 
     def _pad_rows(self, batch: dict, c: int) -> Tuple[dict, int]:
         bucket = next((b for b in self.buckets if b >= c), None)

@@ -21,6 +21,8 @@ _ATTRS = {
     "QUICK_DESIGNS": "repro.core.campaign.scheduler",
     "TaskSpec": "repro.core.campaign.scheduler",
     "default_workers": "repro.core.campaign.scheduler",
+    "RoundRouter": "repro.core.campaign.router",
+    "RoutedRequest": "repro.core.campaign.router",
     "WorkerPool": "repro.core.campaign.pool",
     "ResultStore": "repro.core.campaign.store",
     "CheckpointMismatch": "repro.core.campaign.state",
@@ -44,7 +46,7 @@ def __dir__():
 
 __all__ = [
     "Campaign", "CampaignSpec", "CampaignTask", "CheckpointMismatch",
-    "DesignContext", "QUICK_DESIGNS", "ResultStore", "TaskSpec",
-    "WorkerPool", "default_workers", "load_checkpoint", "replay",
-    "save_checkpoint",
+    "DesignContext", "QUICK_DESIGNS", "ResultStore", "RoundRouter",
+    "RoutedRequest", "TaskSpec", "WorkerPool", "default_workers",
+    "load_checkpoint", "replay", "save_checkpoint",
 ]

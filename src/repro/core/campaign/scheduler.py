@@ -8,7 +8,9 @@ scheduler round interleaves every active task:
 1. collect each task's outstanding :class:`EvalRequest`;
 2. resolve cache hits against the task's design-wide
    :class:`~repro.core.backends.ConfigCache`;
-3. route the misses —
+3. route the misses through the shared
+   :class:`~repro.core.campaign.router.RoundRouter` (also used by the
+   advisory service) —
    * incremental-eligible rows (single-FIFO deltas) to the task's sticky
      worklist worker (or inline), preserving the LightningSim fast path,
    * full-solve rows either to the worker pool (rows are split across
@@ -29,13 +31,13 @@ from __future__ import annotations
 
 import dataclasses
 import os
-import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.advisor import FifoAdvisor
-from repro.core.optimizers import OPTIMIZERS, EvalRequest, OptResult
+from repro.core.campaign.router import RoundRouter, RoutedRequest
+from repro.core.optimizers import OPTIMIZERS, OptResult
 from repro.core.pareto import hypervolume_2d
 from repro.designs import QUICK_DESIGNS, make_design
 
@@ -144,23 +146,18 @@ class CampaignTask:
     def running_hypervolume(self) -> float:
         res = self.ctx.result(self.opt.name, 0.0)
         pts, _ = res.frontier()
-        bm = self.dctx.advisor.baseline_max
-        ref = (bm.latency * 2.0 + 1.0, bm.bram * 2.0 + 2.0)
-        return hypervolume_2d(pts, ref)
-
-
-@dataclasses.dataclass
-class _Pending:
-    task: CampaignTask
-    req: EvalRequest
-    lat: np.ndarray
-    bram: np.ndarray
-    dead: np.ndarray
-    miss_rows: np.ndarray
+        return hypervolume_2d(
+            pts, self.dctx.advisor.baseline_max.hv_reference())
 
 
 class Campaign:
-    """Round-robin scheduler over many stepwise DSE tasks."""
+    """Round-robin scheduler over many stepwise DSE tasks.
+
+    Owns task construction, lane assignment, checkpoint cadence, and the
+    worker-pool/hetero lifecycle; the per-round evaluation routing itself
+    lives in the shared :class:`~repro.core.campaign.router.RoundRouter`
+    (also used by the advisory service, :mod:`repro.core.service`).
+    """
 
     def __init__(self, spec: CampaignSpec,
                  tasks: Optional[Sequence[TaskSpec]] = None,
@@ -200,166 +197,25 @@ class Campaign:
             c = per_design_count.get(k, 0)
             per_design_count[k] = c + 1
             task.worker = (c + design_index[k]) % n_lanes
-        self.hetero = None
+        hetero = None
         if spec.hetero:
             from repro.core.backends.dispatch import HeteroDispatcher
             graphs = {k: d.graph for k, d in self.designs.items()}
             worklists = {k: d.evaluator._worklist
                          for k, d in self.designs.items()}
-            self.hetero = HeteroDispatcher(graphs, worklists,
-                                           max_iters=spec.max_iters)
+            hetero = HeteroDispatcher(graphs, worklists,
+                                      max_iters=spec.max_iters)
+        self.router = RoundRouter(self.designs, pool=self.pool,
+                                  hetero=hetero)
+
+    @property
+    def hetero(self):
+        return self.router.hetero
 
     # ------------------------------------------------------------- rounds
-    def _route(self, pending: List[_Pending]):
-        """Resolve every pending request's cache-miss rows in place."""
-        incr: List[_Pending] = []
-        full: List[_Pending] = []
-        for p in pending:
-            if p.miss_rows.size == 0:
-                continue
-            ev = p.task.dctx.evaluator
-            if p.req.base is not None and ev.prefer_incremental:
-                incr.append(p)
-            else:
-                full.append(p)
-
-        def fill(p: _Pending, rows: np.ndarray, lat, bram, dead):
-            p.lat[rows], p.bram[rows], p.dead[rows] = lat, bram, dead
-
-        # full-solve rows: merge per design and dedup across tasks — one
-        # scheduler round turns into at most one unique-row batch per
-        # design (e.g. every SA variant proposing the Baseline-Max corner
-        # in the same round costs ONE solve)
-        merged = []
-        by_design: Dict[str, List[_Pending]] = {}
-        for p in full:
-            by_design.setdefault(p.task.dctx.name, []).append(p)
-        for name, plist in by_design.items():
-            big = np.concatenate(
-                [p.req.depths[p.miss_rows] for p in plist], axis=0)
-            uniq, inverse = np.unique(big, axis=0, return_inverse=True)
-            merged.append((name, plist, uniq, inverse))
-
-        def scatter(name, plist, inverse, ulat, ubram, udead, wall):
-            total = len(inverse)
-            off = 0
-            for p in plist:
-                n = p.miss_rows.size
-                sel = inverse[off:off + n]
-                off += n
-                fill(p, p.miss_rows, ulat[sel], ubram[sel], udead[sel])
-                p.task.eval_s += wall * n / max(total, 1)
-
-        def incr_inline(p: _Pending):
-            rows = p.miss_rows
-            t0 = time.perf_counter()
-            l, b, dd = p.task.dctx.evaluator.evaluate_incremental(
-                p.req.base[rows], p.req.depths[rows])
-            p.task.eval_s += time.perf_counter() - t0
-            fill(p, rows, l, b, dd)
-
-        if self.hetero is not None and merged:
-            for p in incr:
-                incr_inline(p)
-            t0 = time.perf_counter()
-            results = self.hetero.dispatch(
-                [(name, uniq) for name, _, uniq, _ in merged])
-            dt = time.perf_counter() - t0
-            total = sum(u.shape[0] for _, _, u, _ in merged)
-            for (name, plist, uniq, inverse), (l, b, dd) in zip(
-                    merged, results):
-                share = dt * uniq.shape[0] / max(total, 1)
-                scatter(name, plist, inverse, l, b, dd, share)
-            return
-
-        if self.pool is None:
-            for p in incr:
-                incr_inline(p)
-            for name, plist, uniq, inverse in merged:
-                ev = self.designs[name].evaluator
-                t0 = time.perf_counter()
-                l, b, dd = ev.evaluate(uniq)
-                dt = time.perf_counter() - t0
-                scatter(name, plist, inverse, l, b, dd, dt)
-            return
-
-        # ------- pooled: lane 0 is this process, overlapped with the
-        # pool between submit() and collect()
-        n_lanes = self.spec.workers + 1
-        load = [0.0] * n_lanes
-        jobs: List[Tuple[int, str, np.ndarray, Optional[np.ndarray]]] = []
-        job_sinks: List[Tuple[_Pending, np.ndarray]] = []
-        main_incr: List[_Pending] = []
-        for p in incr:
-            rows = p.miss_rows
-            lane = p.task.worker
-            load[lane] += rows.size * p.task.dctx.graph.n_events
-            if lane == 0:
-                main_incr.append(p)
-            else:
-                jobs.append((lane - 1, p.task.dctx.name,
-                             p.req.depths[rows], p.req.base[rows]))
-                job_sinks.append((p, rows))
-        # split each design's unique rows into per-lane chunks, balanced
-        # by row cost (~ event count of the owning design)
-        main_full: List[Tuple[int, np.ndarray]] = []
-        pool_full: List[Tuple[int, np.ndarray]] = []  # (merged_idx, sel)
-        for mi, (name, _plist, uniq, _inv) in enumerate(merged):
-            cost = self.designs[name].graph.n_events
-            sel: Dict[int, List[int]] = {}
-            for r in range(uniq.shape[0]):
-                lane = int(np.argmin(load))
-                load[lane] += cost
-                sel.setdefault(lane, []).append(r)
-            for lane, rsel in sel.items():
-                rsel = np.asarray(rsel)
-                if lane == 0:
-                    main_full.append((mi, rsel))
-                else:
-                    pool_full.append((mi, rsel))
-                    jobs.append((lane - 1, name, uniq[rsel], None))
-        handle = self.pool.submit(jobs) if jobs else None
-
-        acc: Dict[int, Tuple] = {}
-
-        def acc_for(mi):
-            uniq = merged[mi][2]
-            return acc.setdefault(mi, (
-                np.zeros(uniq.shape[0], dtype=np.int64),
-                np.zeros(uniq.shape[0], dtype=np.int64),
-                np.zeros(uniq.shape[0], dtype=bool), [0.0]))
-
-        # main-lane work runs while the pool workers chew on theirs
-        for p in main_incr:
-            incr_inline(p)
-        for mi, rsel in main_full:
-            name, _plist, uniq, _inv = merged[mi]
-            ev = self.designs[name].evaluator
-            t0 = time.perf_counter()
-            l, b, dd = ev.evaluate(uniq[rsel])
-            st = acc_for(mi)
-            st[0][rsel], st[1][rsel], st[2][rsel] = l, b, dd
-            st[3][0] += time.perf_counter() - t0
-
-        if handle is not None:
-            results = self.pool.collect(handle)
-            n_incr_jobs = len(job_sinks)
-            for (p, rows), (l, b, dd, dt) in zip(
-                    job_sinks, results[:n_incr_jobs]):
-                fill(p, rows, l, b, dd)
-                p.task.eval_s += dt
-            for (mi, rsel), (l, b, dd, dt) in zip(
-                    pool_full, results[n_incr_jobs:]):
-                st = acc_for(mi)
-                st[0][rsel], st[1][rsel], st[2][rsel] = l, b, dd
-                st[3][0] += dt
-        for mi, (ulat, ubram, udead, wall) in acc.items():
-            name, plist, uniq, inverse = merged[mi]
-            scatter(name, plist, inverse, ulat, ubram, udead, wall[0])
-
     def _round(self) -> int:
         """Advance every active task one step; returns #active tasks."""
-        pending: List[_Pending] = []
+        pending: List[RoutedRequest] = []
         for task in self.tasks:
             if task.done:
                 continue
@@ -368,22 +224,26 @@ class Campaign:
                 task.finalize()
                 continue
             lat, bram, dead, miss = task.dctx.cache.lookup(req.depths)
-            pending.append(_Pending(task, req, lat, bram, dead,
-                                    np.flatnonzero(miss)))
-        self._route(pending)
+            pending.append(RoutedRequest(
+                key=task.spec.design, req=req, lat=lat, bram=bram,
+                dead=dead, miss_rows=np.flatnonzero(miss),
+                lane=task.worker, tag=task))
+        self.router.route(pending)
         for p in pending:
+            task = p.tag
             rows = p.miss_rows
             if rows.size:
-                p.task.dctx.cache.insert(
+                task.dctx.cache.insert(
                     p.req.depths[rows], p.lat[rows], p.bram[rows],
                     p.dead[rows])
-            p.task.ctx.record(p.req.depths, p.lat, p.bram, p.dead,
-                              rows.size)
-            p.task.step_miss.append(int(rows.size))
-            p.task.opt.observe(p.lat, p.bram, p.dead)
+            task.eval_s += p.eval_s
+            task.ctx.record(p.req.depths, p.lat, p.bram, p.dead,
+                            rows.size)
+            task.step_miss.append(int(rows.size))
+            task.opt.observe(p.lat, p.bram, p.dead)
             if self.spec.track_hypervolume:
-                p.task.hv_trace.append(
-                    (p.task.ctx.n_evals, p.task.running_hypervolume()))
+                task.hv_trace.append(
+                    (task.ctx.n_evals, task.running_hypervolume()))
         self.round += 1
         return len(pending)
 
@@ -438,11 +298,13 @@ class Campaign:
             self.pool = WorkerPool(
                 self.spec.workers, max_iters=self.spec.max_iters,
                 graphs={k: d.graph for k, d in self.designs.items()})
+        self.router.pool = self.pool
 
     def close(self):
         if self.pool is not None:
             self.pool.close()
             self.pool = None
+            self.router.pool = None
 
     def __enter__(self):
         return self

@@ -24,6 +24,7 @@ class ResultStore:
         self.hv_traces: Dict[str, List] = {}
 
     def add(self, task) -> DseResult:
+        """Wrap one finished campaign task as a :class:`DseResult`."""
         adv = task.dctx.advisor
         dse = DseResult(design_name=task.spec.design,
                         optimizer=task.spec.optimizer,
@@ -31,8 +32,15 @@ class ResultStore:
                         baseline_max=adv.baseline_max,
                         baseline_min=adv.baseline_min,
                         trace_time_s=adv.trace_time_s)
-        self.results[task.key] = dse
-        self.hv_traces[task.key] = list(task.hv_trace)
+        return self.add_result(task.key, dse, task.hv_trace)
+
+    def add_result(self, key: str, dse: DseResult,
+                   hv_trace=None) -> DseResult:
+        """Store an already-built :class:`DseResult` under ``key`` —
+        the hook for non-campaign producers (the advisory service, ad
+        hoc scripts) to reuse the summary/JSON machinery."""
+        self.results[key] = dse
+        self.hv_traces[key] = list(hv_trace or [])
         return dse
 
     def __len__(self) -> int:

@@ -88,7 +88,15 @@ class OptResult:
 
 
 class EvalContext:
-    """Candidate grids + batched evaluator + evaluation history."""
+    """Everything one optimizer run searches *with* and records *into*.
+
+    Owns the pruned per-FIFO/per-group candidate grids (paper §III-C),
+    the seeded RNG, the (possibly shared) :class:`ConfigCache`, the
+    evaluation history, and the miss-counting budget.  Optimizers hold
+    exactly one; `FifoAdvisor.make_context` builds them sharing the
+    advisor's evaluator and cache (how campaign tasks and service
+    sessions ride one trace).
+    """
 
     def __init__(self, g: SimGraph, evaluator: Optional[BatchedEvaluator] = None,
                  upper_bounds: Optional[np.ndarray] = None,
@@ -342,6 +350,16 @@ class Optimizer:
     @property
     def done(self) -> bool:
         return self._done
+
+    def close(self) -> None:
+        """Terminate the search now (generator cleanup runs); further
+        :meth:`propose` calls return None.  The history evaluated so
+        far remains valid — this is how the advisory service cancels a
+        session mid-run."""
+        if self._gen is not None:
+            self._gen.close()
+        self._pending = None
+        self._done = True
 
     # ------------------------------------------------------- blocking API
     def run(self) -> OptResult:

@@ -1,0 +1,29 @@
+"""Async FIFO-sizing advisory service with cross-session hetero batching.
+
+The service layer turns the repo from a batch tool into a server: a
+:class:`DesignRegistry` traces each design once and advises on it
+forever; each client :class:`Session` is a stepwise optimizer driven by
+the ``propose()/observe()`` protocol; the
+:class:`CrossSessionBatcher` packs outstanding evaluation requests from
+*different* clients and *different* designs into single routed
+dispatches (sharing :class:`~repro.core.campaign.router.RoundRouter`
+with the campaign engine); and :class:`AdvisorClient` /
+``python -m repro.launch.serve`` expose it in-process and over
+JSON-lines TCP/stdio.  See ``docs/service.md``.
+
+Everything here is exact: a session's frontier is bit-identical to a
+solo ``FifoAdvisor.run()`` with the same seed, regardless of batching.
+"""
+
+from repro.core.service.batcher import AdvisoryService, CrossSessionBatcher
+from repro.core.service.protocol import (AdvisorClient, ProtocolError,
+                                         ProtocolHandler, decode_line,
+                                         encode_line)
+from repro.core.service.registry import DesignRegistry
+from repro.core.service.session import Session
+
+__all__ = [
+    "AdvisorClient", "AdvisoryService", "CrossSessionBatcher",
+    "DesignRegistry", "ProtocolError", "ProtocolHandler", "Session",
+    "decode_line", "encode_line",
+]

@@ -1,0 +1,273 @@
+"""Cross-session hetero batching: many clients, one evaluation round.
+
+:class:`AdvisoryService` is the always-on counterpart of the batch
+campaign engine.  Where a :class:`~repro.core.campaign.Campaign` is
+handed its full task list up front, the service accepts sessions at any
+time, on any design — tracing new designs lazily through the
+:class:`~repro.core.service.registry.DesignRegistry` — and still packs
+every outstanding :class:`~repro.core.optimizers.EvalRequest` from
+*different* clients and *different* designs into single routed
+dispatches via the shared
+:class:`~repro.core.campaign.router.RoundRouter`:
+
+* same-design rows from different sessions are merged and deduplicated
+  (two clients probing the same corner cost ONE solve, and both hit the
+  design's shared cache forever after);
+* incremental-eligible rows keep the LightningSim fast path;
+* with ``hetero=True``, full-solve rows across designs are packed into
+  one lane-aligned fixpoint dispatch
+  (:class:`~repro.core.backends.HeteroDispatcher`), whose envelope grows
+  lazily as new designs register.
+
+The batching is *routing only*: every path is exact, so each session's
+history is bit-identical to a solo ``FifoAdvisor.run()`` with the same
+seed — batching changes wall-clock, never results.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.advisor import DseResult
+from repro.core.campaign.router import RoundRouter, RoutedRequest
+from repro.core.service.registry import DesignRegistry
+from repro.core.service.session import Session
+
+__all__ = ["AdvisoryService", "CrossSessionBatcher"]
+
+
+class CrossSessionBatcher:
+    """Routes one round of session proposals through shared engines.
+
+    Owns the :class:`RoundRouter` plus the optional cross-design
+    :class:`HeteroDispatcher` and :class:`WorkerPool`, keeping both in
+    sync with the registry as designs appear.
+    """
+
+    def __init__(self, registry: DesignRegistry, hetero: bool = False,
+                 workers: int = 0):
+        self.registry = registry
+        self.want_hetero = bool(hetero)
+        # hetero owns every full-solve row in this process (same rule as
+        # CampaignSpec.hetero): a pool would only idle, so the two are
+        # mutually exclusive — normalized here, surfaced by the CLI
+        self.workers = 0 if hetero else int(workers)
+        self.router = RoundRouter(registry)
+        self.rounds = 0
+        self._pool_designs: set = set()   # designs the pool was built with
+
+    @property
+    def n_lanes(self) -> int:
+        return self.router.n_lanes
+
+    def add_design(self, name: str) -> None:
+        """Keep the hetero envelope / worker pool aware of ``name``.
+
+        Hetero mode extends the dispatcher's operand envelope in place.
+        Pool mode must keep every worker able to evaluate the design:
+        custom ``Design`` objects are pinned to lane 0 (a fresh worker
+        process cannot rebuild them by name), and a *named* design that
+        arrives after the pool exists rebuilds the pool so the workers
+        pick up its graph — sessions are rare next to rounds, so the
+        respawn cost is noise.
+        """
+        adv = self.registry[name]
+        if self.want_hetero:
+            if self.router.hetero is None:
+                from repro.core.backends.dispatch import HeteroDispatcher
+                self.router.hetero = HeteroDispatcher(
+                    {}, max_iters=self.registry.max_iters)
+            self.router.hetero.add_design(
+                name, adv.graph, getattr(adv.evaluator, "_worklist", None))
+        elif self.workers > 0:
+            if name in self.registry.custom_names:
+                self.router.inline_only.add(name)
+            elif (self.router.pool is None
+                  or name not in self._pool_designs):
+                from repro.core.campaign.pool import WorkerPool
+                if self.router.pool is not None:
+                    self.router.pool.close()
+                self._pool_designs = {
+                    k for k in self.registry
+                    if k not in self.registry.custom_names}
+                self.router.pool = WorkerPool(
+                    self.workers, max_iters=self.registry.max_iters,
+                    graphs={k: self.registry[k].graph
+                            for k in self._pool_designs})
+
+    def step(self, sessions: List[Session]) -> int:
+        """One cross-session round over the given *running* sessions.
+
+        Collects each session's outstanding proposal, screens it against
+        the design's shared cache, routes every miss in one
+        :meth:`RoundRouter.route` call, and hands the results back to
+        each session (history, budget, optimizer step, progress events).
+        Returns the number of sessions that advanced.
+        """
+        pending: List[RoutedRequest] = []
+        for sess in sessions:
+            req = sess.propose()
+            if req is None:
+                continue
+            lat, bram, dead, miss = sess.advisor.cache.lookup(req.depths)
+            pending.append(RoutedRequest(
+                key=sess.design, req=req, lat=lat, bram=bram, dead=dead,
+                miss_rows=np.flatnonzero(miss), lane=sess.lane, tag=sess))
+        self.router.route(pending)
+        for p in pending:
+            p.tag.complete_round(p)
+        self.rounds += 1
+        return len(pending)
+
+    def stats(self) -> dict:
+        out = {"rounds": self.rounds, "lanes": self.n_lanes,
+               "hetero": self.want_hetero}
+        if self.router.hetero is not None:
+            hs = self.router.hetero.stats
+            out["hetero_stats"] = {
+                "n_dispatches": hs.n_dispatches, "n_rows": hs.n_rows,
+                "n_pad_rows": hs.n_pad_rows,
+                "n_fallbacks": hs.n_fallbacks,
+                "wall_s": round(hs.wall_s, 4)}
+        return out
+
+    def close(self) -> None:
+        if self.router.pool is not None:
+            self.router.pool.close()
+            self.router.pool = None
+
+
+class AdvisoryService:
+    """The FIFO-sizing advisory service core (synchronous, deterministic).
+
+    Holds the design registry, the open sessions, and the cross-session
+    batcher; :meth:`step` advances every running session by one batched
+    round.  The asyncio server (``repro.launch.serve``) and the
+    in-process :class:`~repro.core.service.protocol.AdvisorClient` are
+    both thin drivers over this class, so everything observable —
+    histories, frontiers, events — is independent of the transport.
+
+    Args:
+        registry: a shared :class:`DesignRegistry` (one is built when
+            omitted).
+        backend / max_iters: forwarded to the registry when building it.
+        hetero: pack cross-design full-solve rows into one fixpoint
+            dispatch (the TPU-native path; on CPU the worklist is faster).
+        workers: worklist worker processes for parallel lanes (0 =
+            evaluate inline).
+        progress_events: default per-session progress streaming flag.
+    """
+
+    def __init__(self, registry: Optional[DesignRegistry] = None,
+                 backend: str = "numpy", max_iters: int = 256,
+                 hetero: bool = False, workers: int = 0,
+                 progress_events: bool = True):
+        self.registry = registry or DesignRegistry(backend=backend,
+                                                   max_iters=max_iters)
+        self.batcher = CrossSessionBatcher(self.registry, hetero=hetero,
+                                           workers=workers)
+        self.progress_events = bool(progress_events)
+        self.sessions: Dict[str, Session] = {}
+        self._next_sid = 0
+
+    # ---------------------------------------------------------- sessions
+    def open_session(self, design: str, optimizer: str = "grouped_sa",
+                     budget: int = 300, seed: int = 0,
+                     design_obj=None, progress_events: Optional[bool] = None,
+                     **opt_kwargs) -> Session:
+        """Open a DSE session (tracing the design on first use)."""
+        advisor = self.registry.register(design, design_obj)
+        self.batcher.add_design(design)
+        sid = f"s{self._next_sid}"
+        self._next_sid += 1
+        lane = len(self.sessions) % max(self.batcher.n_lanes, 1)
+        sess = Session(sid, design, advisor, optimizer=optimizer,
+                       budget=budget, seed=seed, opt_kwargs=opt_kwargs,
+                       lane=lane,
+                       progress_events=(self.progress_events
+                                        if progress_events is None
+                                        else progress_events))
+        self.sessions[sid] = sess
+        return sess
+
+    def session(self, sid: str) -> Session:
+        try:
+            return self.sessions[sid]
+        except KeyError:
+            raise KeyError(f"unknown session {sid!r}") from None
+
+    def cancel(self, sid: str) -> Session:
+        """Cancel a session; its evaluated history becomes the result."""
+        sess = self.session(sid)
+        sess.cancel()
+        return sess
+
+    def release(self, sid: str) -> Session:
+        """Drop a session from the service (cancelling it first if it
+        is still running).  An always-on server must be able to forget
+        finished sessions, or memory grows with every client ever
+        served; the session object itself stays valid for the caller."""
+        sess = self.session(sid)
+        sess.cancel()
+        del self.sessions[sid]
+        return sess
+
+    def result(self, sid: str) -> DseResult:
+        """The session's :class:`DseResult` (snapshot if still running)."""
+        return self.session(sid).dse_result()
+
+    @property
+    def running(self) -> List[Session]:
+        return [s for s in self.sessions.values() if not s.done]
+
+    # ------------------------------------------------------------ driving
+    def step(self) -> int:
+        """Advance every running session one batched round; returns the
+        number of sessions that advanced (0 = service idle)."""
+        active = self.running
+        if not active:
+            return 0
+        return self.batcher.step(active)
+
+    def run_until_idle(self, max_rounds: Optional[int] = None) -> int:
+        """Drive :meth:`step` until no session is running (or the round
+        cap); returns the number of rounds executed."""
+        rounds = 0
+        while self.step():
+            rounds += 1
+            if max_rounds is not None and rounds >= max_rounds:
+                break
+        return rounds
+
+    # ------------------------------------------------------------- admin
+    def drain_events(self, sid: Optional[str] = None) -> List[dict]:
+        """Pop queued events — one session's, or every session's in
+        session order."""
+        if sid is not None:
+            return self.session(sid).drain_events()
+        out: List[dict] = []
+        for sess in self.sessions.values():
+            out.extend(sess.drain_events())
+        return out
+
+    def stats(self) -> dict:
+        """JSON-ready service snapshot: sessions, batcher, registry."""
+        states: Dict[str, int] = {}
+        for s in self.sessions.values():
+            states[s.state] = states.get(s.state, 0) + 1
+        return {"n_sessions": len(self.sessions),
+                "session_states": states,
+                "batcher": self.batcher.stats(),
+                "designs": self.registry.stats()}
+
+    def close(self) -> None:
+        self.batcher.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -1,0 +1,240 @@
+"""Advisory-service wire protocol: JSON lines, transport-agnostic.
+
+One message per line, one JSON object per message.  Requests carry an
+``op`` and an optional ``id`` (echoed back verbatim, so clients can
+correlate responses over a shared connection); responses carry
+``ok: true/false``; server-pushed events carry an ``event`` key instead
+of ``ok``.  The full message reference lives in ``docs/service.md``.
+
+The :class:`ProtocolHandler` maps request dicts to response dicts
+against an :class:`~repro.core.service.batcher.AdvisoryService` — the
+asyncio server (``repro.launch.serve``), the stdio loop, and the
+in-process :class:`AdvisorClient` all share it, so the protocol is
+exercised end-to-end even in fully in-process tests.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import List, Optional
+
+from repro.core.service.batcher import AdvisoryService
+
+__all__ = ["AdvisorClient", "ProtocolError", "ProtocolHandler",
+           "decode_line", "encode_line"]
+
+#: requests the handler understands (anything else is a protocol error)
+OPS = ("open", "run", "step", "cancel", "close", "status", "result",
+       "designs", "stats", "shutdown")
+
+
+class ProtocolError(ValueError):
+    """Malformed or unanswerable client message."""
+
+
+def encode_line(msg: dict) -> str:
+    """One message -> one newline-terminated JSON line."""
+    return json.dumps(msg, separators=(",", ":")) + "\n"
+
+
+def decode_line(line) -> dict:
+    """One line -> one message dict (:class:`ProtocolError` if not)."""
+    if isinstance(line, bytes):
+        line = line.decode("utf-8", errors="replace")
+    try:
+        msg = json.loads(line)
+    except json.JSONDecodeError as exc:
+        raise ProtocolError(f"not valid JSON: {exc}") from None
+    if not isinstance(msg, dict):
+        raise ProtocolError("message must be a JSON object")
+    return msg
+
+
+class ProtocolHandler:
+    """Maps one decoded request to one response dict.
+
+    Stateless beyond the service it fronts; safe to share across
+    connections (sessions are service-global — a connection may query
+    any session id it knows).
+    """
+
+    def __init__(self, service: AdvisoryService):
+        self.service = service
+
+    def handle(self, msg: dict) -> dict:
+        """Answer one request; never raises — errors become
+        ``{"ok": false, "error": ...}`` responses."""
+        rid = msg.get("id")
+        try:
+            out = self._dispatch(msg)
+        except ProtocolError as exc:
+            out = {"ok": False, "error": str(exc)}
+        except Exception as exc:   # noqa: BLE001 — server boundary: an
+            # engine failure (worker death, bad optimizer kwargs) must
+            # become an error frame, never a dropped connection
+            out = {"ok": False, "error": f"{type(exc).__name__}: {exc}"}
+        if rid is not None:
+            out["id"] = rid
+        return out
+
+    def poll_events(self, sid: Optional[str] = None) -> List[dict]:
+        """Drain queued progress/done events (push frames)."""
+        return self.service.drain_events(sid)
+
+    # ------------------------------------------------------------ dispatch
+    def _dispatch(self, msg: dict) -> dict:
+        op = msg.get("op")
+        if op not in OPS:
+            raise ProtocolError(
+                f"unknown op {op!r}; expected one of {list(OPS)}")
+        return getattr(self, f"_op_{op}")(msg)
+
+    def _session_of(self, msg: dict):
+        sid = msg.get("session")
+        if not sid:
+            raise ProtocolError(f"op {msg.get('op')!r} needs a 'session'")
+        return self.service.session(sid)
+
+    def _op_open(self, msg: dict) -> dict:
+        design = msg.get("design")
+        if not design:
+            raise ProtocolError("op 'open' needs a 'design'")
+        kwargs = msg.get("kwargs") or {}
+        if not isinstance(kwargs, dict):
+            raise ProtocolError("'kwargs' must be an object")
+        sess = self.service.open_session(
+            design, optimizer=msg.get("optimizer", "grouped_sa"),
+            budget=int(msg.get("budget", 300)),
+            seed=int(msg.get("seed", 0)),
+            progress_events=msg.get("progress"), **kwargs)
+        return {"ok": True, "session": sess.id, "design": sess.design,
+                "optimizer": sess.optimizer, "budget": sess.budget,
+                "seed": sess.seed, "state": sess.state}
+
+    def _op_run(self, msg: dict) -> dict:
+        rounds = self.service.run_until_idle(msg.get("max_rounds"))
+        return {"ok": True, "rounds": rounds,
+                "running": len(self.service.running)}
+
+    def _op_step(self, msg: dict) -> dict:
+        return {"ok": True, "advanced": self.service.step(),
+                "running": len(self.service.running)}
+
+    def _op_cancel(self, msg: dict) -> dict:
+        sess = self._session_of(msg)
+        sess.cancel()
+        return {"ok": True, "session": sess.id, "state": sess.state,
+                "n_evals": int(sess.ctx.n_evals)}
+
+    def _op_close(self, msg: dict) -> dict:
+        """Release a session entirely (fetch ``result`` first — the id
+        becomes unknown afterwards)."""
+        sess = self._session_of(msg)
+        self.service.release(sess.id)
+        return {"ok": True, "session": sess.id, "state": sess.state,
+                "released": True}
+
+    def _op_status(self, msg: dict) -> dict:
+        return {"ok": True, **self._session_of(msg).status()}
+
+    def _op_result(self, msg: dict) -> dict:
+        sess = self._session_of(msg)
+        dse = sess.dse_result()
+        alpha = float(msg.get("alpha", 0.7))
+        out = dse.summary(alpha)
+        out["frontier"] = dse.frontier_points.tolist()
+        out["hypervolume"] = float(dse.hypervolume())
+        sel = dse.selected(alpha)
+        if sel is not None:
+            out["selected_depths"] = [int(d) for d in sel[1]]
+        return {"ok": True, "session": sess.id, "state": sess.state,
+                "result": out}
+
+    def _op_designs(self, msg: dict) -> dict:
+        return {"ok": True, "designs": self.service.registry.stats()}
+
+    def _op_stats(self, msg: dict) -> dict:
+        return {"ok": True, "stats": self.service.stats()}
+
+    def _op_shutdown(self, msg: dict) -> dict:
+        return {"ok": True, "shutdown": True}
+
+
+class AdvisorClient:
+    """In-process client for tests, examples, and benchmarks.
+
+    Speaks the same request/response dicts as the wire protocol (so
+    protocol coverage comes for free) but drives the service loop
+    itself — there is no server; :meth:`run` is a synchronous
+    open-and-drive call returning the real
+    :class:`~repro.core.advisor.DseResult` object.
+    """
+
+    def __init__(self, service: Optional[AdvisoryService] = None,
+                 **service_kwargs):
+        self.service = service or AdvisoryService(**service_kwargs)
+        self.handler = ProtocolHandler(self.service)
+
+    def request(self, msg: dict) -> dict:
+        """Send one protocol request; raises on an error response."""
+        out = self.handler.handle(msg)
+        if not out.get("ok"):
+            raise ProtocolError(out.get("error", "request failed"))
+        return out
+
+    # ------------------------------------------------------- conveniences
+    def open(self, design: str, optimizer: str = "grouped_sa",
+             budget: int = 300, seed: int = 0, **kwargs) -> str:
+        """Open a session; returns its id."""
+        msg = {"op": "open", "design": design, "optimizer": optimizer,
+               "budget": budget, "seed": seed}
+        if kwargs:
+            msg["kwargs"] = kwargs
+        return self.request(msg)["session"]
+
+    def drive(self, max_rounds: Optional[int] = None) -> int:
+        """Advance the service until idle; returns rounds executed."""
+        return self.request({"op": "run", "max_rounds": max_rounds})[
+            "rounds"]
+
+    def run(self, design: str, optimizer: str = "grouped_sa",
+            budget: int = 300, seed: int = 0, **kwargs):
+        """Open + drive to completion; returns the session's
+        :class:`DseResult` (bit-identical to ``FifoAdvisor.run``)."""
+        sid = self.open(design, optimizer=optimizer, budget=budget,
+                        seed=seed, **kwargs)
+        self.drive()
+        return self.result(sid)
+
+    def events(self, sid: Optional[str] = None) -> List[dict]:
+        """Drain queued progress/done events."""
+        return self.handler.poll_events(sid)
+
+    def cancel(self, sid: str) -> dict:
+        return self.request({"op": "cancel", "session": sid})
+
+    def release(self, sid: str) -> dict:
+        """Forget a session server-side (fetch results first)."""
+        return self.request({"op": "close", "session": sid})
+
+    def status(self, sid: str) -> dict:
+        return self.request({"op": "status", "session": sid})
+
+    def result(self, sid: str):
+        """The real :class:`DseResult` object (in-process privilege)."""
+        return self.service.result(sid)
+
+    def result_json(self, sid: str, alpha: float = 0.7) -> dict:
+        """The wire-protocol result payload for the session."""
+        return self.request({"op": "result", "session": sid,
+                             "alpha": alpha})["result"]
+
+    def close(self) -> None:
+        self.service.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

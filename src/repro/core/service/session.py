@@ -1,0 +1,196 @@
+"""Client sessions: one stepwise optimizer run per connected client.
+
+A :class:`Session` wraps the campaign engine's stepwise
+``propose()/observe()`` optimizer protocol
+(:mod:`repro.core.optimizers.base`) for service use: it owns a fresh
+:class:`~repro.core.optimizers.EvalContext` bound to the registry's
+shared advisor (shared evaluator + shared design-wide cache), exposes
+the outstanding :class:`~repro.core.optimizers.EvalRequest` to the
+cross-session batcher, and turns every completed round into streaming
+progress events — frontier/hypervolume *deltas*, so an interactive
+client sees the Pareto front sharpen round by round instead of polling
+a final blob.
+
+Lifecycle::
+
+    running --(generator exhausts)--> done
+    running --(cancel())-----------> cancelled   (partial result kept)
+
+Because evaluation is exact and the optimizer is a deterministic
+function of ``(seed, observed results)``, a session's history — and
+therefore its frontier and hypervolume — is bit-identical to a solo
+``FifoAdvisor.run()`` with the same seed, no matter how many other
+sessions were batched alongside it (asserted in
+``tests/test_service.py`` and ``benchmarks/service.py``).
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Deque, Optional
+
+import numpy as np
+
+from repro.core.advisor import DseResult, FifoAdvisor
+from repro.core.campaign.router import RoutedRequest
+from repro.core.optimizers import OPTIMIZERS, EvalRequest
+from repro.core.pareto import hypervolume_2d
+
+__all__ = ["Session"]
+
+RUNNING = "running"
+DONE = "done"
+CANCELLED = "cancelled"
+
+
+class Session:
+    """One client's DSE run, drivable one batched round at a time.
+
+    Args:
+        sid: service-unique session id (``"s0"``, ``"s1"``, ...).
+        design: registry key of the design being sized.
+        advisor: the registry's shared :class:`FifoAdvisor` for it.
+        optimizer: registered optimizer name (see ``OPTIMIZERS``).
+        budget: evaluation budget (simulated rows, i.e. cache misses).
+        seed: RNG seed; determines the whole trajectory.
+        opt_kwargs: extra optimizer constructor keywords.
+        lane: sticky evaluation-lane affinity (pool routing).
+        progress_events: emit per-round frontier/hypervolume deltas
+            (costs one frontier recomputation per round — cheap, but
+            off-switchable for throughput benchmarking).
+    """
+
+    def __init__(self, sid: str, design: str, advisor: FifoAdvisor,
+                 optimizer: str = "grouped_sa", budget: int = 300,
+                 seed: int = 0, opt_kwargs: Optional[dict] = None,
+                 lane: int = 0, progress_events: bool = True):
+        if optimizer not in OPTIMIZERS:
+            raise KeyError(
+                f"unknown optimizer {optimizer!r}; registered: "
+                f"{sorted(OPTIMIZERS)}")
+        self.id = sid
+        self.design = design
+        self.advisor = advisor
+        self.optimizer = optimizer
+        self.budget = int(budget)
+        self.seed = int(seed)
+        self.lane = int(lane)
+        self.progress_events = bool(progress_events)
+        self.ctx = advisor.make_context(seed=seed)
+        self.opt = OPTIMIZERS[optimizer](self.ctx, budget=budget,
+                                         **dict(opt_kwargs or {}))
+        self.state = RUNNING
+        self.rounds = 0
+        self.eval_s = 0.0
+        self.opened_at = time.perf_counter()
+        self.events: Deque[dict] = deque()
+        self._last_hv = 0.0
+        self._last_frontier = 0
+        self._result: Optional[DseResult] = None
+
+    # ------------------------------------------------------ round driving
+    def propose(self) -> Optional[EvalRequest]:
+        """The outstanding batch, or None (finalizing if exhausted)."""
+        if self.state != RUNNING:
+            return None
+        req = self.opt.propose()
+        if req is None:
+            self._finish(DONE)
+        return req
+
+    def complete_round(self, routed: RoutedRequest) -> None:
+        """Absorb one routed round: cache-insert the simulated rows,
+        record history/budget, step the optimizer, emit progress."""
+        rows = routed.miss_rows
+        if rows.size:
+            self.advisor.cache.insert(
+                routed.req.depths[rows], routed.lat[rows],
+                routed.bram[rows], routed.dead[rows])
+        self.eval_s += routed.eval_s
+        self.ctx.record(routed.req.depths, routed.lat, routed.bram,
+                        routed.dead, rows.size)
+        self.opt.observe(routed.lat, routed.bram, routed.dead)
+        self.rounds += 1
+        if self.progress_events:
+            self._emit_progress(int(rows.size))
+
+    def cancel(self) -> None:
+        """Stop the session now; evaluated history becomes the result."""
+        if self.state != RUNNING:
+            return
+        self.opt.close()
+        self._finish(CANCELLED)
+
+    # ---------------------------------------------------------- results
+    @property
+    def done(self) -> bool:
+        return self.state != RUNNING
+
+    def dse_result(self) -> DseResult:
+        """The session's :class:`DseResult` (partial when cancelled)."""
+        if self._result is None:
+            # an in-flight snapshot (status queries on a running session)
+            return self._make_result()
+        return self._result
+
+    def _make_result(self) -> DseResult:
+        res = self.ctx.result(self.opt.name, self.opt.step_s + self.eval_s)
+        return DseResult(design_name=self.design,
+                         optimizer=self.optimizer, result=res,
+                         baseline_max=self.advisor.baseline_max,
+                         baseline_min=self.advisor.baseline_min,
+                         trace_time_s=self.advisor.trace_time_s)
+
+    def _finish(self, state: str) -> None:
+        self.state = state
+        self._result = self._make_result()
+        self.events.append({
+            "event": state, "session": self.id,
+            "n_evals": int(self.ctx.n_evals),
+            "rounds": self.rounds,
+            "frontier_size": int(
+                self._result.frontier_points.shape[0]),
+            "hypervolume": float(self._result.hypervolume()),
+        })
+
+    # ----------------------------------------------------------- events
+    def _hypervolume(self, pts: np.ndarray) -> float:
+        return hypervolume_2d(pts,
+                              self.advisor.baseline_max.hv_reference())
+
+    def _emit_progress(self, n_simulated: int) -> None:
+        """Queue a progress event when the frontier moved this round."""
+        pts, _ = self.ctx.result(self.opt.name, 0.0).frontier()
+        hv = self._hypervolume(pts)
+        if (pts.shape[0] == self._last_frontier
+                and hv == self._last_hv and self.rounds > 1):
+            return
+        self.events.append({
+            "event": "progress", "session": self.id,
+            "round": self.rounds,
+            "n_evals": int(self.ctx.n_evals),
+            "n_simulated": n_simulated,
+            "frontier_size": int(pts.shape[0]),
+            "frontier_delta": int(pts.shape[0] - self._last_frontier),
+            "hypervolume": float(hv),
+            "hv_delta": float(hv - self._last_hv),
+        })
+        self._last_frontier = int(pts.shape[0])
+        self._last_hv = float(hv)
+
+    def drain_events(self):
+        """Pop and return every queued event (oldest first)."""
+        out = list(self.events)
+        self.events.clear()
+        return out
+
+    def status(self) -> dict:
+        """JSON-ready snapshot of the session."""
+        return {
+            "session": self.id, "design": self.design,
+            "optimizer": self.optimizer, "state": self.state,
+            "seed": self.seed, "budget": self.budget,
+            "rounds": self.rounds, "n_evals": int(self.ctx.n_evals),
+            "eval_s": round(self.eval_s, 4),
+        }

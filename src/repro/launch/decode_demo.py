@@ -1,0 +1,74 @@
+"""LLM decode demo: batched prefill + token-by-token decode (CPU, reduced).
+
+Moved from ``repro.launch.serve`` when that entrypoint became the
+FIFO-sizing advisory service; the flow is unchanged.
+
+  PYTHONPATH=src python -m repro.launch.decode_demo --arch mamba2-1.3b \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.models import params as pm
+from repro.models.transformer import model_specs
+from repro.train.steps import make_decode_step, make_prefill_step
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch).reduced()
+    key = jax.random.PRNGKey(args.seed)
+    params = pm.materialize(model_specs(cfg), key)
+
+    B = args.batch
+    F = cfg.frontend_tokens
+    max_len = args.prompt_len + args.gen
+    toks = jax.random.randint(key, (B, args.prompt_len - F), 0, cfg.vocab)
+    embeds = (jax.random.normal(key, (B, F, cfg.d_model), jnp.float32)
+              if F else None)
+
+    prefill = jax.jit(make_prefill_step(cfg, max_len, cdt=jnp.float32))
+    decode = jax.jit(make_decode_step(cfg, cdt=jnp.float32),
+                     donate_argnums=(1,))
+
+    t0 = time.perf_counter()
+    last_logits, cache = prefill(params, toks, embeds)
+    tok = jnp.argmax(last_logits, -1).astype(jnp.int32)[:, None]
+    t_prefill = time.perf_counter() - t0
+
+    out_tokens = [np.asarray(tok[:, 0])]
+    t0 = time.perf_counter()
+    for i in range(args.gen - 1):
+        tok, cache = decode(params, cache, tok,
+                            jnp.int32(args.prompt_len + i))
+        tok = tok[:, None]
+        out_tokens.append(np.asarray(tok[:, 0]))
+    t_decode = time.perf_counter() - t0
+    toks_s = B * (args.gen - 1) / max(t_decode, 1e-9)
+    print(f"prefill {args.prompt_len} toks x{B}: {t_prefill:.2f}s | "
+          f"decode {args.gen - 1} steps: {t_decode:.2f}s "
+          f"({toks_s:.1f} tok/s)")
+    gen = np.stack(out_tokens, axis=1)
+    print("generated:", gen[0][:12], "...")
+    return {"prefill_s": t_prefill, "decode_s": t_decode,
+            "tok_per_s": toks_s, "tokens": gen}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,71 +1,309 @@
-"""Serving driver: batched prefill + token-by-token decode (CPU, reduced).
+"""FIFO-sizing advisory service: JSON lines over TCP or stdio.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b \
-      --batch 4 --prompt-len 32 --gen 16
+The always-on, multi-client face of the advisor: designs are traced once
+into a shared registry, each client session is a stepwise optimizer, and
+outstanding evaluation requests from *different* clients and *different*
+designs are packed into single batched dispatches
+(:mod:`repro.core.service`).  Progress streams back as
+frontier/hypervolume delta events while the search runs.
+
+  # serve two preloaded designs on TCP
+  PYTHONPATH=src python -m repro.launch.serve \
+      --designs gemm,FeedForward --port 7733
+
+  # one-shot stdio session (requests in, responses + events out)
+  printf '%s\n' \
+      '{"op":"open","design":"gemm","optimizer":"grouped_sa","budget":200}' \
+      '{"op":"run"}' \
+      '{"op":"result","session":"s0"}' \
+      | PYTHONPATH=src python -m repro.launch.serve --stdio
+
+Protocol reference: ``docs/service.md``.  The previous occupant of this
+entrypoint (the LLM prefill/decode demo) lives on unchanged as
+``python -m repro.launch.decode_demo``.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
-
-import numpy as np
-
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_arch
-from repro.models import params as pm
-from repro.models.transformer import model_specs
-from repro.train.steps import make_decode_step, make_prefill_step
+import asyncio
+import sys
+from typing import Dict, Optional
 
 
-def main(argv=None) -> dict:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-1.5b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+class _BlockingWriter:
+    """StreamWriter look-alike over a plain text stream (stdio mode
+    with stdout redirected to a file, where pipe transports refuse)."""
 
-    cfg = get_arch(args.arch).reduced()
-    key = jax.random.PRNGKey(args.seed)
-    params = pm.materialize(model_specs(cfg), key)
+    def __init__(self, stream):
+        self._stream = stream
 
-    B = args.batch
-    F = cfg.frontend_tokens
-    max_len = args.prompt_len + args.gen
-    toks = jax.random.randint(key, (B, args.prompt_len - F), 0, cfg.vocab)
-    embeds = (jax.random.normal(key, (B, F, cfg.d_model), jnp.float32)
-              if F else None)
+    def write(self, data: bytes) -> None:
+        self._stream.write(data.decode())
 
-    prefill = jax.jit(make_prefill_step(cfg, max_len, cdt=jnp.float32))
-    decode = jax.jit(make_decode_step(cfg, cdt=jnp.float32),
-                     donate_argnums=(1,))
+    async def drain(self) -> None:
+        self._stream.flush()
 
-    t0 = time.perf_counter()
-    last_logits, cache = prefill(params, toks, embeds)
-    tok = jnp.argmax(last_logits, -1).astype(jnp.int32)[:, None]
-    t_prefill = time.perf_counter() - t0
+    def close(self) -> None:
+        self._stream.flush()
 
-    out_tokens = [np.asarray(tok[:, 0])]
-    t0 = time.perf_counter()
-    for i in range(args.gen - 1):
-        tok, cache = decode(params, cache, tok,
-                            jnp.int32(args.prompt_len + i))
-        tok = tok[:, None]
-        out_tokens.append(np.asarray(tok[:, 0]))
-    t_decode = time.perf_counter() - t0
-    toks_s = B * (args.gen - 1) / max(t_decode, 1e-9)
-    print(f"prefill {args.prompt_len} toks x{B}: {t_prefill:.2f}s | "
-          f"decode {args.gen - 1} steps: {t_decode:.2f}s "
-          f"({toks_s:.1f} tok/s)")
-    gen = np.stack(out_tokens, axis=1)
-    print("generated:", gen[0][:12], "...")
-    return {"prefill_s": t_prefill, "decode_s": t_decode,
-            "tok_per_s": toks_s, "tokens": gen}
+
+class AdvisoryServer:
+    """Asyncio front-end over the synchronous service core.
+
+    One background *pump* task advances the service one batched round at
+    a time and routes each session's progress events to the connection
+    that opened it.  Rounds run inline on the event loop: evaluation is
+    millisecond-scale (that is the paper's point), and single-threaded
+    stepping keeps the core deterministic — no locks, no races between
+    ``open``/``cancel`` and the round in flight.
+    """
+
+    def __init__(self, service=None, idle_sleep_s: float = 0.02,
+                 **service_kwargs):
+        from repro.core.service import AdvisoryService, ProtocolHandler
+        self.service = service or AdvisoryService(**service_kwargs)
+        self.handler = ProtocolHandler(self.service)
+        self.idle_sleep_s = float(idle_sleep_s)
+        self._owners: Dict[str, asyncio.Queue] = {}   # sid -> out queue
+        self._shutdown = asyncio.Event()
+        self._pump_task: Optional[asyncio.Task] = None
+
+    # ------------------------------------------------------------- pump
+    def _route_events(self) -> None:
+        """Deliver queued session events to their owning connections.
+
+        Only *owned* sessions are drained: events for sessions whose
+        connection has gone (or that were opened in-process) stay queued
+        on the session until someone drains them — nothing is silently
+        discarded, and the pump's per-tick work is bounded by the number
+        of live connections, not by every session ever opened.
+        """
+        for sid, q in list(self._owners.items()):
+            if sid not in self.service.sessions:   # released
+                self._owners.pop(sid, None)
+                continue
+            for ev in self.service.drain_events(sid):
+                q.put_nowait(ev)
+
+    async def _pump(self) -> None:
+        """Advance the service and fan events out to session owners.
+
+        A failure inside a round (evaluation-engine error, worker
+        death) must not die unobserved — it is reported to stderr and
+        to every connected session owner, and the server shuts down
+        rather than sit silently idle while clients wait on events.
+        """
+        try:
+            while not self._shutdown.is_set():
+                advanced = self.service.step()
+                self._route_events()
+                # yield to the loop every round; back off only when idle
+                await asyncio.sleep(0 if advanced else self.idle_sleep_s)
+        except Exception as exc:   # noqa: BLE001 — terminal server fault
+            import traceback
+            traceback.print_exc(file=sys.stderr)
+            fault = {"event": "error",
+                     "error": f"{type(exc).__name__}: {exc}",
+                     "fatal": True}
+            for q in self._owners.values():
+                q.put_nowait(dict(fault))
+            self._shutdown.set()
+
+    def ensure_pump(self) -> None:
+        if self._pump_task is None or self._pump_task.done():
+            self._pump_task = asyncio.ensure_future(self._pump())
+
+    async def aclose(self) -> None:
+        self._shutdown.set()
+        if self._pump_task is not None:
+            self._pump_task.cancel()
+            try:
+                await self._pump_task
+            except asyncio.CancelledError:
+                pass
+        self.service.close()
+
+    # ------------------------------------------------------ connections
+    async def _run_cooperative(self, msg: dict) -> dict:
+        """``{"op": "run"}`` with an ``await`` between rounds."""
+        max_rounds = msg.get("max_rounds")
+        rounds = 0
+        while not self._shutdown.is_set():
+            if not self.service.step():
+                break
+            rounds += 1
+            self._route_events()
+            if max_rounds is not None and rounds >= max_rounds:
+                break
+            await asyncio.sleep(0)
+        out = {"ok": True, "rounds": rounds,
+               "running": len(self.service.running)}
+        if msg.get("id") is not None:
+            out["id"] = msg["id"]
+        return out
+
+    async def _sender(self, q: asyncio.Queue, writer) -> None:
+        from repro.core.service import encode_line
+        while True:
+            frame = await q.get()
+            if frame is None:
+                break
+            writer.write(encode_line(frame).encode())
+            await writer.drain()
+
+    async def handle_connection(self, reader, writer) -> None:
+        """One JSON-lines client: requests in, responses + events out."""
+        from repro.core.service import ProtocolError, decode_line
+        q: asyncio.Queue = asyncio.Queue()
+        sender = asyncio.ensure_future(self._sender(q, writer))
+        opened = []
+        try:
+            while True:
+                line = await reader.readline()
+                if not line:
+                    break
+                if not line.strip():
+                    continue
+                try:
+                    msg = decode_line(line)
+                except ProtocolError as exc:
+                    q.put_nowait({"ok": False, "error": str(exc)})
+                    continue
+                if msg.get("op") == "run":
+                    # drive cooperatively: handler._op_run would block
+                    # the event loop (and every other connection) until
+                    # ALL sessions finish; yielding between rounds keeps
+                    # the server responsive while preserving semantics
+                    resp = await self._run_cooperative(msg)
+                else:
+                    resp = self.handler.handle(msg)
+                if msg.get("op") == "open" and resp.get("ok"):
+                    self._owners[resp["session"]] = q
+                    opened.append(resp["session"])
+                q.put_nowait(resp)
+                # synchronous ops ("run") may have produced events —
+                # deliver them now, not at the pump's next tick
+                self._route_events()
+                if resp.get("shutdown"):
+                    self._shutdown.set()
+                    break
+        finally:
+            self._route_events()
+            for sid in opened:
+                self._owners.pop(sid, None)
+            q.put_nowait(None)
+            await sender
+            writer.close()
+            if hasattr(writer, "wait_closed"):
+                try:
+                    await writer.wait_closed()
+                except (ConnectionError, NotImplementedError):
+                    pass
+
+    async def serve_tcp(self, host: str = "127.0.0.1", port: int = 7733):
+        """Start the TCP listener (port 0 = ephemeral); returns the
+        ``asyncio.Server`` — callers own its lifetime."""
+        self.ensure_pump()
+        return await asyncio.start_server(self.handle_connection,
+                                          host, port)
+
+    async def serve_stdio(self) -> None:
+        """Serve stdin/stdout as one connection; at EOF, finish any
+        still-running sessions and flush their events before exiting."""
+        from repro.core.service import encode_line
+        self.ensure_pump()
+        loop = asyncio.get_event_loop()
+        reader = asyncio.StreamReader()
+        await loop.connect_read_pipe(
+            lambda: asyncio.StreamReaderProtocol(reader), sys.stdin)
+        try:
+            w_transport, w_protocol = await loop.connect_write_pipe(
+                asyncio.streams.FlowControlMixin, sys.stdout)
+            writer = asyncio.StreamWriter(w_transport, w_protocol,
+                                          reader, loop)
+        except ValueError:
+            # stdout redirected to a regular file: pipe transports
+            # refuse it, but a blocking writer is perfectly fine there
+            writer = _BlockingWriter(sys.stdout)
+        await self.handle_connection(reader, writer)
+        # piped usage: the input script may end while sessions run;
+        # finish them and emit EVERYTHING still queued (the connection
+        # teardown stops routing, so events pile up on the sessions)
+        while self.service.running and not self._shutdown.is_set():
+            self.service.step()
+        for ev in self.service.drain_events():
+            sys.stdout.write(encode_line(ev))
+        sys.stdout.flush()
+
+
+def parse_args(argv=None):
+    p = argparse.ArgumentParser(
+        prog="python -m repro.launch.serve",
+        description="Serve FIFO-sizing DSE sessions over JSON lines.")
+    p.add_argument("--designs", default=None,
+                   help="comma-list of designs to trace at startup "
+                        "(others are traced lazily on first open)")
+    p.add_argument("--port", type=int, default=7733,
+                   help="TCP port (0 = ephemeral; printed at startup)")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--stdio", action="store_true",
+                   help="serve stdin/stdout instead of TCP")
+    p.add_argument("--backend", default="numpy",
+                   help="evaluator backend for every design "
+                        "(numpy/worklist, jax/fixpoint, pallas)")
+    p.add_argument("--max-iters", type=int, default=256)
+    p.add_argument("--hetero", action="store_true",
+                   help="pack cross-design batches into one fixpoint "
+                        "dispatch (TPU-native path)")
+    p.add_argument("--workers", type=int, default=0,
+                   help="worklist worker processes (0 = inline)")
+    p.add_argument("--no-progress", action="store_true",
+                   help="disable per-round progress events")
+    return p.parse_args(argv)
+
+
+async def amain(args) -> int:
+    if args.hetero and args.workers:
+        print("note: --workers is ignored with --hetero (the fused "
+              "dispatch owns every full-solve row in this process)",
+              file=sys.stderr)
+    server = AdvisoryServer(backend=args.backend,
+                            max_iters=args.max_iters,
+                            hetero=args.hetero, workers=args.workers,
+                            progress_events=not args.no_progress)
+    if args.designs:
+        for name in args.designs.split(","):
+            name = name.strip()
+            if name:
+                server.service.registry.register(name)
+                server.service.batcher.add_design(name)
+        print(f"preloaded designs: {server.service.registry.names()}",
+              file=sys.stderr)
+    try:
+        if args.stdio:
+            await server.serve_stdio()
+            return 0
+        tcp = await server.serve_tcp(args.host, args.port)
+        addr = tcp.sockets[0].getsockname()
+        print(f"advisory service listening on {addr[0]}:{addr[1]}",
+              file=sys.stderr)
+        async with tcp:
+            await self_shutdown_wait(server, tcp)
+        return 0
+    finally:
+        await server.aclose()
+
+
+async def self_shutdown_wait(server: AdvisoryServer, tcp) -> None:
+    """Run until a client sends ``{"op": "shutdown"}``."""
+    await server._shutdown.wait()
+    tcp.close()
+
+
+def main(argv=None) -> int:
+    return asyncio.run(amain(parse_args(argv)))
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

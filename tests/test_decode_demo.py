@@ -1,0 +1,19 @@
+"""Smoke for the relocated LLM decode demo (ex-``launch.serve`` flow).
+
+The advisory service took over the ``repro.launch.serve`` entrypoint;
+this pins the seed functionality that moved to
+``repro.launch.decode_demo`` so the rename never silently drops it.
+"""
+
+import numpy as np
+
+
+def test_decode_demo_smoke():
+    from repro.launch.decode_demo import main
+
+    out = main(["--arch", "qwen2-1.5b", "--batch", "1",
+                "--prompt-len", "8", "--gen", "3"])
+    assert set(out) == {"prefill_s", "decode_s", "tok_per_s", "tokens"}
+    tokens = np.asarray(out["tokens"])
+    assert tokens.shape == (1, 3)
+    assert out["prefill_s"] > 0 and out["decode_s"] > 0

@@ -1,0 +1,72 @@
+"""Doc-freshness gate: every fenced ``python`` block must execute.
+
+Extracts fenced code blocks tagged ``python`` from README.md and
+``docs/*.md`` and ``exec``'s each in a fresh namespace with the CWD
+pointed at a temp directory (snippets may write checkpoints/results).
+A block whose first line is ``# doc: skip`` is exempt (pseudo-code,
+interface sketches) — everything else is live code, so the snippets in
+the docs cannot rot away from the API.
+
+The whole module is jax-free by construction (snippets use the numpy
+worklist backend), and CI runs it in a dedicated no-jax job to keep the
+lazy-import property honest.
+"""
+
+import os
+import re
+
+import pytest
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SKIP_MARK = "# doc: skip"
+FENCE_RE = re.compile(r"```python[ \t]*\n(.*?)^```", re.S | re.M)
+
+
+def doc_pages():
+    pages = [os.path.join(REPO_ROOT, "README.md")]
+    docs_dir = os.path.join(REPO_ROOT, "docs")
+    for name in sorted(os.listdir(docs_dir)):
+        if name.endswith(".md"):
+            pages.append(os.path.join(docs_dir, name))
+    return pages
+
+
+def collect_blocks():
+    blocks = []
+    for path in doc_pages():
+        with open(path) as f:
+            text = f.read()
+        rel = os.path.relpath(path, REPO_ROOT)
+        for i, code in enumerate(FENCE_RE.findall(text)):
+            blocks.append(pytest.param(rel, i, code, id=f"{rel}:{i}"))
+    return blocks
+
+
+BLOCKS = collect_blocks()
+
+
+def test_docs_have_snippets():
+    """The gate must be guarding something: all five pages + README."""
+    pages = {b.values[0] for b in BLOCKS}
+    assert "README.md" in pages
+    for page in ("architecture", "backends", "campaign", "optimizers",
+                 "service"):
+        assert f"docs/{page}.md" in pages, f"docs/{page}.md has no "\
+            "python snippets (or was deleted)"
+
+
+@pytest.mark.parametrize("page, index, code", BLOCKS)
+def test_doc_snippet_executes(page, index, code, tmp_path, monkeypatch):
+    first = code.lstrip().splitlines()[0].strip() if code.strip() else ""
+    if first.startswith(SKIP_MARK):
+        pytest.skip(f"{page} block {index} is marked {SKIP_MARK}")
+    # snippets may write artifacts (campaign checkpoints, result JSONs)
+    monkeypatch.chdir(tmp_path)
+    namespace = {"__name__": f"__doc_snippet_{index}__"}
+    try:
+        exec(compile(code, f"<{page} block {index}>", "exec"), namespace)
+    except Exception as exc:   # noqa: BLE001 - repackage with context
+        pytest.fail(
+            f"{page} python block {index} no longer runs "
+            f"({type(exc).__name__}: {exc}); update the doc or mark the "
+            f"block with '{SKIP_MARK}'")

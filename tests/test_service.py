@@ -1,0 +1,325 @@
+"""Advisory service: cross-session batching correctness + protocol.
+
+The load-bearing invariant mirrors the campaign engine's: batching is
+*routing only*.  Concurrent sessions — interleaved round by round,
+merged/deduplicated per design, optionally packed across designs into
+one hetero dispatch — must produce histories and frontiers bit-identical
+to solo ``FifoAdvisor.run()`` calls with the same seeds.  (Budget
+accounting ``n_evals`` counts cache *misses*, so it legitimately shrinks
+under cache sharing; configurations, latencies, frontiers, and
+hypervolumes never change.)
+"""
+
+import asyncio
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import FifoAdvisor
+from repro.core.campaign.router import RoundRouter
+from repro.core.service import (AdvisorClient, AdvisoryService,
+                                DesignRegistry, ProtocolError,
+                                ProtocolHandler)
+from repro.designs import make_design
+
+DESIGNS = ("gemm", "FeedForward")
+BUDGET = 60
+
+#: (design, optimizer, seed) mix covering 2 designs x 2 optimizers
+SESSIONS = [("gemm", "grouped_sa", 0), ("gemm", "grouped_random", 3),
+            ("FeedForward", "grouped_sa", 1),
+            ("FeedForward", "grouped_random", 0)]
+
+
+def solo_run(design, optimizer, seed, budget=BUDGET):
+    return FifoAdvisor(make_design(design)).run(optimizer, budget=budget,
+                                                seed=seed)
+
+
+def assert_identical(dse, ref, key=""):
+    assert np.array_equal(dse.result.configs, ref.result.configs), key
+    assert np.array_equal(dse.result.latency, ref.result.latency), key
+    assert np.array_equal(dse.result.bram, ref.result.bram), key
+    assert np.array_equal(dse.result.deadlock, ref.result.deadlock), key
+    assert np.array_equal(dse.frontier_points, ref.frontier_points), key
+    assert dse.hypervolume() == ref.hypervolume(), key
+
+
+# --------------------------------------------------------------- batching
+def test_concurrent_sessions_bit_identical_to_solo():
+    """2 designs x 2 optimizers batched together == 4 solo runs."""
+    with AdvisoryService() as svc:
+        sids = [svc.open_session(d, optimizer=o, budget=BUDGET,
+                                 seed=s).id for d, o, s in SESSIONS]
+        svc.run_until_idle()
+        for sid, (d, o, s) in zip(sids, SESSIONS):
+            assert_identical(svc.result(sid), solo_run(d, o, s),
+                             f"{d}:{o}:s{s}")
+
+
+def test_forced_hetero_packing_bit_identical():
+    """hetero=True packs cross-design rows into shared dispatches and
+    still reproduces every solo run exactly."""
+    with AdvisoryService(hetero=True, max_iters=64) as svc:
+        sids = [svc.open_session(d, optimizer=o, budget=BUDGET,
+                                 seed=s).id for d, o, s in SESSIONS]
+        svc.run_until_idle()
+        disp = svc.batcher.router.hetero
+        assert disp is not None and disp.stats.n_dispatches > 0
+        # both designs share each round's dispatch: never more
+        # dispatches than rounds (separate per-design dispatch would
+        # need up to one per design per round)
+        assert disp.stats.n_dispatches <= svc.batcher.rounds
+        assert set(disp.worklists) == set(DESIGNS)
+        for sid, (d, o, s) in zip(sids, SESSIONS):
+            assert_identical(svc.result(sid), solo_run(d, o, s),
+                             f"hetero {d}:{o}:s{s}")
+
+
+def test_mid_run_cancel_keeps_prefix_and_peers_exact():
+    """Cancelling one session mid-run yields its history prefix and
+    leaves every other session bit-identical to its solo run."""
+    with AdvisoryService() as svc:
+        victim = svc.open_session("gemm", optimizer="grouped_sa",
+                                  budget=400, seed=5)
+        peers = [svc.open_session(d, optimizer=o, budget=BUDGET,
+                                  seed=s).id for d, o, s in SESSIONS]
+        for _ in range(3):
+            svc.step()
+        svc.cancel(victim.id)
+        assert victim.state == "cancelled"
+        svc.run_until_idle()
+
+        part = svc.result(victim.id)
+        n = part.result.configs.shape[0]
+        assert 0 < n
+        ref = solo_run("gemm", "grouped_sa", 5, budget=400)
+        assert n < ref.result.configs.shape[0]
+        assert np.array_equal(part.result.configs,
+                              ref.result.configs[:n])
+        assert np.array_equal(part.result.latency,
+                              ref.result.latency[:n])
+        events = victim.drain_events()
+        assert events and events[-1]["event"] == "cancelled"
+        # cancelled sessions never advance again
+        before = victim.rounds
+        svc.step()
+        assert victim.rounds == before
+
+        for sid, (d, o, s) in zip(peers, SESSIONS):
+            assert_identical(svc.result(sid), solo_run(d, o, s),
+                             f"peer {d}:{o}:s{s}")
+
+
+def test_progress_events_stream_frontier_deltas():
+    with AdvisoryService() as svc:
+        sess = svc.open_session("gemm", optimizer="grouped_random",
+                                budget=BUDGET, seed=0)
+        svc.run_until_idle()
+        events = sess.drain_events()
+        assert events[-1]["event"] == "done"
+        progress = [e for e in events if e["event"] == "progress"]
+        assert progress, "no progress events streamed"
+        hv = 0.0
+        for e in progress:
+            assert e["hv_delta"] == pytest.approx(
+                e["hypervolume"] - hv)
+            assert e["hypervolume"] >= hv   # cumulative-history frontier
+            hv = e["hypervolume"]
+        assert events[-1]["hypervolume"] == pytest.approx(hv)
+
+
+def test_pooled_service_handles_late_and_custom_designs():
+    """Worker-pool mode: a design opened after the pool exists (rebuild)
+    and a custom Design object (pinned inline — fresh worker processes
+    cannot rebuild it by name) both evaluate correctly."""
+    from repro.core.design import Design
+
+    def build_design():
+        d = Design("qs")
+        d.fifo("a", width=32)
+
+        @d.task("src")
+        def src(ctx):
+            for i in range(64):
+                yield ctx.delay(1)
+                yield ctx.write("a", i)
+
+        @d.task("sink")
+        def sink(ctx):
+            for _ in range(64):
+                yield ctx.read("a")
+                yield ctx.delay(2)
+
+        return d
+
+    with AdvisoryService(workers=1) as svc:
+        first = svc.open_session("gemm", optimizer="grouped_random",
+                                 budget=40, seed=0)
+        late = svc.open_session("FeedForward",
+                                optimizer="grouped_random",
+                                budget=40, seed=1)       # pool rebuild
+        custom = svc.open_session("qs", design_obj=build_design(),
+                                  optimizer="grouped_random",
+                                  budget=40, seed=2)     # inline-only
+        assert "qs" in svc.batcher.router.inline_only
+        assert svc.batcher.router.pool is not None
+        svc.run_until_idle()
+        assert {s.state for s in (first, late, custom)} == {"done"}
+        assert_identical(svc.result(first.id),
+                         solo_run("gemm", "grouped_random", 0, 40))
+        assert_identical(svc.result(late.id),
+                         solo_run("FeedForward", "grouped_random", 1, 40))
+        solo_custom = FifoAdvisor(build_design()).run(
+            "grouped_random", budget=40, seed=2)
+        assert_identical(svc.result(custom.id), solo_custom)
+
+
+# --------------------------------------------------------------- registry
+def test_registry_traces_each_design_once():
+    reg = DesignRegistry()
+    a1 = reg.register("gemm")
+    a2 = reg.register("gemm")
+    assert a1 is a2
+    assert reg.names() == ["gemm"]
+    with AdvisoryService(registry=reg) as svc:
+        s1 = svc.open_session("gemm", budget=20, seed=0)
+        svc.run_until_idle()
+        assert s1.ctx.n_evals > 0
+        # a later identical session rides the shared cache entirely:
+        # same trajectory, zero new simulations
+        s2 = svc.open_session("gemm", budget=20, seed=0)
+        assert s2.advisor is a1
+        svc.run_until_idle()
+        assert s2.ctx.n_evals == 0
+        assert np.array_equal(s1.ctx.history()[0], s2.ctx.history()[0])
+    assert reg.stats()["gemm"]["cache"]["hits"] > 0
+
+
+def test_service_and_campaign_share_the_router():
+    """The factoring the service rides on: one routing implementation."""
+    from repro.core.campaign import Campaign, CampaignSpec
+    camp = Campaign(CampaignSpec(designs=("gemm",),
+                                 optimizers=("grouped_random",),
+                                 budget=20))
+    with AdvisoryService() as svc:
+        assert type(camp.router) is type(svc.batcher.router) is RoundRouter
+    camp.close()
+
+
+# --------------------------------------------------------------- protocol
+def test_protocol_roundtrip_and_errors():
+    handler = ProtocolHandler(AdvisoryService())
+    resp = handler.handle({"op": "open", "design": "gemm",
+                           "optimizer": "grouped_random", "budget": 30,
+                           "id": "req-1"})
+    assert resp["ok"] and resp["id"] == "req-1"
+    sid = resp["session"]
+    assert handler.handle({"op": "status", "session": sid})[
+        "state"] == "running"
+    run = handler.handle({"op": "run"})
+    assert run["ok"] and run["running"] == 0
+    res = handler.handle({"op": "result", "session": sid})
+    assert res["ok"] and res["state"] == "done"
+    assert res["result"]["frontier"]
+    assert res["result"]["n_evals"] > 0
+    events = handler.poll_events(sid)
+    assert events and events[-1]["event"] == "done"
+
+    assert not handler.handle({"op": "nope"})["ok"]
+    assert not handler.handle({"op": "open"})["ok"]
+    assert not handler.handle({"op": "status", "session": "s99"})["ok"]
+    bad = handler.handle({"op": "cancel", "id": 7})
+    assert not bad["ok"] and bad["id"] == 7
+
+
+def test_release_evicts_session_and_hetero_ignores_workers():
+    with AdvisorClient() as client:
+        sid = client.open("gemm", optimizer="grouped_random", budget=20)
+        client.drive()
+        assert client.result(sid).result.configs.shape[0] > 0
+        rel = client.release(sid)
+        assert rel["released"] and rel["state"] == "done"
+        with pytest.raises(ProtocolError):
+            client.status(sid)     # forgotten server-side
+        assert client.service.sessions == {}
+    # hetero owns full-solve rows in-process: workers are normalized off
+    with AdvisoryService(hetero=True, workers=4) as svc:
+        assert svc.batcher.workers == 0
+
+
+def test_optimizer_close_is_public_and_terminal():
+    from repro.core.optimizers import OPTIMIZERS
+    adv = FifoAdvisor(make_design("gemm"))
+    opt = OPTIMIZERS["grouped_random"](adv.make_context(seed=0),
+                                       budget=500)
+    req = opt.propose()
+    assert req is not None
+    opt.close()
+    assert opt.done and opt.propose() is None
+
+
+def test_advisor_client_run_matches_solo():
+    with AdvisorClient() as client:
+        dse = client.run("gemm", optimizer="grouped_sa", budget=BUDGET,
+                         seed=2)
+        assert_identical(dse, solo_run("gemm", "grouped_sa", 2))
+        payload = client.result_json("s0")
+        assert payload["design"] == "gemm"
+        assert json.dumps(payload)   # JSON-ready end to end
+        with pytest.raises(ProtocolError):
+            client.request({"op": "result", "session": "s42"})
+
+
+# ----------------------------------------------------------------- server
+def test_tcp_server_round_trip():
+    """Full wire path: TCP connect, open, run, events, result, shutdown."""
+    from repro.launch.serve import AdvisoryServer
+
+    async def scenario():
+        server = AdvisoryServer(idle_sleep_s=0.001)
+        tcp = await server.serve_tcp("127.0.0.1", 0)
+        port = tcp.sockets[0].getsockname()[1]
+        reader, writer = await asyncio.open_connection("127.0.0.1", port)
+
+        async def rpc(msg):
+            writer.write((json.dumps(msg) + "\n").encode())
+            await writer.drain()
+            while True:
+                frame = json.loads(await reader.readline())
+                if "event" in frame:
+                    frames.append(frame)
+                    continue
+                return frame
+
+        frames = []
+        opened = await rpc({"op": "open", "design": "gemm",
+                            "optimizer": "grouped_random",
+                            "budget": 40, "id": 1})
+        assert opened["ok"] and opened["id"] == 1
+        sid = opened["session"]
+        # the background pump drives the session without explicit "run"
+        for _ in range(200):
+            status = await rpc({"op": "status", "session": sid})
+            if status["state"] == "done":
+                break
+            await asyncio.sleep(0.01)
+        assert status["state"] == "done"
+        result = await rpc({"op": "result", "session": sid})
+        assert result["ok"] and result["result"]["frontier"]
+        # events were pushed while polling
+        deadline = 100
+        while not any(f["event"] == "done" for f in frames) and deadline:
+            line = await asyncio.wait_for(reader.readline(), timeout=2)
+            frames.append(json.loads(line))
+            deadline -= 1
+        assert any(f["event"] == "done" for f in frames)
+        bye = await rpc({"op": "shutdown"})
+        assert bye["ok"]
+        writer.close()
+        tcp.close()
+        await tcp.wait_closed()
+        await server.aclose()
+
+    asyncio.run(asyncio.wait_for(scenario(), timeout=120))
