@@ -1,0 +1,136 @@
+"""Fuzzing + certification benchmark.
+
+Two numbers the regression gate watches:
+
+* **differential throughput** — generated-design differential
+  evaluations per second (oracle + worklist over the fuzz depth matrix),
+  with the hard requirement that the campaign reports ZERO
+  disagreements;
+* **certification speedup** — minimal-safe-depth certification through
+  the incremental ``solve_delta`` / shared-cache fast path vs the naive
+  discrete-event-oracle bisection (identical probe sequences, identical
+  certified vectors — the speedup is pure evaluator economics).  The
+  affine benchmark designs clear 3x comfortably; heavily back-pressured
+  DDCF shapes (flowgnn) gain less because delta cascades re-run most
+  segments, and are reported but kept out of the gated geomean.
+
+  QUICK=1 PYTHONPATH=src:. python benchmarks/fuzz.py   # CI smoke
+  PYTHONPATH=src:. python benchmarks/fuzz.py           # default set
+  FULL=1 PYTHONPATH=src:. python benchmarks/fuzz.py    # everything
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Timer, full_mode, geomean, quick_mode, save_json
+
+#: designs in the gated certification geomean (affine, delta-friendly)
+_CERT_GATED_QUICK = ("mvt", "Autoencoder", "gemm")
+_CERT_GATED = _CERT_GATED_QUICK + ("FeedForward", "ResidualBlock", "k2mm")
+#: reported (not gated): back-pressure-heavy DDCF reference point
+_CERT_EXTRA = ("flowgnn_small",)
+
+
+def _design(name):
+    from repro.designs import make_design
+    from repro.designs.ddcf import flowgnn_pna, mult_by_2
+    if name == "flowgnn_small":
+        return flowgnn_pna(n_nodes=24, n_edges=64)
+    if name == "mult_by_2_64":
+        return mult_by_2(64)
+    return make_design(name)
+
+
+def bench_differential(seeds: range, quick: bool) -> dict:
+    """Throughput of the differential campaign loop (oracle + worklist)."""
+    from repro.designs.generate import generate_design
+    from repro.launch.fuzz import differential_check
+
+    n_rows = n_mism = 0
+    with Timer() as t:
+        for seed in seeds:
+            gen = generate_design(seed, quick=quick)
+            mism, rows = differential_check(gen, backends=("worklist",),
+                                            n_random=3)
+            n_rows += rows
+            n_mism += len(mism)
+    # each config row is evaluated by the oracle AND the worklist
+    evals = n_rows * 2
+    return {
+        "n_designs": len(seeds), "n_rows": n_rows,
+        "n_mismatches": n_mism, "zero_mismatches": n_mism == 0,
+        "wall_s": round(t.s, 3),
+        "evals_per_s": round(evals / max(t.s, 1e-9), 1),
+    }
+
+
+def bench_certification(names) -> dict:
+    """Fast-path vs naive-oracle certification, per design."""
+    from repro.core import FifoAdvisor
+    from repro.core.deadlock import (certify_min_depths,
+                                     certify_min_depths_oracle)
+
+    per_design = {}
+    for name in names:
+        design = _design(name)
+        adv = FifoAdvisor(design)
+        t0 = time.perf_counter()
+        res = certify_min_depths(adv.graph, adv.evaluator, cache=adv.cache)
+        fast_s = time.perf_counter() - t0
+        naive = certify_min_depths_oracle(design)
+        per_design[name] = {
+            "n_fifos": int(adv.graph.n_fifos),
+            "n_events": int(adv.graph.n_events),
+            "n_probes": int(res.n_probes),
+            "fast_s": round(fast_s, 4),
+            "naive_s": round(naive.wall_s, 4),
+            "speedup": round(naive.wall_s / max(fast_s, 1e-9), 2),
+            "identical_depths": bool((res.depths == naive.depths).all()),
+            "certified_sum": int(res.depths.sum()),
+        }
+    return per_design
+
+
+def run() -> dict:
+    if quick_mode():
+        seeds, quick, gated = range(0, 40), True, _CERT_GATED_QUICK
+        extra = ()
+    elif full_mode():
+        seeds, quick, gated = range(0, 150), False, _CERT_GATED
+        extra = _CERT_EXTRA + ("mult_by_2_64",)
+    else:
+        seeds, quick, gated = range(0, 80), True, _CERT_GATED
+        extra = _CERT_EXTRA
+
+    diff = bench_differential(seeds, quick)
+    cert = bench_certification(tuple(gated) + tuple(extra))
+    gated_rows = {k: v for k, v in cert.items() if k in gated}
+    payload = {
+        "differential": diff,
+        "certification": cert,
+        "cert_gated_designs": list(gated),
+        "cert_geomean_speedup": round(
+            geomean([v["speedup"] for v in gated_rows.values()]), 2),
+        "cert_identical_depths": all(
+            v["identical_depths"] for v in cert.values()),
+    }
+    save_json("fuzz.json", payload)
+    return payload
+
+
+def main():
+    out = run()
+    d = out["differential"]
+    print(f"differential: {d['n_designs']} designs, {d['n_rows']} rows, "
+          f"{d['evals_per_s']}/s, mismatches={d['n_mismatches']}")
+    for name, row in out["certification"].items():
+        print(f"certify {name:14s} fast={row['fast_s']:8.3f}s "
+              f"naive={row['naive_s']:8.3f}s {row['speedup']:5.1f}x "
+              f"identical={row['identical_depths']}")
+    print(f"gated geomean speedup: {out['cert_geomean_speedup']}x "
+          f"(designs: {', '.join(out['cert_gated_designs'])})")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,7 @@ import time
 
 def main() -> None:
     from benchmarks import (accuracy, batched_eval, campaign, case_study,
-                            convergence, improvement, pareto_fronts,
+                            convergence, fuzz, improvement, pareto_fronts,
                             pruning, roofline, runtime, service)
 
     print("name,seconds,derived")
@@ -68,6 +68,12 @@ def main() -> None:
     print(f"service,{time.perf_counter() - t0:.2f},"
           f"speedup_vs_solo={sv['service_speedup']:.2f}x;"
           f"identical_frontiers={sv['identical_frontiers']}")
+
+    t0 = time.perf_counter()
+    fz = fuzz.run()
+    print(f"fuzz,{time.perf_counter() - t0:.2f},"
+          f"zero_mismatches={fz['differential']['zero_mismatches']};"
+          f"cert_speedup={fz['cert_geomean_speedup']:.2f}x")
 
     t0 = time.perf_counter()
     pr = pruning.run()

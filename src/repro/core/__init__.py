@@ -11,6 +11,9 @@ from repro.core.advisor import Baseline, DseResult, FifoAdvisor
 from repro.core.backends import (ConfigCache, EvalBackend,
                                  available_backends, get_backend,
                                  register_backend)
+from repro.core.deadlock import (CertificationResult, WaitForGraph,
+                                 certify_min_depths, deadlock_blame,
+                                 extract_wait_graph)
 from repro.core.design import Design, Fifo, Task
 from repro.core.oracle import SimResult, simulate
 from repro.core.simgraph import SimGraph, build_simgraph
@@ -18,8 +21,10 @@ from repro.core.simulate import BatchedEvaluator, evaluate_np
 from repro.core.tracer import Trace, collect_trace
 
 __all__ = [
-    "Baseline", "BatchedEvaluator", "ConfigCache", "Design", "DseResult",
-    "EvalBackend", "Fifo", "FifoAdvisor", "SimGraph", "SimResult", "Task",
-    "Trace", "available_backends", "build_simgraph", "collect_trace",
-    "evaluate_np", "get_backend", "register_backend", "simulate",
+    "Baseline", "BatchedEvaluator", "CertificationResult", "ConfigCache",
+    "Design", "DseResult", "EvalBackend", "Fifo", "FifoAdvisor", "SimGraph",
+    "SimResult", "Task", "Trace", "WaitForGraph", "available_backends",
+    "build_simgraph", "certify_min_depths", "collect_trace", "deadlock_blame",
+    "evaluate_np", "extract_wait_graph", "get_backend", "register_backend",
+    "simulate",
 ]

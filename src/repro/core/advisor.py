@@ -137,6 +137,10 @@ class FifoAdvisor:
             (beyond-paper pruning; behaviour-preserving).
         local_bounds: sound per-FIFO lower bounds from task-pair
             feasibility (beyond-paper pruning).
+        certified_floor: clamp every search to depths at or above
+            :meth:`min_safe_depths` — feasibility is monotone in depth,
+            so every sampled configuration is then deadlock-free by
+            construction (``docs/fuzzing.md``).
         use_pallas / backend / max_iters: evaluator selection — see
             ``docs/backends.md``.
     """
@@ -145,6 +149,7 @@ class FifoAdvisor:
                  upper_bounds: Optional[np.ndarray] = None,
                  occupancy_cap: bool = False,
                  local_bounds: bool = False,
+                 certified_floor: bool = False,
                  use_pallas: bool = False,
                  backend: str = "numpy",
                  max_iters: int = 256):
@@ -162,6 +167,8 @@ class FifoAdvisor:
         self._upper_bounds = upper_bounds
         self._occupancy_cap = occupancy_cap
         self._local_bounds = local_bounds
+        self._certified_floor = certified_floor
+        self._certification = None   # cached CertificationResult
         self._lb_cache: Optional[np.ndarray] = None
         self._incr_base: Optional[np.ndarray] = None
         # Shared baselines (evaluated outside any optimizer's budget).
@@ -183,10 +190,12 @@ class FifoAdvisor:
                                upper_bounds=self._upper_bounds,
                                occupancy_cap=self._occupancy_cap, seed=0)
             self._lb_cache = local_lower_bounds(self.graph, base.candidates)
+        floor = self.min_safe_depths() if self._certified_floor else None
         return EvalContext(self.graph, self.evaluator,
                            upper_bounds=self._upper_bounds,
                            occupancy_cap=self._occupancy_cap,
-                           lower_bounds=self._lb_cache, seed=seed,
+                           lower_bounds=self._lb_cache,
+                           feasible_floor=floor, seed=seed,
                            cache=self.cache)
 
     def _baseline(self, depths: np.ndarray) -> Baseline:
@@ -214,6 +223,46 @@ class FifoAdvisor:
             base, depths[None, :])
         self._incr_base = depths.copy()
         return int(lat[0]), bool(dead[0])
+
+    def min_safe_depths(self) -> np.ndarray:
+        """Certified minimal deadlock-free depths (coordinate-wise).
+
+        The returned vector is verified deadlock-free and no single FIFO
+        can be lowered below it without deadlocking; any configuration at
+        or above it *everywhere* is deadlock-free by depth monotonicity,
+        so optimizers and the advisory service can seed searches at it or
+        clamp their candidate grids with it (``certified_floor=True``).
+
+        Computed once per advisor via monotone binary search over the
+        incremental ``solve_delta`` / shared-cache fast path
+        (:func:`repro.core.deadlock.certify_min_depths`); subsequent
+        calls return the cached vector.  When the advisor was built with
+        explicit ``upper_bounds``, certification descends from them (so
+        the certificate respects the caps) — and raises ``ValueError``
+        when no deadlock-free configuration exists under those caps.
+        """
+        if self._certification is None:
+            from repro.core.deadlock import certify_min_depths
+            self._certification = certify_min_depths(
+                self.graph, self.evaluator, cache=self.cache,
+                upper=self._upper_bounds)
+        return self._certification.depths.copy()
+
+    @property
+    def certification(self):
+        """The full :class:`~repro.core.deadlock.CertificationResult`
+        behind :meth:`min_safe_depths` (None until first computed)."""
+        return self._certification
+
+    def explain_deadlock(self, depths: np.ndarray):
+        """Diagnose one configuration: run the DES oracle at ``depths``
+        and return its :class:`~repro.core.deadlock.WaitForGraph`
+        (``.blame()`` names the FIFOs on the blocking cycle; the graph
+        is empty when the configuration is deadlock-free)."""
+        from repro.core.deadlock import extract_wait_graph
+        from repro.core.oracle import simulate
+        result = simulate(self.design, np.asarray(depths, dtype=np.int64))
+        return extract_wait_graph(self.design, result, trace=self.trace)
 
     def cache_stats(self):
         """Shared evaluation-cache statistics for this advisor session."""

@@ -102,6 +102,7 @@ class EvalContext:
                  upper_bounds: Optional[np.ndarray] = None,
                  occupancy_cap: bool = False, local_bounds: bool = False,
                  lower_bounds: Optional[np.ndarray] = None,
+                 feasible_floor: Optional[np.ndarray] = None,
                  seed: int = 0, cache: Optional[ConfigCache] = None):
         self.g = g
         self.ev = evaluator or BatchedEvaluator(g)
@@ -124,14 +125,27 @@ class EvalContext:
                 cap = int(covering[0]) if covering.size else int(self.u[f])
                 cand = cand[cand <= cap]
             self.candidates.append(cand)
-        if local_bounds or lower_bounds is not None:
-            # beyond-paper: SOUND per-FIFO lower bounds from task-pair
-            # subgraph feasibility (core/prune.py) — removes candidates
-            # that deadlock in EVERY configuration
-            if lower_bounds is None:
+        # Two kinds of per-FIFO floors prune the candidate grids:
+        # ``lower_bounds`` — SOUND bounds from task-pair subgraph
+        # feasibility (core/prune.py: below them every config
+        # deadlocks); ``feasible_floor`` — a certified deadlock-free
+        # vector (core/deadlock: above it everywhere, none does).  Only
+        # the latter clamps the Baseline-Min probe: with a sound bound
+        # alone, all-depth-2 remains the paper's deadlock probe.
+        self.feasible_floor = (
+            np.asarray(feasible_floor, dtype=np.int64)
+            if feasible_floor is not None else None)
+        if local_bounds or lower_bounds is not None \
+                or feasible_floor is not None:
+            if local_bounds and lower_bounds is None:
                 from repro.core.prune import local_lower_bounds
                 lower_bounds = local_lower_bounds(g, self.candidates)
-            lb = np.asarray(lower_bounds, dtype=np.int64)
+            lb = np.zeros(g.n_fifos, dtype=np.int64)
+            if lower_bounds is not None:
+                lb = np.maximum(lb, np.asarray(lower_bounds,
+                                               dtype=np.int64))
+            if self.feasible_floor is not None:
+                lb = np.maximum(lb, self.feasible_floor)
             self.candidates = [
                 c[c >= lb[f]] if (c >= lb[f]).any() else c[-1:]
                 for f, c in enumerate(self.candidates)]
@@ -186,7 +200,14 @@ class EvalContext:
         return self.u.copy()
 
     def baseline_min(self) -> np.ndarray:
-        return np.full(self.g.n_fifos, 2, dtype=np.int64)
+        """The paper's deadlock probe: all-depth-2 — clamped to the
+        certified ``feasible_floor`` when one is in force, so
+        Baseline-Min stays the minimal configuration *of the searched
+        space* (and is then feasible by depth monotonicity)."""
+        floor = np.full(self.g.n_fifos, 2, dtype=np.int64)
+        if self.feasible_floor is not None:
+            floor = np.maximum(floor, self.feasible_floor)
+        return floor
 
     # ---------------------------------------------------------- evaluation
     def record(self, depth_matrix: np.ndarray, lat: np.ndarray,

@@ -37,10 +37,14 @@ class GreedySearch(Optimizer):
         for f in order:
             if ctx.n_evals >= self.budget:
                 break
-            if cur[f] <= 2:
+            # the paper's "set to 2" = the smallest candidate depth; the
+            # grid floor is 2 unless the context clamps it higher (e.g. a
+            # certified deadlock-free floor)
+            floor = int(ctx.candidates[f][0])
+            if cur[f] <= floor:
                 continue
             trial = cur.copy()
-            trial[f] = 2
+            trial[f] = floor
             # single-FIFO move vs the accepted config: the incremental
             # re-simulation fast path re-solves only coupled segments
             lat, _, dead = yield EvalRequest(trial, base=cur)

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -40,6 +40,11 @@ class SimResult:
     deadlocked: bool
     blocked_tasks: List[str]     # names of tasks stuck at deadlock
     results: Dict[str, Any]      # functional outputs (ctx.result)
+    #: per blocked task: (task_name, op_kind READ/WRITE, fifo_index) of the
+    #: FIFO op it is stuck on — the raw material for wait-for-graph
+    #: extraction (:mod:`repro.core.deadlock`)
+    blocked_ops: List[Tuple[str, int, int]] = \
+        dataclasses.field(default_factory=list)
 
     def ok(self) -> bool:
         return not self.deadlocked
@@ -127,8 +132,11 @@ def simulate(design: Design, depths: Sequence[int],
 
     blocked = [st.task.name for st in states if not st.done]
     if blocked:
+        blocked_ops = [(st.task.name, int(st.next_op.kind), int(st.next_op.fifo))
+                       for st in states
+                       if not st.done and st.next_op is not None]
         return SimResult(latency=-1, deadlocked=True, blocked_tasks=blocked,
-                         results=results)
+                         results=results, blocked_ops=blocked_ops)
     latency = max(end_times.values()) if end_times else 0
     return SimResult(latency=int(latency), deadlocked=False,
                      blocked_tasks=[], results=results)

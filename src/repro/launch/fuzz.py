@@ -1,0 +1,269 @@
+"""Differential design-space fuzzing CLI.
+
+Runs continuous differential campaigns over randomly generated designs
+(:mod:`repro.designs.generate`): for every seed, the design is evaluated
+at a spread of depth configurations by the discrete-event **oracle** and
+by every requested trace-based :class:`EvalBackend`, and the results must
+agree on
+
+* **latency** (exact, cycle for cycle, on deadlock-free rows),
+* **deadlock verdicts** (including per-FIFO blame being well-formed), and
+* **functional outputs** vs the design's numpy reference (tracer and
+  oracle both execute the real values).
+
+On a disagreement the failing spec is *shrunk* to a minimal reproducing
+design (structural reductions, see :func:`repro.designs.generate.shrink_spec`)
+and serialized into the seed corpus, which CI replays first as
+regression tests on every subsequent run.
+
+  PYTHONPATH=src python -m repro.launch.fuzz --seeds 0:200 --quick
+  PYTHONPATH=src python -m repro.launch.fuzz --seeds 0:50 \\
+      --backends worklist,fixpoint --configs 6 --corpus tests/fuzz_corpus
+
+Exit code 0 = zero disagreements (corpus replays included).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import glob
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.oracle import simulate
+from repro.core.simgraph import build_simgraph
+from repro.core.simulate import BatchedEvaluator
+from repro.core.tracer import collect_trace
+from repro.designs.generate import (DesignSpec, GeneratedDesign,
+                                    build_design, corpus_entry,
+                                    load_corpus_specs, shrink_spec,
+                                    spec_from_seed)
+
+__all__ = ["Mismatch", "depth_configs", "differential_check", "fuzz_one",
+           "main", "parse_args", "resolve_backends"]
+
+
+@dataclasses.dataclass
+class Mismatch:
+    """One observed disagreement, with everything needed to reproduce."""
+
+    spec: DesignSpec
+    kind: str            # "latency" | "deadlock" | "functional" | "blame"
+    backend: str         # backend name ("oracle"/"trace" for functional)
+    depths: Optional[List[int]]
+    detail: str
+
+    def to_json(self) -> Dict[str, object]:
+        return {"kind": self.kind, "backend": self.backend,
+                "depths": self.depths, "detail": self.detail}
+
+
+def depth_configs(g, rng: np.random.Generator, n_random: int = 4
+                  ) -> np.ndarray:
+    """The depth matrix a design is differentially tested at: the two
+    corner cases (all-1 — maximal back-pressure, most deadlocks — and the
+    upper-bound vector) plus ``n_random`` uniform draws in between."""
+    u = np.maximum(g.upper_bounds, 1)
+    rows = [np.ones_like(u), np.minimum(u, 2), u]
+    for _ in range(n_random):
+        rows.append(rng.integers(1, u + 1))
+    return np.unique(np.stack(rows), axis=0)
+
+
+def differential_check(gen: GeneratedDesign,
+                       backends: Sequence[str] = ("worklist",),
+                       n_random: int = 4,
+                       rng: Optional[np.random.Generator] = None
+                       ) -> Tuple[List[Mismatch], int]:
+    """Differentially test one generated design.
+
+    Returns ``(mismatches, n_rows_checked)``.  The oracle is ground
+    truth; every backend's (latency, deadlock) must match it row for
+    row, the tracer's and oracle's functional outputs must match the
+    numpy reference, and deadlocked rows must yield a non-empty,
+    well-formed blame set.
+    """
+    from repro.core.deadlock import extract_wait_graph
+
+    design = gen.design
+    mism: List[Mismatch] = []
+    spec = gen.spec
+    rng = rng or np.random.default_rng(spec.seed)
+
+    trace = collect_trace(design)
+    if not gen.check_results(trace.results):
+        mism.append(Mismatch(spec, "functional", "trace", None,
+                             f"trace results {trace.results} != "
+                             f"reference {gen.expected}"))
+    g = build_simgraph(design, trace)
+    matrix = depth_configs(g, rng, n_random=n_random)
+
+    oracle_lat = np.zeros(matrix.shape[0], dtype=np.int64)
+    oracle_dead = np.zeros(matrix.shape[0], dtype=bool)
+    fifo_names = {f.name for f in design.fifos}
+    for i in range(matrix.shape[0]):
+        r = simulate(design, matrix[i])
+        oracle_lat[i] = r.latency
+        oracle_dead[i] = r.deadlocked
+        if r.deadlocked:
+            blame = extract_wait_graph(design, r, trace=trace).blame()
+            if not blame or not set(blame) <= fifo_names:
+                mism.append(Mismatch(
+                    spec, "blame", "oracle", matrix[i].tolist(),
+                    f"deadlocked row produced ill-formed blame {blame}"))
+        elif not gen.check_results(r.results):
+            mism.append(Mismatch(
+                spec, "functional", "oracle", matrix[i].tolist(),
+                f"oracle results {r.results} != reference {gen.expected}"))
+
+    for name in backends:
+        ev = BatchedEvaluator(g, backend=name)
+        lat, _, dead = ev.evaluate(matrix)
+        for i in range(matrix.shape[0]):
+            if bool(dead[i]) != bool(oracle_dead[i]):
+                mism.append(Mismatch(
+                    spec, "deadlock", name, matrix[i].tolist(),
+                    f"backend says deadlock={bool(dead[i])}, oracle says "
+                    f"{bool(oracle_dead[i])}"))
+            elif not dead[i] and int(lat[i]) != int(oracle_lat[i]):
+                mism.append(Mismatch(
+                    spec, "latency", name, matrix[i].tolist(),
+                    f"backend latency {int(lat[i])} != oracle "
+                    f"{int(oracle_lat[i])}"))
+    return mism, int(matrix.shape[0])
+
+
+def fuzz_one(spec: DesignSpec, backends: Sequence[str],
+             n_random: int = 4) -> Tuple[List[Mismatch], int]:
+    """Build + differentially check one spec (corpus replay entry point)."""
+    gen = build_design(spec)
+    return differential_check(gen, backends=backends, n_random=n_random)
+
+
+def _shrunk(spec: DesignSpec, backends: Sequence[str], n_random: int,
+            kind: str, backend: str) -> DesignSpec:
+    """Shrink ``spec`` while the ORIGINAL failure mode still reproduces.
+
+    A reduction that merely fails differently (another kind, another
+    backend) is rejected — the corpus entry must guard the disagreement
+    that was actually observed, not whatever the smaller design happens
+    to trip over.
+    """
+    def still_fails(cand: DesignSpec) -> bool:
+        found, _ = fuzz_one(cand, backends, n_random=n_random)
+        return any(m.kind == kind and m.backend == backend for m in found)
+    return shrink_spec(spec, still_fails)
+
+
+def resolve_backends(arg: str) -> List[str]:
+    """``auto`` -> every backend usable here; else a comma-list."""
+    if arg == "auto":
+        from repro.core.backends import available_backends
+        return list(available_backends())
+    return [b.strip() for b in arg.split(",") if b.strip()]
+
+
+def parse_args(argv=None):
+    p = argparse.ArgumentParser(
+        prog="python -m repro.launch.fuzz",
+        description="Differential fuzzing: generated designs, oracle vs "
+                    "every evaluation backend.")
+    p.add_argument("--seeds", default="0:50", metavar="LO:HI",
+                   help="seed range (half-open), e.g. 0:200")
+    p.add_argument("--quick", action="store_true",
+                   help="small designs + worklist-only default backends "
+                        "(the CI-bounded mode)")
+    p.add_argument("--backends", default=None,
+                   help="comma-list of backend names, or 'auto' for every "
+                        "backend available (default: worklist when "
+                        "--quick, else auto)")
+    p.add_argument("--configs", type=int, default=4, metavar="N",
+                   help="random depth configs per design (plus the three "
+                        "corner configs)")
+    p.add_argument("--corpus", default=None, metavar="DIR",
+                   help="seed-corpus directory: replayed first, and "
+                        "minimal shrunk specs for new mismatches are "
+                        "written here")
+    p.add_argument("--out", default=None, metavar="JSON",
+                   help="write a machine-readable campaign summary")
+    return p.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = parse_args(argv)
+    lo, _, hi = args.seeds.partition(":")
+    seeds = range(int(lo), int(hi or int(lo) + 1))
+    backends = resolve_backends(
+        args.backends or ("worklist" if args.quick else "auto"))
+
+    t0 = time.perf_counter()
+    all_mism: List[Mismatch] = []
+    n_rows = n_designs = 0
+
+    # 1. corpus replay: prior shrunk reproducers act as regression tests
+    corpus_files = (sorted(glob.glob(os.path.join(args.corpus, "*.json")))
+                    if args.corpus else [])
+    for path, spec in zip(corpus_files, load_corpus_specs(corpus_files)):
+        mism, rows = fuzz_one(spec, backends, n_random=args.configs)
+        n_designs += 1
+        n_rows += rows
+        if mism:
+            print(f"CORPUS REGRESSION {os.path.basename(path)}: "
+                  f"{mism[0].kind} ({mism[0].detail})")
+            all_mism.extend(mism)
+    if corpus_files:
+        print(f"corpus: {len(corpus_files)} specs replayed, "
+              f"{len(all_mism)} regressions")
+
+    # 2. the fresh seed campaign
+    for seed in seeds:
+        spec = spec_from_seed(seed, quick=args.quick)
+        mism, rows = fuzz_one(spec, backends, n_random=args.configs)
+        n_designs += 1
+        n_rows += rows
+        if not mism:
+            continue
+        print(f"seed {seed}: {len(mism)} disagreement(s); shrinking...")
+        kind, backend = mism[0].kind, mism[0].backend
+        small = _shrunk(spec, backends, args.configs,
+                        kind=kind, backend=backend)
+        small_mism, _ = fuzz_one(small, backends, n_random=args.configs)
+        same = [m for m in small_mism
+                if m.kind == kind and m.backend == backend]
+        repro = same[0] if same else mism[0]
+        print(f"  minimal repro ({len(small.stages)} stages, n={small.n}): "
+              f"{repro.kind} on {repro.backend}: {repro.detail}")
+        if args.corpus:
+            os.makedirs(args.corpus, exist_ok=True)
+            path = os.path.join(args.corpus, f"shrunk_seed{seed}.json")
+            with open(path, "w") as f:
+                json.dump(corpus_entry(
+                    small, note=f"shrunk from seed {seed}",
+                    mismatch=repro.to_json()), f, indent=1)
+            print(f"  corpus entry written: {path}")
+        all_mism.extend(mism)
+
+    wall = time.perf_counter() - t0
+    rate = n_rows * (1 + len(backends)) / max(wall, 1e-9)
+    print(f"\n{n_designs} designs, {n_rows} configs x "
+          f"{1 + len(backends)} evaluators ({', '.join(backends)} + "
+          f"oracle), {wall:.1f}s wall ({rate:.0f} differential evals/s)")
+    print(f"disagreements: {len(all_mism)}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({
+                "n_designs": n_designs, "n_rows": n_rows,
+                "backends": list(backends), "wall_s": round(wall, 3),
+                "mismatches": [m.to_json() for m in all_mism],
+            }, f, indent=1)
+    return 1 if all_mism else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,7 +14,10 @@ of the input space.
 
 Implements exactly the surface this repo's tests use: ``given``,
 ``settings``, and the ``strategies`` (``st``) members ``integers``,
-``floats``, ``lists``, ``tuples``, ``sampled_from``, and ``composite``.
+``floats``, ``lists``, ``tuples``, ``sampled_from``, ``booleans``,
+``just``, ``one_of``, and ``composite``.  ``tests/test_hypothesis_shim.py``
+smoke-tests this surface against whichever implementation is active, so
+the shim cannot silently drift from the real package.
 """
 
 from __future__ import annotations
@@ -94,6 +97,27 @@ class _Tuples(SearchStrategy):
         return tuple(s.example(rng) for s in self.strategies)
 
 
+class _Booleans(SearchStrategy):
+    def example(self, rng):
+        return rng.random() < 0.5
+
+
+class _Just(SearchStrategy):
+    def __init__(self, value):
+        self.value = value
+
+    def example(self, rng):
+        return self.value
+
+
+class _OneOf(SearchStrategy):
+    def __init__(self, *strategies):
+        self.strategies = strategies
+
+    def example(self, rng):
+        return rng.choice(self.strategies).example(rng)
+
+
 class _Composite(SearchStrategy):
     def __init__(self, fn, args, kwargs):
         self.fn = fn
@@ -156,6 +180,9 @@ strategies.floats = _Floats
 strategies.lists = _Lists
 strategies.tuples = _Tuples
 strategies.sampled_from = _SampledFrom
+strategies.booleans = _Booleans
+strategies.just = _Just
+strategies.one_of = _OneOf
 strategies.composite = composite
 strategies.SearchStrategy = SearchStrategy
 

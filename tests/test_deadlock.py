@@ -1,0 +1,188 @@
+"""Deadlock certification + blame unit tests.
+
+`mult_by_2(n)` is the paper's Fig. 2 design: the producer fills stream x
+with n items before touching y, while the consumer alternates x/y reads.
+The analytically minimal deadlock-free sizing is therefore
+``depth(x) = max(n - 1, 1)`` (x must buffer everything the consumer has
+not yet drained while it waits for y's first element) and
+``depth(y) = 1`` — knowable only at runtime, which is the paper's whole
+argument.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.core import FifoAdvisor
+from repro.core.deadlock import (certify_min_depths_oracle, deadlock_blame,
+                                 extract_wait_graph)
+from repro.core.oracle import simulate
+from repro.designs.ddcf import flowgnn_pna, mult_by_2
+from repro.designs.generate import generate_design
+
+
+# ---------------------------------------------------------------------- certify
+
+@pytest.mark.parametrize("n", [2, 3, 8, 17, 40, 64])
+def test_mult_by_2_certified_depths_analytical(n):
+    """Certified depths equal the analytically known n-dependent answer."""
+    adv = FifoAdvisor(mult_by_2(n))
+    got = adv.min_safe_depths()
+    assert got.tolist() == [max(n - 1, 1), 1]
+    # the oracle confirms the certificate...
+    assert not simulate(adv.design, got).deadlocked
+    # ...and coordinate minimality: one less anywhere deadlocks
+    for f in range(got.shape[0]):
+        lower = got.copy()
+        if lower[f] > 1:
+            lower[f] -= 1
+            assert simulate(adv.design, lower).deadlocked
+
+
+def test_certified_depths_monotone_in_n():
+    """Bigger n never certifies smaller depths (monotone workload)."""
+    prev = None
+    for n in (4, 9, 16, 31, 48):
+        d = FifoAdvisor(mult_by_2(n)).min_safe_depths()
+        if prev is not None:
+            assert (d >= prev).all(), (n, d, prev)
+        prev = d
+
+
+def test_fast_path_matches_oracle_bisection():
+    """The solve_delta-driven certifier and the naive DES bisection land
+    on identical vectors (same start, same order, same lattice point)."""
+    for design in (mult_by_2(24), flowgnn_pna(n_nodes=24, n_edges=64)):
+        adv = FifoAdvisor(design)
+        fast = adv.min_safe_depths()
+        naive = certify_min_depths_oracle(design)
+        assert (fast == naive.depths).all()
+        assert adv.certification.latency == naive.latency
+        assert adv.certification.bram == naive.bram
+
+
+def test_flowgnn_certified_confirmed_by_oracle():
+    """Acceptance: the oracle confirms certification on the FlowGNN DDCF
+    design, and lowering any certified-above-floor FIFO deadlocks."""
+    design = flowgnn_pna()
+    adv = FifoAdvisor(design)
+    got = adv.min_safe_depths()
+    assert not simulate(design, got).deadlocked
+    above_floor = np.flatnonzero(got > 1)
+    assert above_floor.size > 0       # the design has real sizing cliffs
+    for f in above_floor[:3]:
+        lower = got.copy()
+        lower[f] -= 1
+        assert simulate(design, lower).deadlocked
+
+
+def test_certification_cached_on_advisor():
+    adv = FifoAdvisor(mult_by_2(16))
+    first = adv.min_safe_depths()
+    probes = adv.certification.n_probes
+    again = adv.min_safe_depths()
+    assert (first == again).all()
+    assert adv.certification.n_probes == probes     # no recompute
+    first[0] = -1                                   # caller copies are safe
+    assert adv.min_safe_depths()[0] != -1
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=3000))
+def test_certified_depths_on_generated_designs(seed):
+    """Property: on arbitrary generated designs the certified vector is
+    oracle-confirmed deadlock-free and no single FIFO can go lower."""
+    gen = generate_design(seed, quick=True)
+    adv = FifoAdvisor(gen.design)
+    got = adv.min_safe_depths()
+    assert not simulate(gen.design, got).deadlocked, f"seed {seed}"
+    above = np.flatnonzero(got > 1)
+    for f in above[:2]:
+        lower = got.copy()
+        lower[f] -= 1
+        assert simulate(gen.design, lower).deadlocked, \
+            f"seed {seed}: fifo {f} not minimal"
+
+
+def test_certified_floor_clamps_searches():
+    """certified_floor=True: every sampled configuration is feasible, so
+    a whole DSE run records zero deadlocked samples — including the
+    Baseline-Min probe the annealing optimizers issue (it clamps to the
+    certified floor)."""
+    for optimizer in ("grouped_random", "grouped_sa", "greedy"):
+        adv = FifoAdvisor(mult_by_2(24), certified_floor=True)
+        res = adv.run(optimizer, budget=60, seed=3)
+        assert res.result.configs.shape[0] > 0
+        assert not res.result.deadlock.any(), optimizer
+        assert (res.result.configs
+                >= adv.min_safe_depths()[None, :]).all(), optimizer
+    # baseline objects follow the clamped probe and stay feasible
+    assert not adv.baseline_min.deadlocked
+
+
+def test_infeasible_start_raises():
+    from repro.core.deadlock import certify_min_depths
+    adv = FifoAdvisor(mult_by_2(16))
+    with pytest.raises(ValueError):
+        certify_min_depths(adv.graph, adv.evaluator,
+                           upper=np.array([2, 2]))
+
+
+def test_certified_floor_respects_user_upper_bounds():
+    """Certification descends from explicit advisor upper bounds, so the
+    certified floor can never exceed the search caps — and when no
+    deadlock-free configuration exists under the caps, the advisor says
+    so instead of silently sampling deadlocks."""
+    caps = np.array([70, 3])
+    adv = FifoAdvisor(mult_by_2(64), certified_floor=True,
+                      upper_bounds=caps)
+    assert adv.min_safe_depths().tolist() == [63, 1]
+    res = adv.run("grouped_random", budget=30, seed=0)
+    assert not res.result.deadlock.any()
+    assert (res.result.configs <= caps[None, :]).all()
+    with pytest.raises(ValueError):
+        FifoAdvisor(mult_by_2(64), certified_floor=True,
+                    upper_bounds=np.array([16, 16]))
+
+
+# ---------------------------------------------------------------------- blame
+
+def test_blame_names_exactly_the_cycle_fifos():
+    """Undersized mult_by_2 deadlocks through the x/y cycle: producer
+    blocked writing x (full), consumer blocked reading y (empty)."""
+    assert deadlock_blame(mult_by_2(16), [2, 2]) == ["x", "y"]
+    # x alone sized correctly -> no deadlock -> no blame
+    assert deadlock_blame(mult_by_2(16), [15, 1]) == []
+
+
+def test_wait_graph_structure():
+    design = mult_by_2(12)
+    r = simulate(design, [3, 3])
+    assert r.deadlocked and r.blocked_ops
+    wg = extract_wait_graph(design, r)
+    cycles = wg.cycles()
+    assert cycles == [["consumer", "producer"]]
+    reasons = {(e.waiter, e.fifo): e.reason for e in wg.edges}
+    assert reasons[("producer", "x")] == "full"
+    assert reasons[("consumer", "y")] == "empty"
+    text = wg.describe()
+    assert "cycle:" in text and "producer" in text and "consumer" in text
+
+
+def test_blame_on_flowgnn_cycle():
+    """The FlowGNN engine deadlocks through the scatter -> feat_q ->
+    node_loader -> deg/msg -> aggregator cycle when control queues are
+    starved; the blame set must name only real FIFOs on that cycle."""
+    design = flowgnn_pna(n_nodes=24, n_edges=64)
+    depths = np.ones(design.n_fifos, dtype=np.int64)
+    blame = deadlock_blame(design, depths)
+    names = {f.name for f in design.fifos}
+    assert blame and set(blame) <= names
+
+
+def test_advisor_explain_deadlock():
+    adv = FifoAdvisor(mult_by_2(10))
+    wg = adv.explain_deadlock(np.array([2, 2]))
+    assert wg.blame() == ["x", "y"]
+    assert adv.explain_deadlock(adv.min_safe_depths()).blame() == []
