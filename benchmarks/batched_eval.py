@@ -33,6 +33,7 @@ def run() -> Dict:
             2, (u * rng.uniform(0.5, 1.0, g.n_fifos)).astype(int))
             for _ in range(C)])
         row = {}
+        events_condensed = None
         for backend in ["numpy", "jax"]:
             ev = BatchedEvaluator(g, backend=backend)
             ev.evaluate(cfgs[:2])             # warm / compile
@@ -42,8 +43,16 @@ def run() -> Dict:
             row[backend] = dict(
                 batch=C, total_s=round(t.s, 4),
                 us_per_config=round(1e6 * t.s / C, 1),
-                fallbacks=ev.stats.n_fallbacks)
-        out[name] = dict(events=g.n_events, fifos=g.n_fifos, **row)
+                fallbacks=ev.stats.n_fallbacks,
+                condensed_rows=ev.stats.n_condensed)
+            info = ev.condensation_info()
+            if info:
+                events_condensed = min(r["events_condensed"] for r in info)
+        # raw AND condensed event counts keep the perf trajectory
+        # comparable across PRs (see benchmarks/condense.py)
+        out[name] = dict(events=g.n_events,
+                         events_condensed=events_condensed,
+                         fifos=g.n_fifos, **row)
     save_json("batched_eval.json", out)
     return out
 

@@ -115,6 +115,32 @@ def check_service(base, cur, floor, frac, failures):
                 f"{frac:.0%} of baseline {ref:.2f}x")
 
 
+def check_condense(base, cur, floor, frac, failures):
+    if cur is None:
+        failures.append("condense.quick.json missing from current run")
+        return
+    if not cur.get("identical_all"):
+        failures.append(
+            "condensation regression: condensed evaluation no longer "
+            "bit-identical to the raw path")
+    ratio = cur.get("geomean_condensation_ratio", 0.0)
+    if ratio < 1.5:
+        failures.append(
+            f"condensation ratio {ratio:.2f}x below 1.5x — the pass "
+            "stopped compressing the event graph")
+    speedup = cur.get("geomean_speedup_scan", 0.0)
+    if speedup < floor:
+        failures.append(
+            f"condensed scan speedup {speedup:.2f}x below hard floor "
+            f"{floor:.2f}x")
+    if base is not None:
+        ref = base.get("geomean_speedup_scan")
+        if ref and speedup < frac * ref:
+            failures.append(
+                f"condensed scan speedup regression: {speedup:.2f}x < "
+                f"{frac:.0%} of baseline {ref:.2f}x")
+
+
 def check_fuzz(base, cur, floor, frac, failures):
     if cur is None:
         failures.append("fuzz.quick.json missing from current run")
@@ -168,6 +194,14 @@ def main(argv=None) -> int:
                     help="hard minimum certification geomean speedup")
     ap.add_argument("--cert-frac", type=float, default=0.4,
                     help="required fraction of the baseline cert speedup")
+    # the quick mix runs smaller batches than the committed full-mode
+    # result (~6x scan speedup), so the hard floor only catches "the
+    # condensation engine stopped paying", not runner-noise drift
+    ap.add_argument("--condense-floor", type=float, default=1.3,
+                    help="hard minimum condensed scan geomean speedup")
+    ap.add_argument("--condense-frac", type=float, default=0.4,
+                    help="required fraction of the baseline condensed "
+                         "speedup")
     args = ap.parse_args(argv)
 
     failures = []
@@ -185,6 +219,9 @@ def main(argv=None) -> int:
     check_fuzz(load(args.baseline, "fuzz.quick.json"),
                load(args.current, "fuzz.quick.json"),
                args.cert_floor, args.cert_frac, failures)
+    check_condense(load(args.baseline, "condense.quick.json"),
+                   load(args.current, "condense.quick.json"),
+                   args.condense_floor, args.condense_frac, failures)
 
     if failures:
         print("REGRESSION GATE FAILED:")
@@ -193,7 +230,7 @@ def main(argv=None) -> int:
         return 1
     print("regression gate passed (accuracy exact, cache hit rate held, "
           "campaign + service speedups held, fuzz differential clean, "
-          "certification speedup held)")
+          "certification speedup held, condensation exact + still paying)")
     return 0
 
 

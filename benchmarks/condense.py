@@ -1,0 +1,112 @@
+"""Condensation benchmark: compression ratio + condensed-vs-raw speedup.
+
+Measures, per Stream-HLS design, the event-graph condensation cascade
+(``repro.core.condense``):
+
+* condensation ratio per rung (raw events / condensed events),
+* batched-evaluation throughput with the cascade vs with it disabled
+  (``condense=None``), asserting bit-identical results,
+* certificate economics: rows resolved on a rung vs fallbacks.
+
+The scan (jax) backend is the headline: its per-iteration cost is
+proportional to E_pad, so compression converts ~directly into speedup
+(folding back-pressure anchors away also slashes Jacobi iterations).
+The per-row numpy worklist is wave-bound, reported for reference.
+
+``check_regression.py``'s ``check_condense`` gates on the scan-backend
+geomean speedup and on result identity.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import Timer, geomean, quick_mode, save_json
+from repro.core import build_simgraph
+from repro.core.condense import condense_auto
+from repro.core.simulate import BatchedEvaluator
+from repro.designs import make_design
+
+DESIGNS = ["gemm", "FeedForward", "k15mmseq"]
+
+
+def _bench(ev, cfgs, reps: int):
+    ev.evaluate(cfgs[:2])                 # warm / compile
+    ev.evaluate(cfgs)                     # warm the batch bucket
+    best, result = float("inf"), None
+    for _ in range(reps):
+        with Timer() as t:
+            result = ev.evaluate(cfgs)
+        best = min(best, t.s)
+    return best, result
+
+
+def run(seed: int = 0) -> Dict:
+    C = 32 if quick_mode() else 64
+    reps = 2 if quick_mode() else 3
+    out: Dict = {"designs": {}, "batch": C}
+    scan_speedups = []
+    identical_all = True
+    for name in DESIGNS:
+        g = build_simgraph(make_design(name))
+        rng = np.random.default_rng(seed)
+        u = g.upper_bounds
+        # feasible-leaning batch (the DSE steady state)
+        cfgs = np.stack([np.maximum(
+            2, (u * rng.uniform(0.5, 1.0, g.n_fifos)).astype(int))
+            for _ in range(C)])
+        cgs = condense_auto(g)
+        row: Dict = {
+            "events_raw": g.n_events,
+            "rungs": [{"tag": cg.tag, "events": cg.n_events,
+                       "compression": round(cg.compression, 2)}
+                      for cg in cgs],
+            "condensation_ratio": round(
+                max((cg.compression for cg in cgs), default=1.0), 2),
+            "backends": {},
+        }
+        for backend in ["numpy", "jax"]:
+            t_raw, r_raw = _bench(
+                BatchedEvaluator(g, backend=backend, condense=None),
+                cfgs, reps)
+            ev_c = BatchedEvaluator(g, backend=backend)
+            t_cond, r_cond = _bench(ev_c, cfgs, reps)
+            identical = all((a == b).all() for a, b in zip(r_raw, r_cond))
+            identical_all &= identical
+            speedup = t_raw / max(t_cond, 1e-12)
+            row["backends"][backend] = dict(
+                raw_us_per_config=round(1e6 * t_raw / C, 1),
+                cond_us_per_config=round(1e6 * t_cond / C, 1),
+                speedup=round(speedup, 2),
+                identical=identical,
+                condensed_rows=ev_c.stats.n_condensed,
+                cert_failures=ev_c.stats.n_cond_fail)
+            if backend == "jax":
+                scan_speedups.append(speedup)
+        out["designs"][name] = row
+    out["geomean_speedup_scan"] = round(geomean(scan_speedups), 2)
+    out["geomean_condensation_ratio"] = round(geomean(
+        [d["condensation_ratio"] for d in out["designs"].values()]), 2)
+    out["identical_all"] = bool(identical_all)
+    save_json("condense.json", out)
+    return out
+
+
+def main():
+    out = run()
+    for name, d in out["designs"].items():
+        rungs = " ".join(f"{r['tag']}:{r['compression']}x"
+                         for r in d["rungs"])
+        cols = "  ".join(
+            f"{k}={v['speedup']:.2f}x" for k, v in d["backends"].items())
+        print(f"{name:14s} E={d['events_raw']:6d} [{rungs}] {cols} "
+              f"identical={all(v['identical'] for v in d['backends'].values())}")
+    print(f"geomean scan speedup {out['geomean_speedup_scan']}x, "
+          f"condensation ratio {out['geomean_condensation_ratio']}x, "
+          f"identical={out['identical_all']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,9 +10,10 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (accuracy, batched_eval, campaign, case_study,
-                            convergence, fuzz, improvement, pareto_fronts,
-                            pruning, roofline, runtime, service)
+    from benchmarks import (accuracy, batched_eval, cache_lookup, campaign,
+                            case_study, condense, convergence, fuzz,
+                            improvement, pareto_fronts, pruning, roofline,
+                            runtime, service)
 
     print("name,seconds,derived")
 
@@ -68,6 +69,18 @@ def main() -> None:
     print(f"service,{time.perf_counter() - t0:.2f},"
           f"speedup_vs_solo={sv['service_speedup']:.2f}x;"
           f"identical_frontiers={sv['identical_frontiers']}")
+
+    t0 = time.perf_counter()
+    cd = condense.run()
+    print(f"condense,{time.perf_counter() - t0:.2f},"
+          f"scan_speedup={cd['geomean_speedup_scan']:.2f}x;"
+          f"ratio={cd['geomean_condensation_ratio']:.1f}x;"
+          f"identical={cd['identical_all']}")
+
+    t0 = time.perf_counter()
+    cl = cache_lookup.run()
+    print(f"cache_lookup,{time.perf_counter() - t0:.2f},"
+          f"c1024_speedup={cl['batch'][-1]['speedup']:.2f}x")
 
     t0 = time.perf_counter()
     fz = fuzz.run()

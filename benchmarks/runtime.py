@@ -55,7 +55,15 @@ def backend_throughput(g, seed: int = 0) -> Dict:
             ev.evaluate(cfgs[:n])
         out[backend] = dict(batch=n, total_s=round(t.s, 4),
                             us_per_config=round(1e6 * t.s / n, 1),
-                            fallbacks=ev.stats.n_fallbacks)
+                            fallbacks=ev.stats.n_fallbacks,
+                            condensed_rows=ev.stats.n_condensed,
+                            condensation=ev.condensation_info())
+    # one-shot per-design backend calibration (DispatchPolicy satellite):
+    # which backend the auto probe would pick, and the probe timings
+    ev_auto = BatchedEvaluator(g, backend="auto")
+    out["auto"] = dict(chosen=ev_auto.calibration["chosen"],
+                       probe_s={k: round(v, 5) for k, v in
+                                ev_auto.calibration["probe_s"].items()})
     return out
 
 
@@ -108,11 +116,19 @@ def run(seed: int = 0) -> Dict:
         cycles = adv.baseline_max.latency
         rtl_fast = cycles / RTL_CPS_FAST          # seconds per co-sim
         rtl_slow = cycles / RTL_CPS_SLOW
+        backends = backend_throughput(adv.graph, seed)
+        cond = [r for b in backends.values()
+                for r in b.get("condensation", []) or []]
         row = {"design": name, "cycles": cycles,
                "des_one_s": round(des_one, 4),
                "rtl_one_est_s": [round(rtl_fast, 2), round(rtl_slow, 1)],
                "trace_s": round(adv.trace_time_s, 3),
-               "backends": backend_throughput(adv.graph, seed),
+               # raw AND condensed event counts so the perf trajectory
+               # stays comparable across PRs
+               "events": adv.graph.n_events,
+               "events_condensed": (min(r["events_condensed"]
+                                        for r in cond) if cond else None),
+               "backends": backends,
                "optimizers": {}}
         for opt in PAPER_OPTIMIZERS:
             r = adv.run(opt, budget=budget(), seed=seed)
@@ -182,8 +198,13 @@ def main():
     for r in out["per_design"]:
         b = r["backends"]
         cols = "  ".join(
-            f"{k}={v['us_per_config']:9.1f}" for k, v in b.items())
-        print(f"  {r['design']:18s} {cols}  "
+            f"{k}={v['us_per_config']:9.1f}" for k, v in b.items()
+            if "us_per_config" in v)
+        ec = r.get("events_condensed")
+        ev_s = (f"E={r['events']}"
+                + (f"->{ec}" if ec else ""))
+        print(f"  {r['design']:18s} {cols}  auto={b['auto']['chosen']:6s} "
+              f"{ev_s:14s} "
               f"cache_hit_rate={r['cache']['hit_rate']:.2%} "
               f"({r['cache']['hits']}/{r['cache']['hits'] + r['cache']['misses']})")
 

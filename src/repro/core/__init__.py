@@ -11,6 +11,8 @@ from repro.core.advisor import Baseline, DseResult, FifoAdvisor
 from repro.core.backends import (ConfigCache, EvalBackend,
                                  available_backends, get_backend,
                                  register_backend)
+from repro.core.condense import (CondensedGraph, condense, condense_auto,
+                                 expand_times, verify_rows)
 from repro.core.deadlock import (CertificationResult, WaitForGraph,
                                  certify_min_depths, deadlock_blame,
                                  extract_wait_graph)
@@ -21,10 +23,11 @@ from repro.core.simulate import BatchedEvaluator, evaluate_np
 from repro.core.tracer import Trace, collect_trace
 
 __all__ = [
-    "Baseline", "BatchedEvaluator", "CertificationResult", "ConfigCache",
-    "Design", "DseResult", "EvalBackend", "Fifo", "FifoAdvisor", "SimGraph",
-    "SimResult", "Task", "Trace", "WaitForGraph", "available_backends",
-    "build_simgraph", "certify_min_depths", "collect_trace", "deadlock_blame",
-    "evaluate_np", "extract_wait_graph", "get_backend", "register_backend",
-    "simulate",
+    "Baseline", "BatchedEvaluator", "CertificationResult", "CondensedGraph",
+    "ConfigCache", "Design", "DseResult", "EvalBackend", "Fifo",
+    "FifoAdvisor", "SimGraph", "SimResult", "Task", "Trace", "WaitForGraph",
+    "available_backends", "build_simgraph", "certify_min_depths",
+    "collect_trace", "condense", "condense_auto", "deadlock_blame",
+    "evaluate_np", "expand_times", "extract_wait_graph", "get_backend",
+    "register_backend", "simulate", "verify_rows",
 ]

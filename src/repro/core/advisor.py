@@ -142,7 +142,12 @@ class FifoAdvisor:
             so every sampled configuration is then deadlock-free by
             construction (``docs/fuzzing.md``).
         use_pallas / backend / max_iters: evaluator selection — see
-            ``docs/backends.md``.
+            ``docs/backends.md``.  ``backend="auto"`` runs a one-shot
+            calibration probe and picks the fastest backend.
+        condense: event-graph condensation — ``"auto"`` (default)
+            condenses once at trace time and routes evaluation batches
+            through the certified rung cascade; ``None`` disables it
+            (``docs/performance.md``).
     """
 
     def __init__(self, design: Design,
@@ -152,14 +157,16 @@ class FifoAdvisor:
                  certified_floor: bool = False,
                  use_pallas: bool = False,
                  backend: str = "numpy",
-                 max_iters: int = 256):
+                 max_iters: int = 256,
+                 condense: object = "auto"):
         t0 = time.perf_counter()
         self.design = design
         self.trace: Trace = collect_trace(design)
         self.graph: SimGraph = build_simgraph(design, self.trace)
         self.evaluator = BatchedEvaluator(self.graph, max_iters=max_iters,
                                           backend=backend,
-                                          use_pallas=use_pallas)
+                                          use_pallas=use_pallas,
+                                          condense=condense)
         # One evaluation cache for the whole advisor session: every
         # optimizer run (and the baselines) shares hits.
         self.cache = ConfigCache(self.graph.n_fifos)

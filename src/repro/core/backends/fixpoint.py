@@ -53,6 +53,7 @@ class _ScanBackend(EvalBackend):
         self._call = make_batched_eval(
             g, interpret=self.interpret, use_ref=self.use_ref,
             max_iters=self.max_iters)
+        self._call_times = None
         return self.ops
 
     def evaluate(self, depth_matrix: np.ndarray
@@ -62,6 +63,23 @@ class _ScanBackend(EvalBackend):
         lat = np.asarray(np.rint(lat), dtype=np.int64)
         bram = np.asarray(bram, dtype=np.int64)
         return lat, bram, np.asarray(status, dtype=np.int8)
+
+    def evaluate_with_times(self, depth_matrix: np.ndarray
+                            ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                       np.ndarray]:
+        """Like :meth:`evaluate`, also returning the (C, E_pad) final
+        event times (int64) — the condensation certificate's input."""
+        if self._call_times is None:
+            from repro.kernels.fifo_eval.ops import make_batched_eval
+            self._call_times = make_batched_eval(
+                self.g, interpret=self.interpret, use_ref=self.use_ref,
+                max_iters=self.max_iters, with_times=True)
+        m = np.atleast_2d(np.asarray(depth_matrix, dtype=np.int32))
+        lat, bram, status, times = self._call_times(m)
+        lat = np.asarray(np.rint(lat), dtype=np.int64)
+        bram = np.asarray(bram, dtype=np.int64)
+        times = np.asarray(np.rint(times), dtype=np.int64)
+        return lat, bram, np.asarray(status, dtype=np.int8), times
 
 
 @register_backend

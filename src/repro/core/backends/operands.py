@@ -98,6 +98,11 @@ class GraphOperands:
     # (F,) / (R,)
     widths: jnp.ndarray      # i32
     read_evt_flat: jnp.ndarray   # i32
+    # condensation offsets (all-zero on a raw SimGraph): the delta-chain
+    # offset of a data source / back-pressure partner relative to its
+    # covering anchor (see repro.core.condense)
+    data_off: jnp.ndarray        # (E_pad,) f32
+    read_off_flat: jnp.ndarray   # (R,) f32
 
 
 def _pad_to(a: np.ndarray, n: int, fill, dtype) -> np.ndarray:
@@ -139,6 +144,16 @@ def build_operands(g: SimGraph) -> GraphOperands:
     read_evt_flat = np.zeros(R, dtype=np.int64)
     read_evt_flat[: len(g.read_evt_flat)] = g.read_evt_flat
 
+    # condensation offsets (zeros on a raw SimGraph)
+    data_off_src = getattr(g, "data_off", None)
+    data_off = np.zeros(e_pad, dtype=np.float32)
+    if data_off_src is not None:
+        data_off[:E] = data_off_src
+    read_off_src = getattr(g, "read_off_flat", None)
+    read_off_flat = np.zeros(R, dtype=np.float32)
+    if read_off_src is not None:
+        read_off_flat[: len(read_off_src)] = read_off_src
+
     return GraphOperands(
         n_events=E,
         e_pad=e_pad,
@@ -161,6 +176,8 @@ def build_operands(g: SimGraph) -> GraphOperands:
                                 dtype=jnp.int32),
         widths=jnp.asarray(g.widths, dtype=jnp.int32),
         read_evt_flat=jnp.asarray(read_evt_flat, dtype=jnp.int32),
+        data_off=jnp.asarray(data_off),
+        read_off_flat=jnp.asarray(read_off_flat),
     )
 
 
@@ -293,24 +310,29 @@ def stack_hetero(entries) -> dict:
 
 def depth_operands(ops: GraphOperands, depths: jnp.ndarray
                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
-                              jnp.ndarray]:
+                              jnp.ndarray, jnp.ndarray]:
     """Depth-dependent per-config operands (jnp, jit/vmap traceable).
 
     depths: (C, F) integer depth matrix.  Returns
 
     - ``rd_lat_e``  (C, E_pad) f32: read latency at each event's fifo
-      (1 cycle SRL, 2 cycles BRAM — depends on the candidate depth),
+      (1 cycle SRL, 2 cycles BRAM — depends on the candidate depth) plus
+      the condensation data-source offset (zero on raw graphs),
     - ``bp_idx``    (C, E_pad) i32: back-pressure gather index — write j of
-      fifo f waits on read event ``j - d_f``,
+      fifo f waits on read event ``j - d_f`` (its covering anchor on a
+      condensed graph),
     - ``bp_valid``  (C, E_pad) f32: mask of writes with an active
       back-pressure edge,
+    - ``bp_base``   (C, E_pad) f32: additive term of the back-pressure
+      edge — 1.0 on raw graphs, 1.0 + covering-anchor offset on
+      condensed ones,
     - ``structural`` (C,) bool: config deadlocks structurally (a write's
       back-pressure partner read does not exist).
     """
     depths = depths.astype(jnp.int32)
     is_bram = ~((depths <= SRL_DEPTH) | (depths * ops.widths <= SRL_BITS))
     rd_lat_f = 1.0 + is_bram.astype(jnp.float32)          # (C, F)
-    rd_lat_e = rd_lat_f[:, ops.fifo]                      # (C, E_pad)
+    rd_lat_e = rd_lat_f[:, ops.fifo] + ops.data_off[None, :]
 
     bp_pos = ops.rank[None, :] - depths[:, ops.fifo]      # (C, E_pad)
     overrun = ops.is_write[None, :] & (bp_pos >= ops.evt_n_reads[None, :])
@@ -320,4 +342,5 @@ def depth_operands(ops: GraphOperands, depths: jnp.ndarray
     flat = jnp.clip(ops.evt_read_base[None, :] + bp_pos, 0,
                     ops.n_flat_reads - 1)
     bp_idx = ops.read_evt_flat[flat]                      # (C, E_pad)
-    return rd_lat_e, bp_idx, bp_valid, structural
+    bp_base = ops.read_off_flat[flat] + 1.0               # (C, E_pad)
+    return rd_lat_e, bp_idx, bp_valid, bp_base, structural

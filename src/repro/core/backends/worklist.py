@@ -38,9 +38,8 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.bram import (BRAM_READ_LATENCY, SRL_BITS, SRL_DEPTH,
-                             SRL_READ_LATENCY, design_bram_np,
-                             fifo_read_latency)
+from repro.core.bram import (design_bram_np, fifo_read_latency,
+                             read_latency_np)
 from repro.core.design import READ
 from repro.core.simgraph import SimGraph
 
@@ -78,30 +77,63 @@ def _worklist_tables(g: SimGraph):
 
 
 def _delta_tables(g: SimGraph):
-    """Cached tables for the incremental solver: per-fifo write events in
-    rank order (mirroring ``read_evt_flat``) and per-segment owned fifos."""
+    """Cached tables for the incremental solver: per-fifo per-RANK event
+    and offset tables (every rank maps to the event that determines its
+    stream time — itself on a raw graph, its covering anchor plus a
+    delta-chain offset on a condensed one), per-segment owned fifos, and
+    the raw owner segment of each fifo's streams."""
     cached = getattr(g, "_delta_cache", None)
     if cached is not None:
         return cached
     (bounds, n_segs, kind, fifo, _, _, reader_seg, writer_seg) = \
         _worklist_tables(g)
     F = g.n_fifos
-    write_events: List[List[int]] = [[] for _ in range(F)]
-    for e in range(g.n_events):
-        if kind[e] != READ:
-            write_events[int(g.fifo[e])].append(e)
-    write_evt = [np.asarray(w, dtype=np.int64) for w in write_events]
-    read_evt = [np.asarray(
-        g.read_evt_flat[g.read_base[f]: g.read_base[f] + g.n_reads[f]],
-        dtype=np.int64) for f in range(F)]
+    starts = bounds[:-1]
+    if getattr(g, "cov_ptr", None) is None:
+        write_events: List[List[int]] = [[] for _ in range(F)]
+        for e in range(g.n_events):
+            if kind[e] != READ:
+                write_events[int(g.fifo[e])].append(e)
+        write_evt = [np.asarray(w, dtype=np.int64) for w in write_events]
+        read_evt = [np.asarray(
+            g.read_evt_flat[g.read_base[f]: g.read_base[f] + g.n_reads[f]],
+            dtype=np.int64) for f in range(F)]
+        w_off = [np.zeros(len(w), dtype=np.int64) for w in write_evt]
+        r_off = [np.zeros(len(r), dtype=np.int64) for r in read_evt]
+        owner_wseg = writer_seg
+        owner_rseg = reader_seg
+    else:
+        write_evt = [np.asarray(
+            g.w_anchor_flat[g.w_base[f]: g.w_base[f] + g.n_writes[f]],
+            dtype=np.int64) for f in range(F)]
+        w_off = [np.asarray(
+            g.w_off_flat[g.w_base[f]: g.w_base[f] + g.n_writes[f]],
+            dtype=np.int64) for f in range(F)]
+        read_evt = [np.asarray(
+            g.read_evt_flat[g.read_base[f]: g.read_base[f] + g.n_reads[f]],
+            dtype=np.int64) for f in range(F)]
+        r_off = [np.asarray(
+            g.read_off_flat[g.read_base[f]: g.read_base[f] + g.n_reads[f]],
+            dtype=np.int64) for f in range(F)]
+        # raw owner segment via the first rank's covering anchor (a fifo
+        # whose ops are ALL folded has no anchor-level reader/writer seg)
+        def _seg_of(ci: int) -> int:
+            return int(np.searchsorted(starts, ci, side="right") - 1)
+        owner_wseg = np.asarray(
+            [_seg_of(int(write_evt[f][0])) if g.n_writes[f] else -1
+             for f in range(F)], dtype=np.int64)
+        owner_rseg = np.asarray(
+            [_seg_of(int(read_evt[f][0])) if g.n_reads[f] else -1
+             for f in range(F)], dtype=np.int64)
     reads_of_seg: List[List[int]] = [[] for _ in range(n_segs)]
     writes_of_seg: List[List[int]] = [[] for _ in range(n_segs)]
     for f in range(F):
-        if reader_seg[f] >= 0:
-            reads_of_seg[int(reader_seg[f])].append(f)
-        if writer_seg[f] >= 0:
-            writes_of_seg[int(writer_seg[f])].append(f)
-    cached = (write_evt, read_evt, reads_of_seg, writes_of_seg)
+        if owner_rseg[f] >= 0:
+            reads_of_seg[int(owner_rseg[f])].append(f)
+        if owner_wseg[f] >= 0:
+            writes_of_seg[int(owner_wseg[f])].append(f)
+    cached = (write_evt, read_evt, w_off, r_off,
+              reads_of_seg, writes_of_seg, owner_wseg, owner_rseg)
     g._delta_cache = cached
     return cached
 
@@ -139,7 +171,10 @@ def _vector_tables(g: SimGraph):
     (bounds, n_segs, kind, fifo, delta, rank, _, _) = _worklist_tables(g)
     F = g.n_fifos
     is_write = kind != READ
-    n_writes = np.bincount(fifo[is_write], minlength=F).astype(np.int64)
+    # per-fifo RAW stream sizes: on a CondensedGraph only anchors appear
+    # as events, but streams keep full rank-dense layout (folded entries
+    # are bulk-scattered when their covering anchor completes)
+    n_writes = g.n_writes.astype(np.int64)
     wbase = np.zeros(F, dtype=np.int64)
     np.cumsum(n_writes[:-1], out=wbase[1:])
     rbase = g.read_base.astype(np.int64)
@@ -150,6 +185,33 @@ def _vector_tables(g: SimGraph):
               fifo.tolist(), rank.tolist(), delta.tolist(),
               is_read.tolist(), wbase.tolist(), rbase.tolist())
     g._vector_cache = cached
+    return cached
+
+
+def _cov_tables(g):
+    """Cached folded-op scatter tables for a CondensedGraph (None for a
+    raw SimGraph).  Vector path: flat arrays indexed by ``cov_ptr``
+    anchor slices; scalar/delta paths: per-anchor python lists of
+    ``(is_read, fifo, stream_slot, offset)``."""
+    cov_ptr = getattr(g, "cov_ptr", None)
+    if cov_ptr is None:
+        return None
+    cached = getattr(g, "_cov_cache", None)
+    if cached is not None:
+        return cached
+    (is_read, wbase, _, rbase, _, *_rest) = _vector_tables(g)
+    base = np.where(g.cov_is_read, rbase[g.cov_fifo], wbase[g.cov_fifo])
+    cov_slot = base + g.cov_rank
+    per_anchor = []
+    for ci in range(g.n_events):
+        lo, hi = int(cov_ptr[ci]), int(cov_ptr[ci + 1])
+        per_anchor.append([
+            (bool(g.cov_is_read[k]), int(g.cov_fifo[k]), int(cov_slot[k]),
+             int(g.cov_off[k])) for k in range(lo, hi)])
+    cached = (cov_ptr.astype(np.int64), g.cov_is_read, g.cov_fifo,
+              cov_slot.astype(np.int64), g.cov_off.astype(np.int64),
+              per_anchor)
+    g._cov_cache = cached
     return cached
 
 
@@ -191,14 +253,13 @@ def solve(g: SimGraph, depths: np.ndarray) -> WorklistState:
     E = g.n_events
     F = g.n_fifos
     widths = np.asarray(g.widths, dtype=np.int64)
-    # vectorized bram.fifo_read_latency
-    srl = (depths <= SRL_DEPTH) | (depths * widths <= SRL_BITS)
-    rd_lat_f = np.where(srl, SRL_READ_LATENCY,
-                        BRAM_READ_LATENCY).astype(np.int64)
+    rd_lat_f = read_latency_np(depths, widths).astype(np.int64)
     (bounds, n_segs, kind, fifo, delta, rank,
      reader_seg, writer_seg) = _worklist_tables(g)
     (is_read, wbase, total_w, rbase, total_r,
      fifol, rankl, deltal, is_readl, wbasel, rbasel) = _vector_tables(g)
+    cov = _cov_tables(g)
+    cov_lists = cov[5] if cov is not None else None
     depths_l = depths.tolist()
     rd_lat_l = rd_lat_f.tolist()
 
@@ -256,6 +317,17 @@ def solve(g: SimGraph, depths: np.ndarray) -> WorklistState:
                     woke_w.add(f)
                 t[i] = ti
                 pt = ti
+                if cov_lists is not None and cov_lists[i]:
+                    # bulk-complete the folded ops this anchor covers
+                    for cisr, f2, slot2, off2 in cov_lists[i]:
+                        if cisr:
+                            rtimes[slot2] = ti + off2
+                            rcount[f2] += 1
+                            woke_r.add(f2)
+                        else:
+                            wtimes[slot2] = ti + off2
+                            wcount[f2] += 1
+                            woke_w.add(f2)
                 i += 1
             n = i - lo
             if n:
@@ -322,21 +394,51 @@ def solve(g: SimGraph, depths: np.ndarray) -> WorklistState:
         t[lo:stop] = ts
 
         # 4. scatter stream times, advance, wake coupled segments
+        #    (bincount over the touched fifos: one C-level pass replaces
+        #    the per-fifo np.unique loop — this epilogue is the fixed
+        #    per-stretch cost that bounds condensed-graph speedups)
+        r_cnt = w_cnt = None
         if r_idx.size:
             fr = fs[r_idx]
             rtimes[rbase[fr] + rs[r_idx]] = ts[r_idx]
-            for f, c in zip(*np.unique(fr, return_counts=True)):
-                rcount[f] += int(c)
-                ws = writer_seg[f]         # freed slots -> wake writer
-                if ws >= 0 and not queued[ws]:
-                    queue.append(ws)
-                    queued[ws] = True
+            r_cnt = np.bincount(fr, minlength=F)
         aw_idx = np.flatnonzero(~ks)
         if aw_idx.size:
             fw = fs[aw_idx]
             wtimes[wbase[fw] + rs[aw_idx]] = ts[aw_idx]
-            for f, c in zip(*np.unique(fw, return_counts=True)):
-                wcount[f] += int(c)
+            w_cnt = np.bincount(fw, minlength=F)
+
+        # 5. bulk-scatter the folded ops covered by the stretch anchors
+        if cov is not None:
+            cptr, _, cov_f, cov_slot, cov_off, _ = cov
+            c0, c1 = int(cptr[lo]), int(cptr[stop])
+            if c1 > c0:
+                ctimes = (np.repeat(ts, np.diff(cptr[lo:stop + 1]))
+                          + cov_off[c0:c1])
+                cisr = g.cov_is_read[c0:c1]
+                cf = cov_f[c0:c1]
+                cslot = cov_slot[c0:c1]
+                rsel = np.flatnonzero(cisr)
+                if rsel.size:
+                    rtimes[cslot[rsel]] = ctimes[rsel]
+                    cnt = np.bincount(cf[rsel], minlength=F)
+                    r_cnt = cnt if r_cnt is None else r_cnt + cnt
+                wsel = np.flatnonzero(~cisr)
+                if wsel.size:
+                    wtimes[cslot[wsel]] = ctimes[wsel]
+                    cnt = np.bincount(cf[wsel], minlength=F)
+                    w_cnt = cnt if w_cnt is None else w_cnt + cnt
+
+        if r_cnt is not None:
+            for f in np.flatnonzero(r_cnt):
+                rcount[f] += int(r_cnt[f])
+                ws = writer_seg[f]         # freed slots -> wake writer
+                if ws >= 0 and not queued[ws]:
+                    queue.append(ws)
+                    queued[ws] = True
+        if w_cnt is not None:
+            for f in np.flatnonzero(w_cnt):
+                wcount[f] += int(w_cnt[f])
                 rseg = reader_seg[f]       # new data -> wake reader
                 if rseg >= 0 and not queued[rseg]:
                     queue.append(rseg)
@@ -369,7 +471,10 @@ def solve_delta(g: SimGraph, base: WorklistState, depths: np.ndarray,
 
     (bounds, n_segs, kind, fifo, delta, rank,
      reader_seg, writer_seg) = _worklist_tables(g)
-    write_evt, read_evt, reads_of_seg, writes_of_seg = _delta_tables(g)
+    (write_evt, read_evt, w_off, r_off, reads_of_seg, writes_of_seg,
+     owner_wseg, owner_rseg) = _delta_tables(g)
+    cov = _cov_tables(g)
+    cov_lists = cov[5] if cov is not None else None
     rd_lat = [fifo_read_latency(int(d), int(w))
               for d, w in zip(depths, g.widths)]
     dl = depths.tolist()
@@ -402,10 +507,12 @@ def solve_delta(g: SimGraph, base: WorklistState, depths: np.ndarray,
         s = base_w[f]
         if s is None:
             ev = write_evt[f]
-            ws = writer_segl[f]
+            ws = int(owner_wseg[f])
             end = boundsl[ws] + cursor_base_l[ws] if ws >= 0 else 0
+            # a rank's value exists in the base once its determining
+            # event (its covering anchor on condensed graphs) completed
             n = int(np.searchsorted(ev, end))
-            s = base_t[ev[:n]].tolist()
+            s = (base_t[ev[:n]] + w_off[f][:n]).tolist()
             base_w[f] = s
             if cur_w[f] is None:
                 cur_w[f] = s
@@ -415,10 +522,10 @@ def solve_delta(g: SimGraph, base: WorklistState, depths: np.ndarray,
         s = base_r[f]
         if s is None:
             ev = read_evt[f]
-            rs = reader_segl[f]
+            rs = int(owner_rseg[f])
             end = boundsl[rs] + cursor_base_l[rs] if rs >= 0 else 0
             n = int(np.searchsorted(ev, end))
-            s = base_t[ev[:n]].tolist()
+            s = (base_t[ev[:n]] + r_off[f][:n]).tolist()
             base_r[f] = s
             if cur_r[f] is None:
                 cur_r[f] = s
@@ -534,6 +641,41 @@ def solve_delta(g: SimGraph, base: WorklistState, depths: np.ndarray,
                                     break
                 t[i] = ti
                 pt = ti
+                if cov_lists is not None and cov_lists[i]:
+                    # append the folded ops this anchor covers, with the
+                    # same wake-on-diff propagation as own ops
+                    for cisr, f2, _slot2, off2 in cov_lists[i]:
+                        tv = ti + off2
+                        if cisr:
+                            rf2 = cur_r[f2]
+                            k2 = len(rf2)
+                            rf2.append(tv)
+                            ws2 = writer_segl[f2]
+                            if ws2 >= 0:
+                                if visited[ws2]:
+                                    wake.add(ws2)
+                                else:
+                                    bs2 = base_r[f2]
+                                    if k2 >= len(bs2) or bs2[k2] != tv:
+                                        if s in visit(ws2):
+                                            restarted = True
+                                            break
+                        else:
+                            wf2 = cur_w[f2]
+                            k2 = len(wf2)
+                            wf2.append(tv)
+                            rs2 = reader_segl[f2]
+                            if rs2 >= 0:
+                                if visited[rs2]:
+                                    wake.add(rs2)
+                                else:
+                                    bs2 = base_w[f2]
+                                    if k2 >= len(bs2) or bs2[k2] != tv:
+                                        if s in visit(rs2):
+                                            restarted = True
+                                            break
+                    if restarted:
+                        break
                 cursor[s] += 1
                 i += 1
             if not restarted:
@@ -589,8 +731,9 @@ def affected_segments(g: SimGraph, changed_fifos: np.ndarray) -> np.ndarray:
     forward closure of the changed FIFOs' endpoints over data and
     back-pressure edges.  The observed-difference propagation in
     :func:`solve_delta` typically re-runs far fewer."""
-    (_, n_segs, _, _, _, _, reader_seg, writer_seg) = _worklist_tables(g)
-    _, _, reads_of_seg, writes_of_seg = _delta_tables(g)
+    (_, n_segs, _, _, _, _, _, _) = _worklist_tables(g)
+    (_, _, _, _, reads_of_seg, writes_of_seg,
+     writer_seg, reader_seg) = _delta_tables(g)
     seen = np.zeros(n_segs, dtype=bool)
     stack = []
     for f in np.asarray(changed_fifos):
@@ -653,6 +796,24 @@ class WorklistBackend(EvalBackend):
             status[i] = DEADLOCK if dead else CONVERGED
         bram = design_bram_np(m, np.asarray(self.g.widths))
         return lat, bram, status
+
+    def evaluate_with_times(self, depth_matrix: np.ndarray
+                            ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                       np.ndarray]:
+        """Like :meth:`evaluate`, also returning the (C, E) final event
+        times — the condensation certificate's input."""
+        m = np.atleast_2d(np.asarray(depth_matrix, dtype=np.int64))
+        C = m.shape[0]
+        lat = np.zeros(C, dtype=np.int64)
+        status = np.zeros(C, dtype=np.int8)
+        times = np.zeros((C, self.g.n_events), dtype=np.int64)
+        for i in range(C):
+            st = solve(self.g, m[i])
+            lat[i] = st.latency
+            status[i] = DEADLOCK if st.deadlocked else CONVERGED
+            times[i] = st.t
+        bram = design_bram_np(m, np.asarray(self.g.widths))
+        return lat, bram, status, times
 
     # ---------------------------------------------------- incremental API
     def solve(self, depths: np.ndarray) -> WorklistState:

@@ -36,6 +36,14 @@ def fifo_read_latency(depth: int, width: int) -> int:
     return SRL_READ_LATENCY if is_srl(depth, width) else BRAM_READ_LATENCY
 
 
+def read_latency_np(depths: np.ndarray, widths: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`fifo_read_latency` over broadcastable arrays —
+    the single numpy copy of the SRL/BRAM rule (the evaluators and the
+    condensation certificate must agree on it bit for bit)."""
+    srl = (depths <= SRL_DEPTH) | (depths * widths <= SRL_BITS)
+    return np.where(srl, SRL_READ_LATENCY, BRAM_READ_LATENCY)
+
+
 def bram_count(depth: int, width: int) -> int:
     """Algorithm 1 from the paper, verbatim."""
     if is_srl(depth, width):

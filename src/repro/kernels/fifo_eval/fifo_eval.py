@@ -50,11 +50,12 @@ def _fifo_eval_kernel(
     # shared (1, E) operands
     delta_ref, segst_ref, isread_ref, hasdata_ref, didx_ref, endb_ref,
     # per-config (1, E) operands
-    rdlat_ref, bpidx_ref, bpval_ref,
-    # outputs
-    out_ref,
-    *, e_pad: int, max_iters: int, bound: float,
+    rdlat_ref, bpidx_ref, bpval_ref, bpbase_ref,
+    # outputs: result row, then (with_times) the final event times
+    *refs,
+    e_pad: int, max_iters: int, bound: float, with_times: bool,
 ):
+    out_ref = refs[0]
     delta = delta_ref[...]            # (1, E) f32
     segst = segst_ref[...]            # (1, E) f32: 1.0 at segment starts
     is_read = isread_ref[...]         # (1, E) f32 mask
@@ -64,6 +65,7 @@ def _fifo_eval_kernel(
     rd_lat = rdlat_ref[...]           # (1, E) f32
     bp_idx = bpidx_ref[...]           # (1, E) i32
     bp_valid = bpval_ref[...]         # (1, E) f32 mask
+    bp_base = bpbase_ref[...]         # (1, E) f32: 1.0 + condensation offset
 
     a_base = jnp.where(segst > 0, NEG, delta)
     n_steps = _num_scan_steps(e_pad)
@@ -84,7 +86,7 @@ def _fifo_eval_kernel(
         td = jnp.take(t[0], data_idx[0], axis=0)[None, :]
         bd = jnp.where(has_data > 0, td + rd_lat, NEG)
         tb = jnp.take(t[0], bp_idx[0], axis=0)[None, :]
-        bb = jnp.where(bp_valid > 0, tb + 1.0, NEG)
+        bb = jnp.where(bp_valid > 0, tb + bp_base, NEG)
         b = jnp.where(is_read > 0, bd, bb)
         m = jnp.where(segst > 0, jnp.maximum(b, delta), b)
         A, M = seg_scan(a_base, m)
@@ -111,32 +113,46 @@ def _fifo_eval_kernel(
     row = row.at[0, 2].set(over.astype(jnp.float32))
     row = row.at[0, 3].set(iters.astype(jnp.float32))
     out_ref[...] = row
+    if with_times:
+        refs[1][...] = t
 
 
 def fifo_eval_pallas(
     delta: jnp.ndarray, segst: jnp.ndarray, is_read: jnp.ndarray,
     has_data: jnp.ndarray, data_idx: jnp.ndarray, end_bonus: jnp.ndarray,
     rd_lat: jnp.ndarray, bp_idx: jnp.ndarray, bp_valid: jnp.ndarray,
-    *, max_iters: int, bound: float, interpret: bool = True,
-) -> jnp.ndarray:
+    bp_base: jnp.ndarray, *, max_iters: int, bound: float,
+    interpret: bool = True, with_times: bool = False,
+):
     """Launch the kernel.
 
-    Shared operands are (1, E); per-config operands are (C, E); E must be a
-    multiple of 128.  Returns (C, OUT_LANES) float32 result rows.
+    Shared operands are (1, E); per-config operands are (C, E); E must be
+    a multiple of 128.  Returns (C, OUT_LANES) float32 result rows, plus
+    the final (C, E) event times when ``with_times`` (the condensation
+    certificate needs them; the extra output is skipped otherwise).
     """
     C, e_pad = rd_lat.shape
     assert e_pad % 128 == 0, "pad events to a lane multiple"
     kernel = functools.partial(_fifo_eval_kernel, e_pad=e_pad,
-                               max_iters=max_iters, bound=bound)
+                               max_iters=max_iters, bound=bound,
+                               with_times=with_times)
     shared = pl.BlockSpec((1, e_pad), lambda i: (0, 0))
     percfg = pl.BlockSpec((1, e_pad), lambda i: (i, 0))
-    out = pl.BlockSpec((1, OUT_LANES), lambda i: (i, 0))
-    return pl.pallas_call(
+    out_specs = [pl.BlockSpec((1, OUT_LANES), lambda i: (i, 0))]
+    out_shape = [jax.ShapeDtypeStruct((C, OUT_LANES), jnp.float32)]
+    if with_times:
+        out_specs.append(pl.BlockSpec((1, e_pad), lambda i: (i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((C, e_pad), jnp.float32))
+    out = pl.pallas_call(
         kernel,
         grid=(C,),
-        in_specs=[shared] * 6 + [percfg] * 3,
-        out_specs=out,
-        out_shape=jax.ShapeDtypeStruct((C, OUT_LANES), jnp.float32),
+        in_specs=[shared] * 6 + [percfg] * 4,
+        out_specs=out_specs if with_times else out_specs[0],
+        out_shape=out_shape if with_times else out_shape[0],
         interpret=interpret,
     )(delta, segst, is_read, has_data, data_idx, end_bonus,
-      rd_lat, bp_idx, bp_valid)
+      rd_lat, bp_idx, bp_valid, bp_base)
+    if with_times:
+        rows, times = out
+        return rows, times
+    return out, None

@@ -37,11 +37,17 @@ from repro.kernels.fifo_eval.ref import fifo_eval_ref, fifo_eval_ref_hetero
 
 def make_batched_eval(ev_or_graph, interpret: bool = True,
                       use_ref: bool = False,
-                      max_iters: int = None) -> Callable:
+                      max_iters: int = None,
+                      with_times: bool = False) -> Callable:
     """Build the batched evaluation closure for a SimGraph.
 
-    Accepts either a :class:`~repro.core.simgraph.SimGraph` or any object
-    with ``.g`` / ``.max_iters`` (e.g. a ``BatchedEvaluator``).
+    Accepts either a :class:`~repro.core.simgraph.SimGraph` (raw or
+    condensed — the condensation offsets ride the shared operands) or
+    any object with ``.g`` / ``.max_iters`` (e.g. a ``BatchedEvaluator``).
+    With ``with_times`` the closure returns ``(lat, bram, status, t)``
+    where ``t`` is the (C, E_pad) final event-time matrix the
+    condensation certificate checks; otherwise ``(lat, bram, status)``
+    and the times are dead-code-eliminated inside the jit.
     """
     g: SimGraph = getattr(ev_or_graph, "g", ev_or_graph)
     if max_iters is None:
@@ -50,15 +56,16 @@ def make_batched_eval(ev_or_graph, interpret: bool = True,
     ops = get_operands(g)
 
     inner = fifo_eval_ref if use_ref else functools.partial(
-        fifo_eval_pallas, interpret=interpret)
+        fifo_eval_pallas, interpret=interpret, with_times=with_times)
 
     @jax.jit
     def run(depths):                     # (C, F) int32
-        rd_lat_e, bp_idx, bp_valid, structural = depth_operands(ops, depths)
-        out = inner(ops.delta, ops.seg_start, ops.is_read,
-                    ops.has_data, ops.data_idx, ops.end_bonus,
-                    rd_lat_e, bp_idx, bp_valid,
-                    max_iters=max_iters, bound=ops.bound)
+        rd_lat_e, bp_idx, bp_valid, bp_base, structural = depth_operands(
+            ops, depths)
+        out, times = inner(ops.delta, ops.seg_start, ops.is_read,
+                           ops.has_data, ops.data_idx, ops.end_bonus,
+                           rd_lat_e, bp_idx, bp_valid, bp_base,
+                           max_iters=max_iters, bound=ops.bound)
         lat = jnp.maximum(out[:, 0], ops.taskless_lat)
         conv = out[:, 1] > 0
         over = out[:, 2] > 0
@@ -68,13 +75,14 @@ def make_batched_eval(ev_or_graph, interpret: bool = True,
         bram = jnp.sum(bram_count_jnp(depths.astype(jnp.int32),
                                       ops.widths[None, :]),
                        axis=1).astype(jnp.int32)
+        if with_times:
+            return lat, bram, status, times
         return lat, bram, status
 
     def call(depth_matrix: np.ndarray
-             ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        lat, bram, status = jax.device_get(
+             ) -> Tuple[np.ndarray, ...]:
+        return jax.device_get(
             run(jnp.asarray(depth_matrix, dtype=jnp.int32)))
-        return lat, bram, status
 
     return call
 

@@ -10,6 +10,7 @@ arithmetic in f32) is a kernel bug; tests sweep shapes and designs.
 
 from __future__ import annotations
 
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -73,18 +74,22 @@ def fifo_eval_ref(
     delta: jnp.ndarray, segst: jnp.ndarray, is_read: jnp.ndarray,
     has_data: jnp.ndarray, data_idx: jnp.ndarray, end_bonus: jnp.ndarray,
     rd_lat: jnp.ndarray, bp_idx: jnp.ndarray, bp_valid: jnp.ndarray,
-    *, max_iters: int, bound: float,
-) -> jnp.ndarray:
-    """Same signature/semantics as fifo_eval_pallas; returns (C, 4):
-    [latency, converged, over_bound, iters] per config row."""
+    bp_base: jnp.ndarray, *, max_iters: int, bound: float,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Same signature/semantics as fifo_eval_pallas; returns a (C, 4)
+    [latency, converged, over_bound, iters] row per config plus the
+    final (C, E) event times (condensed-graph callers certify the
+    solution against them; jit dead-code-eliminates the times when the
+    caller discards them).  ``bp_base`` is the additive back-pressure
+    term (1.0 on raw graphs, 1.0 + anchor offset on condensed ones)."""
 
-    def one(rd_lat_c, bp_idx_c, bp_valid_c):
+    def one(rd_lat_c, bp_idx_c, bp_valid_c, bp_base_c):
         a_base = jnp.where(segst[0] > 0, NEG, delta[0])
 
         def step(t):
             bd = jnp.where(has_data[0] > 0,
                            t[data_idx[0]] + rd_lat_c, NEG)
-            bb = jnp.where(bp_valid_c > 0, t[bp_idx_c] + 1.0, NEG)
+            bb = jnp.where(bp_valid_c > 0, t[bp_idx_c] + bp_base_c, NEG)
             b = jnp.where(is_read[0] > 0, bd, bb)
             m = jnp.where(segst[0] > 0, jnp.maximum(b, delta[0]), b)
             A, M = lax.associative_scan(_combine, (a_base, m))
@@ -106,6 +111,6 @@ def fifo_eval_ref(
         over = jnp.max(t) > bound
         return jnp.stack([latency, conv.astype(jnp.float32),
                           over.astype(jnp.float32),
-                          iters.astype(jnp.float32)])
+                          iters.astype(jnp.float32)]), t
 
-    return jax.vmap(one)(rd_lat, bp_idx, bp_valid)
+    return jax.vmap(one)(rd_lat, bp_idx, bp_valid, bp_base)

@@ -123,7 +123,21 @@ def differential_check(gen: GeneratedDesign,
                 f"oracle results {r.results} != reference {gen.expected}"))
 
     for name in backends:
-        ev = BatchedEvaluator(g, backend=name)
+        if name == "condensed":
+            # the numpy worklist forced through the condensation cascade:
+            # every accepted row carries a per-row exactness certificate,
+            # so this differentially pins condensed-vs-oracle identity
+            # without needing jax (docs/performance.md)
+            from repro.core.condense import condense_auto
+            rungs = condense_auto(g)
+            if not rungs:
+                # nothing compressed -> the cascade would be an exact
+                # duplicate of the plain worklist run; skip rather than
+                # double-count the seed as condensation coverage
+                continue
+            ev = BatchedEvaluator(g, backend="worklist", condense=rungs)
+        else:
+            ev = BatchedEvaluator(g, backend=name)
         lat, _, dead = ev.evaluate(matrix)
         for i in range(matrix.shape[0]):
             if bool(dead[i]) != bool(oracle_dead[i]):
@@ -162,10 +176,11 @@ def _shrunk(spec: DesignSpec, backends: Sequence[str], n_random: int,
 
 
 def resolve_backends(arg: str) -> List[str]:
-    """``auto`` -> every backend usable here; else a comma-list."""
+    """``auto`` -> every backend usable here (plus the worklist forced
+    through the condensation cascade); else a comma-list."""
     if arg == "auto":
         from repro.core.backends import available_backends
-        return list(available_backends())
+        return list(available_backends()) + ["condensed"]
     return [b.strip() for b in arg.split(",") if b.strip()]
 
 
@@ -200,7 +215,7 @@ def main(argv=None) -> int:
     lo, _, hi = args.seeds.partition(":")
     seeds = range(int(lo), int(hi or int(lo) + 1))
     backends = resolve_backends(
-        args.backends or ("worklist" if args.quick else "auto"))
+        args.backends or ("worklist,condensed" if args.quick else "auto"))
 
     t0 = time.perf_counter()
     all_mism: List[Mismatch] = []

@@ -1,0 +1,227 @@
+"""Event-graph condensation: exactness, index maps, and the cascade.
+
+The condensation engine (``repro.core.condense``) may pick its anchor
+set however it likes — correctness rides on the per-row certificate
+(`verify_rows`): a passed certificate proves the expanded condensed
+solution IS the raw least fixpoint.  These tests pin that contract:
+
+* bit-exact latency / deadlock / per-event times vs the raw worklist on
+  analytical designs, Stream-HLS designs, and fuzz-generated designs
+  (committed corpus + fresh seeds) at all-1 / all-2 / upper / random
+  depth rows,
+* determinism and idempotence of the condensed build,
+* ``solve_delta`` parity on condensed graphs,
+* graceful certificate failure (never a wrong result, only a fallback),
+* the BatchedEvaluator cascade returning results identical to the raw
+  path for every registered backend.
+"""
+
+import importlib.util
+import os
+
+import numpy as np
+import pytest
+
+import repro.core.backends.worklist as wl
+from repro.core import build_simgraph
+from repro.core.condense import (condense, condense_auto, expand_times,
+                                 verify_rows)
+from repro.core.simulate import BatchedEvaluator
+from repro.designs import make_design, mult_by_2
+from repro.designs.generate import generate_design, load_corpus_specs, \
+    build_design
+
+HAS_JAX = importlib.util.find_spec("jax") is not None
+CORPUS_DIR = os.path.join(os.path.dirname(__file__), "fuzz_corpus")
+
+
+def _probe_rows(g, n_random=4, seed=0):
+    """The differential row set: all-1, all-2, upper, random in [1, u]."""
+    rng = np.random.default_rng(seed)
+    u = np.asarray(g.upper_bounds, dtype=np.int64)
+    rows = [np.ones_like(u), np.full_like(u, 2), u.copy()]
+    for _ in range(n_random):
+        rows.append(rng.integers(1, u + 1))
+    return rows
+
+
+def _assert_rows_exact(g, cgs, rows):
+    """Every row, every rung: accepted results must match the raw solve
+    bit for bit (latency, deadlock verdict, expanded per-event times)."""
+    for row in rows:
+        raw = wl.solve(g, row)
+        for cg in cgs:
+            st = wl.solve(cg, row)
+            if st.deadlocked:
+                # sound: the relaxed system stalling implies raw stalls
+                assert raw.deadlocked
+                continue
+            ok = verify_rows(cg, row[None, :], st.t[None, :])[0]
+            if not ok:
+                continue            # certificate failed -> row falls back
+            assert not raw.deadlocked
+            assert st.latency == raw.latency
+            np.testing.assert_array_equal(expand_times(cg, st.t), raw.t)
+
+
+@pytest.mark.parametrize("n", [8, 32])
+def test_mult_by_2_identity(n):
+    g = build_simgraph(mult_by_2(n))
+    cgs = condense_auto(g)
+    _assert_rows_exact(g, cgs, _probe_rows(g))
+
+
+@pytest.mark.parametrize("name", ["gemm", "FeedForward", "mvt"])
+def test_streamhls_identity(name):
+    g = build_simgraph(make_design(name))
+    cgs = condense_auto(g)
+    assert cgs, "streamhls designs must produce at least one rung"
+    assert max(cg.compression for cg in cgs) > 1.5
+    _assert_rows_exact(g, cgs, _probe_rows(g))
+
+
+def test_condense_deterministic_and_idempotent():
+    """Same graph, same parameters -> identical anchor choice; the
+    condensed arrays are a pure function of (graph, floor, tuning)."""
+    g1 = build_simgraph(make_design("gemm"))
+    g2 = build_simgraph(make_design("gemm"))
+    a = condense(g1, seed=3)
+    b = condense(g2, seed=3)
+    np.testing.assert_array_equal(a.orig_of, b.orig_of)
+    np.testing.assert_array_equal(a.delta, b.delta)
+    np.testing.assert_array_equal(a.cond_of, b.cond_of)
+    # re-condensing the same graph is a no-op on the anchor structure
+    c = condense(g1, seed=3)
+    np.testing.assert_array_equal(a.orig_of, c.orig_of)
+
+
+def test_index_maps_are_consistent():
+    g = build_simgraph(make_design("gemm"))
+    cg = condense(g)
+    E, Ec = g.n_events, cg.n_events
+    assert 0 < Ec < E
+    # orig_of/cond_of round-trip: every anchor covers itself at offset 0
+    np.testing.assert_array_equal(cg.cond_of[cg.orig_of], np.arange(Ec))
+    assert (cg.off_of[cg.orig_of] == 0).all()
+    # every raw event's covering anchor precedes it in its own segment
+    assert (cg.orig_of[cg.cond_of] <= np.arange(E)).all()
+    # metadata reported in RAW terms
+    np.testing.assert_array_equal(cg.max_occupancy, g.max_occupancy)
+    assert cg.unbounded_latency == g.unbounded_latency
+    assert cg.latency_upper_bound() == g.latency_upper_bound()
+
+
+def test_occupancy_and_blame_unchanged_by_condensation():
+    """Condensation is evaluation-side only: advisor-level occupancy,
+    certification, and deadlock blame all report raw-graph facts."""
+    from repro.core.advisor import FifoAdvisor
+    adv = FifoAdvisor(mult_by_2(12))
+    np.testing.assert_array_equal(
+        adv.graph.max_occupancy,
+        condense(adv.graph).max_occupancy)
+    assert list(adv.min_safe_depths()) == [11, 1]
+    wfg = adv.explain_deadlock(np.array([1, 1]))
+    assert wfg.blame() == ["x", "y"]
+
+
+def test_solve_delta_parity_on_condensed_graphs():
+    """The incremental solver on a condensed graph matches a full
+    condensed solve (and the raw solve on certified rows)."""
+    g = build_simgraph(make_design("gemm"))
+    cg = condense(g)
+    u = np.asarray(g.upper_bounds, dtype=np.int64)
+    base_row = u.copy()
+    base = wl.solve(cg, base_row)
+    rng = np.random.default_rng(7)
+    for _ in range(6):
+        row = base_row.copy()
+        for f in rng.integers(0, g.n_fifos, 2):
+            row[f] = rng.integers(max(1, u[f] // 2), u[f] + 1)
+        full = wl.solve(cg, row)
+        delta = wl.solve_delta(cg, base, row)
+        assert delta.latency == full.latency
+        assert delta.deadlocked == full.deadlocked
+        np.testing.assert_array_equal(delta.t, full.t)
+        if not full.deadlocked and verify_rows(
+                cg, row[None, :], full.t[None, :])[0]:
+            raw = wl.solve(g, row)
+            assert delta.latency == raw.latency
+
+
+def test_certificate_rejects_or_flags_deadlock_rows():
+    """A row that deadlocks raw can NEVER be certified feasible: either
+    the condensed solve stalls too, or the certificate fails."""
+    g = build_simgraph(make_design("k15mmtree"))
+    row = np.full(g.n_fifos, 2, dtype=np.int64)   # paper's Baseline-Min
+    raw = wl.solve(g, row)
+    assert raw.deadlocked
+    for cg in condense_auto(g):
+        st = wl.solve(cg, row)
+        if not st.deadlocked:
+            assert not verify_rows(cg, row[None, :], st.t[None, :])[0]
+
+
+def test_evaluator_cascade_identical_to_raw():
+    """BatchedEvaluator with the cascade == without, on every backend
+    available in this environment, over the full differential row set."""
+    backends = ["numpy"] + (["jax"] if HAS_JAX else [])
+    for name in ["gemm", "FeedForward"]:
+        g = build_simgraph(make_design(name))
+        rows = np.stack(_probe_rows(g, n_random=6))
+        # feasible-leaning rows exercise the in-box cascade path
+        rng = np.random.default_rng(1)
+        u = g.upper_bounds
+        hot = np.stack([np.maximum(
+            2, (u * rng.uniform(0.5, 1.0, g.n_fifos)).astype(int))
+            for _ in range(8)])
+        rows = np.concatenate([rows, hot])
+        for backend in backends:
+            ev_raw = BatchedEvaluator(g, backend=backend, condense=None)
+            ev_c = BatchedEvaluator(g, backend=backend)
+            got_raw = ev_raw.evaluate(rows)
+            got_c = ev_c.evaluate(rows)
+            for a, b in zip(got_raw, got_c):
+                np.testing.assert_array_equal(a, b)
+            if backend != "numpy":
+                # the scan cascade must actually fire on the hot rows
+                assert ev_c.stats.n_condensed > 0
+
+
+def test_forced_worklist_cascade_identical_to_raw():
+    """Explicitly passing condensed rungs forces the cascade on the
+    numpy worklist too (auto keeps it scan-only); results stay exact."""
+    g = build_simgraph(make_design("mvt"))
+    cgs = condense_auto(g)
+    rows = np.stack(_probe_rows(g, n_random=6, seed=5))
+    ev_raw = BatchedEvaluator(g, backend="numpy", condense=None)
+    ev_c = BatchedEvaluator(g, backend="numpy", condense=cgs)
+    for a, b in zip(ev_raw.evaluate(rows), ev_c.evaluate(rows)):
+        np.testing.assert_array_equal(a, b)
+
+
+def _fuzz_graphs(seeds):
+    for seed in seeds:
+        gen = generate_design(seed, quick=True)
+        yield seed, build_simgraph(gen.design)
+
+
+def test_fuzz_corpus_condensed_identity():
+    """The committed shrunk-reproducer corpus replays clean through the
+    condensation cascade."""
+    paths = [os.path.join(CORPUS_DIR, p) for p in sorted(
+        os.listdir(CORPUS_DIR)) if p.endswith(".json")]
+    specs = load_corpus_specs(paths)
+    assert specs, "corpus must not be empty"
+    for spec in specs:
+        g = build_simgraph(build_design(spec).design)
+        cgs = condense_auto(g)
+        _assert_rows_exact(g, cgs, _probe_rows(g, n_random=3))
+
+
+@pytest.mark.parametrize("seed", range(0, 24, 3))
+def test_fuzz_fresh_seeds_condensed_identity(seed):
+    """Fresh generator seeds: condensed-vs-raw identity on the
+    differential row set (the fuzz CLI sweeps a wider range)."""
+    for _, g in _fuzz_graphs([seed]):
+        cgs = condense_auto(g)
+        _assert_rows_exact(g, cgs, _probe_rows(g, n_random=3, seed=seed))
