@@ -1,0 +1,152 @@
+"""Mesh-sharded evaluation benchmark: configs/sec vs shard count.
+
+Measures, per design, batched-evaluation throughput of the sharded scan
+backend (``backend="mesh"``, docs/mesh.md) at 1/2/4/8 shards of an
+8-device host-platform CPU mesh, against the solo jit fixpoint —
+asserting bit-identical results at every shard count.
+
+Device count is fixed at jax backend initialization, so this benchmark
+needs ``--xla_force_host_platform_device_count=8`` set before jax's
+first computation.  Run standalone it arranges that itself; invoked from
+``benchmarks.run`` (where earlier benchmarks already initialized jax on
+1 device) it re-execs itself in a subprocess with the flag set.
+
+Scaling expectations are host-dependent: host-platform devices are
+threads, so wall-clock speedup is bounded by real cores.  The recorded
+``usable_cores`` lets ``check_regression.py``'s ``check_mesh`` gate
+scale its expectation (~0.375 x min(shards, cores), i.e. the ISSUE's
+3x-at-8-devices criterion wherever 8 cores exist).  Even at 1 core the
+8-shard split beats 1-shard: each shard's vmapped fixpoint retires when
+its OWN slowest row converges instead of the global worst case.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from typing import Dict
+
+if "jax" not in sys.modules:     # standalone: arm the flag pre-import
+    from repro.launch.mesh import ensure_host_platform_devices
+    ensure_host_platform_devices(8)
+
+import numpy as np
+
+from benchmarks.common import (RESULTS_DIR, Timer, geomean, quick_mode,
+                               save_json)
+
+SHARD_COUNTS = (1, 2, 4, 8)
+MAX_SHARDS = SHARD_COUNTS[-1]
+#: scaling shape is design-independent (pure row partitioning), so the
+#: quick and full sets coincide — two designs of very different size
+DESIGNS = ["gemm", "FeedForward"]
+
+
+def _configs(g, C: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    u = g.upper_bounds
+    return np.stack([np.maximum(
+        2, (u * rng.uniform(0.5, 1.0, g.n_fifos)).astype(int))
+        for _ in range(C)])
+
+
+def _bench(ev, cfgs, reps: int):
+    ev.evaluate(cfgs[:2])                 # warm / compile
+    ev.evaluate(cfgs)                     # warm the batch bucket
+    best, result = float("inf"), None
+    for _ in range(reps):
+        with Timer() as t:
+            result = ev.evaluate(cfgs)
+        best = min(best, t.s)
+    return best, result
+
+
+def _measure(seed: int = 0) -> Dict:
+    from repro.core import build_simgraph
+    from repro.core.simulate import BatchedEvaluator
+    from repro.designs import make_design
+
+    C = 64 if quick_mode() else 256
+    reps = 2 if quick_mode() else 3
+    out: Dict = {"designs": {}, "batch": C,
+                 "max_shards": MAX_SHARDS,
+                 "usable_cores": os.cpu_count() or 1}
+    speedups = []
+    identical_all = True
+    for name in DESIGNS:
+        g = build_simgraph(make_design(name))
+        cfgs = _configs(g, C, seed)
+        # condensation off isolates the sharded evaluator itself (the
+        # cascade rungs shard identically via spawn())
+        t_solo, r_solo = _bench(
+            BatchedEvaluator(g, backend="jax", condense=None), cfgs, reps)
+        row: Dict = {"solo_us_per_config": round(1e6 * t_solo / C, 1),
+                     "shards": {}}
+        t_by_shards = {}
+        for s in SHARD_COUNTS:
+            t_s, r_s = _bench(
+                BatchedEvaluator(g, backend="mesh", shards=s,
+                                 condense=None), cfgs, reps)
+            identical = all((a == b).all() for a, b in zip(r_solo, r_s))
+            identical_all &= identical
+            t_by_shards[s] = t_s
+            row["shards"][str(s)] = dict(
+                us_per_config=round(1e6 * t_s / C, 1),
+                configs_per_s=round(C / t_s, 1),
+                identical=identical)
+        # production-path identity too: full cascade, sharded vs solo
+        ev_m = BatchedEvaluator(g, backend="mesh", shards=MAX_SHARDS)
+        ev_j = BatchedEvaluator(g, backend="jax")
+        identical = all((a == b).all() for a, b in
+                        zip(ev_j.evaluate(cfgs), ev_m.evaluate(cfgs)))
+        identical_all &= identical
+        row["cascade_identical"] = identical
+        speedup = t_by_shards[1] / max(t_by_shards[MAX_SHARDS], 1e-12)
+        row["speedup_8v1"] = round(speedup, 2)
+        speedups.append(speedup)
+        out["designs"][name] = row
+    out["geomean_speedup_8v1"] = round(geomean(speedups), 2)
+    out["identical_all"] = bool(identical_all)
+    return out
+
+
+def run(seed: int = 0) -> Dict:
+    """Measure (re-execing under an 8-device mesh if needed) and save."""
+    import jax
+    if jax.device_count() < MAX_SHARDS:
+        # jax already initialized on fewer devices (benchmarks.run
+        # imports it long before us): measure in a fresh process
+        env = dict(os.environ)
+        flag = f"--xla_force_host_platform_device_count={MAX_SHARDS}"
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + flag).strip()
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.mesh"],
+            env=env, capture_output=True, text=True)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"mesh benchmark subprocess failed:\n{proc.stderr}")
+        name = "mesh.quick.json" if quick_mode() else "mesh.json"
+        with open(os.path.join(RESULTS_DIR, name)) as f:
+            return json.load(f)
+    out = _measure(seed)
+    save_json("mesh.json", out)
+    return out
+
+
+def main():
+    out = run()
+    for name, d in out["designs"].items():
+        cols = "  ".join(f"s{s}={v['configs_per_s']:.0f}/s"
+                         for s, v in d["shards"].items())
+        print(f"{name:14s} solo={d['solo_us_per_config']}us {cols} "
+              f"8v1={d['speedup_8v1']}x "
+              f"identical={d['cascade_identical']}")
+    print(f"geomean 8v1 speedup {out['geomean_speedup_8v1']}x on "
+          f"{out['usable_cores']} core(s), "
+          f"identical={out['identical_all']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,110 +1,182 @@
 """Run every benchmark; print one ``name,seconds,derived`` CSV line each.
 
-  PYTHONPATH=src python -m benchmarks.run            # fast budgets
-  FULL=1 PYTHONPATH=src python -m benchmarks.run     # paper budgets
+  PYTHONPATH=src python -m benchmarks.run              # fast budgets
+  FULL=1 PYTHONPATH=src python -m benchmarks.run       # paper budgets
+  PYTHONPATH=src python -m benchmarks.run --only mesh  # just one
+  PYTHONPATH=src python -m benchmarks.run --list       # show names
+
+``--only`` may be repeated (or comma-separated) to run a subset in the
+canonical order; unknown names fail fast with the available list.
 """
 
 from __future__ import annotations
 
+import argparse
+import sys
 import time
 
 
-def main() -> None:
-    from benchmarks import (accuracy, batched_eval, cache_lookup, campaign,
-                            case_study, condense, convergence, fuzz,
-                            improvement, pareto_fronts, pruning, roofline,
-                            runtime, service)
-
-    print("name,seconds,derived")
-
-    t0 = time.perf_counter()
+def _accuracy() -> str:
+    from benchmarks import accuracy
     acc = accuracy.run()
-    print(f"accuracy,{time.perf_counter() - t0:.2f},"
-          f"all_exact={acc['all_exact']}")
+    return f"all_exact={acc['all_exact']}"
 
-    t0 = time.perf_counter()
-    imp = improvement.run()
-    gsa = imp["summary"].get("grouped_sa", {})
-    print(f"improvement,{time.perf_counter() - t0:.2f},"
-          f"grouped_sa_lat_vs_max={gsa.get('geomean_lat_vs_max'):.4f};"
-          f"bram_red={gsa.get('mean_bram_red'):.3f};"
-          f"undeadlocked={gsa.get('undeadlocked')}")
 
-    t0 = time.perf_counter()
-    rt = runtime.run()
-    g = rt["summary"]["grouped_sa"]
-    print(f"runtime,{time.perf_counter() - t0:.2f},"
-          f"grouped_sa_vs_des={g['geomean_speedup_vs_des']:.1f}x;"
-          f"vs_rtl_slow={g['geomean_speedup_vs_rtl_slow']:.0f}x")
+def _improvement() -> str:
+    from benchmarks import improvement
+    gsa = improvement.run()["summary"].get("grouped_sa", {})
+    return (f"grouped_sa_lat_vs_max={gsa.get('geomean_lat_vs_max'):.4f};"
+            f"bram_red={gsa.get('mean_bram_red'):.3f};"
+            f"undeadlocked={gsa.get('undeadlocked')}")
 
-    t0 = time.perf_counter()
-    pf = pareto_fronts.run()
-    print(f"pareto_fronts,{time.perf_counter() - t0:.2f},"
-          f"designs={len(pf)}")
 
-    t0 = time.perf_counter()
+def _runtime() -> str:
+    from benchmarks import runtime
+    g = runtime.run()["summary"]["grouped_sa"]
+    return (f"grouped_sa_vs_des={g['geomean_speedup_vs_des']:.1f}x;"
+            f"vs_rtl_slow={g['geomean_speedup_vs_rtl_slow']:.0f}x")
+
+
+def _pareto_fronts() -> str:
+    from benchmarks import pareto_fronts
+    return f"designs={len(pareto_fronts.run())}"
+
+
+def _convergence() -> str:
+    from benchmarks import convergence
     cv = convergence.run()
-    print(f"convergence,{time.perf_counter() - t0:.2f},"
-          f"final_grouped_sa={cv['curves']['grouped_sa']['final']}")
+    return f"final_grouped_sa={cv['curves']['grouped_sa']['final']}"
 
-    t0 = time.perf_counter()
+
+def _case_study() -> str:
+    from benchmarks import case_study
     cs = case_study.run()
-    print(f"case_study,{time.perf_counter() - t0:.2f},"
-          f"msg_depths={cs['min_feasible_msg_depth_by_graph']}")
+    return f"msg_depths={cs['min_feasible_msg_depth_by_graph']}"
 
-    t0 = time.perf_counter()
+
+def _batched_eval() -> str:
+    from benchmarks import batched_eval
     be = batched_eval.run()
-    n_us = be["gemm"]["numpy"]["us_per_config"]
-    print(f"batched_eval,{time.perf_counter() - t0:.2f},"
-          f"gemm_numpy_us_per_cfg={n_us}")
+    return f"gemm_numpy_us_per_cfg={be['gemm']['numpy']['us_per_config']}"
 
-    t0 = time.perf_counter()
+
+def _campaign() -> str:
+    from benchmarks import campaign
     cp = campaign.run()
-    print(f"campaign,{time.perf_counter() - t0:.2f},"
-          f"speedup_vs_seq={cp['campaign_speedup']:.2f}x;"
-          f"identical_frontiers={cp['identical_frontiers']}")
+    return (f"speedup_vs_seq={cp['campaign_speedup']:.2f}x;"
+            f"identical_frontiers={cp['identical_frontiers']}")
 
-    t0 = time.perf_counter()
+
+def _service() -> str:
+    from benchmarks import service
     sv = service.run()
-    print(f"service,{time.perf_counter() - t0:.2f},"
-          f"speedup_vs_solo={sv['service_speedup']:.2f}x;"
-          f"identical_frontiers={sv['identical_frontiers']}")
+    return (f"speedup_vs_solo={sv['service_speedup']:.2f}x;"
+            f"identical_frontiers={sv['identical_frontiers']}")
 
-    t0 = time.perf_counter()
+
+def _condense() -> str:
+    from benchmarks import condense
     cd = condense.run()
-    print(f"condense,{time.perf_counter() - t0:.2f},"
-          f"scan_speedup={cd['geomean_speedup_scan']:.2f}x;"
-          f"ratio={cd['geomean_condensation_ratio']:.1f}x;"
-          f"identical={cd['identical_all']}")
+    return (f"scan_speedup={cd['geomean_speedup_scan']:.2f}x;"
+            f"ratio={cd['geomean_condensation_ratio']:.1f}x;"
+            f"identical={cd['identical_all']}")
 
-    t0 = time.perf_counter()
+
+def _mesh() -> str:
+    from benchmarks import mesh
+    ms = mesh.run()
+    return (f"speedup_8v1={ms['geomean_speedup_8v1']:.2f}x;"
+            f"cores={ms['usable_cores']};"
+            f"identical={ms['identical_all']}")
+
+
+def _cache_lookup() -> str:
+    from benchmarks import cache_lookup
     cl = cache_lookup.run()
-    print(f"cache_lookup,{time.perf_counter() - t0:.2f},"
-          f"c1024_speedup={cl['batch'][-1]['speedup']:.2f}x")
+    return f"c1024_speedup={cl['batch'][-1]['speedup']:.2f}x"
 
-    t0 = time.perf_counter()
+
+def _fuzz() -> str:
+    from benchmarks import fuzz
     fz = fuzz.run()
-    print(f"fuzz,{time.perf_counter() - t0:.2f},"
-          f"zero_mismatches={fz['differential']['zero_mismatches']};"
-          f"cert_speedup={fz['cert_geomean_speedup']:.2f}x")
+    return (f"zero_mismatches={fz['differential']['zero_mismatches']};"
+            f"cert_speedup={fz['cert_geomean_speedup']:.2f}x")
 
-    t0 = time.perf_counter()
-    pr = pruning.run()
-    k = pr["k15mmtree"]
-    print(f"pruning,{time.perf_counter() - t0:.2f},"
-          f"k15mmtree_random_dead:{k['random_raw']['dead']}->"
-          f"{k['random_pruned']['dead']}")
 
-    t0 = time.perf_counter()
+def _pruning() -> str:
+    from benchmarks import pruning
+    k = pruning.run()["k15mmtree"]
+    return (f"k15mmtree_random_dead:{k['random_raw']['dead']}->"
+            f"{k['random_pruned']['dead']}")
+
+
+def _roofline() -> str:
+    from benchmarks import roofline
     rows = roofline.load()
-    if rows:
-        picks = roofline.pick_hillclimb_cells(rows)
-        rep = picks["paper_representative"]
-        print(f"roofline,{time.perf_counter() - t0:.2f},"
-              f"cells={len(rows)};rep={rep['arch']}x{rep['shape']}")
-    else:
-        print(f"roofline,{time.perf_counter() - t0:.2f},no_dryrun_records")
+    if not rows:
+        return "no_dryrun_records"
+    rep = roofline.pick_hillclimb_cells(rows)["paper_representative"]
+    return f"cells={len(rows)};rep={rep['arch']}x{rep['shape']}"
+
+
+#: canonical order — ``--only`` subsets preserve it
+STEPS = [
+    ("accuracy", _accuracy),
+    ("improvement", _improvement),
+    ("runtime", _runtime),
+    ("pareto_fronts", _pareto_fronts),
+    ("convergence", _convergence),
+    ("case_study", _case_study),
+    ("batched_eval", _batched_eval),
+    ("campaign", _campaign),
+    ("service", _service),
+    ("condense", _condense),
+    ("mesh", _mesh),
+    ("cache_lookup", _cache_lookup),
+    ("fuzz", _fuzz),
+    ("pruning", _pruning),
+    ("roofline", _roofline),
+]
+
+
+def parse_args(argv=None):
+    p = argparse.ArgumentParser(
+        prog="python -m benchmarks.run",
+        description="Run the benchmark suite (QUICK=1 / FULL=1 envs "
+                    "select budgets).")
+    p.add_argument("--only", action="append", default=None,
+                   metavar="NAME",
+                   help="run only this benchmark (repeatable, or "
+                        "comma-separated); order stays canonical")
+    p.add_argument("--list", action="store_true",
+                   help="print benchmark names and exit")
+    return p.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = parse_args(argv)
+    names = [n for n, _ in STEPS]
+    if args.list:
+        print("\n".join(names))
+        return 0
+    selected = None
+    if args.only:
+        selected = [n.strip() for arg in args.only
+                    for n in arg.split(",") if n.strip()]
+        unknown = sorted(set(selected) - set(names))
+        if unknown:
+            print(f"unknown benchmark(s): {', '.join(unknown)}; "
+                  f"available: {', '.join(names)}", file=sys.stderr)
+            return 2
+    print("name,seconds,derived")
+    for name, fn in STEPS:
+        if selected is not None and name not in selected:
+            continue
+        t0 = time.perf_counter()
+        derived = fn()
+        print(f"{name},{time.perf_counter() - t0:.2f},{derived}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

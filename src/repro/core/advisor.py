@@ -144,6 +144,10 @@ class FifoAdvisor:
         use_pallas / backend / max_iters: evaluator selection — see
             ``docs/backends.md``.  ``backend="auto"`` runs a one-shot
             calibration probe and picks the fastest backend.
+        mesh / shards: shard batched evaluation across a jax device
+            mesh (``docs/mesh.md``).  Either forces ``backend="mesh"``;
+            ``shards=N`` uses the first N devices, ``mesh=`` an explicit
+            :class:`jax.sharding.Mesh`.
         condense: event-graph condensation — ``"auto"`` (default)
             condenses once at trace time and routes evaluation batches
             through the certified rung cascade; ``None`` disables it
@@ -158,7 +162,8 @@ class FifoAdvisor:
                  use_pallas: bool = False,
                  backend: str = "numpy",
                  max_iters: int = 256,
-                 condense: object = "auto"):
+                 condense: object = "auto",
+                 mesh=None, shards: Optional[int] = None):
         t0 = time.perf_counter()
         self.design = design
         self.trace: Trace = collect_trace(design)
@@ -166,7 +171,8 @@ class FifoAdvisor:
         self.evaluator = BatchedEvaluator(self.graph, max_iters=max_iters,
                                           backend=backend,
                                           use_pallas=use_pallas,
-                                          condense=condense)
+                                          condense=condense,
+                                          mesh=mesh, shards=shards)
         # One evaluation cache for the whole advisor session: every
         # optimizer run (and the baselines) shares hits.
         self.cache = ConfigCache(self.graph.n_fifos)

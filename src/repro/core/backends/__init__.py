@@ -34,6 +34,7 @@ from repro.core.backends.worklist import (IncrementalStats, WorklistBackend,
 #: names resolved on attribute access from jax-importing submodules
 _LAZY_ATTRS = {
     "FixpointBackend": "repro.core.backends.fixpoint",
+    "MeshBackend": "repro.core.backends.mesh",
     "PallasBackend": "repro.core.backends.pallas",
     "GraphOperands": "repro.core.backends.operands",
     "HeteroOperands": "repro.core.backends.operands",
@@ -58,7 +59,8 @@ __all__ = [
     "BACKENDS", "BIG", "BUCKETS", "CONVERGED", "CacheStats", "ConfigCache",
     "DEADLOCK", "DispatchPolicy", "EvalBackend", "F32_EXACT_LIMIT",
     "FixpointBackend", "GraphOperands", "HeteroDispatcher", "HeteroOperands",
-    "HeteroStats", "IncrementalStats", "PallasBackend", "UNRESOLVED",
+    "HeteroStats", "IncrementalStats", "MeshBackend", "PallasBackend",
+    "UNRESOLVED",
     "WorklistBackend", "WorklistState", "affected_segments",
     "available_backends", "bram_count_jnp", "build_operands",
     "depth_operands", "evaluate_np", "extend_operands", "get_backend",

@@ -65,6 +65,14 @@ class EvalBackend(abc.ABC):
         Latency entries are only meaningful on CONVERGED rows.
         """
 
+    def spawn(self) -> "EvalBackend":
+        """A fresh, unprepared instance with the same configuration.
+
+        The condensation rung cascade prepares one evaluator per rung;
+        backends with extra construction state (e.g. the mesh backend's
+        device mesh) override this so rung evaluators inherit it."""
+        return type(self)(max_iters=self.max_iters)
+
 
 BACKENDS: Dict[str, Type[EvalBackend]] = {}
 
@@ -87,6 +95,8 @@ _LAZY_BACKEND_MODULES = {
     "fixpoint": "repro.core.backends.fixpoint",
     "jax": "repro.core.backends.fixpoint",
     "pallas": "repro.core.backends.pallas",
+    "mesh": "repro.core.backends.mesh",
+    "sharded": "repro.core.backends.mesh",
 }
 
 
@@ -113,5 +123,5 @@ def available_backends() -> Tuple[str, ...]:
     names = {cls.name for cls in BACKENDS.values()}
     names.add("worklist")
     if importlib.util.find_spec("jax") is not None:
-        names.update({"fixpoint", "pallas"})
+        names.update({"fixpoint", "pallas", "mesh"})
     return tuple(sorted(names))

@@ -39,23 +39,35 @@ BUCKETS = (1, 8, 32, 128, 512, 2048)
 
 
 class DispatchPolicy:
-    """Routes depth batches through a backend and resolves every row."""
+    """Routes depth batches through a backend and resolves every row.
+
+    ``shard_multiple`` (the backend's device-mesh size; 1 = unsharded)
+    rounds every padded batch up to a shard multiple so the sharded
+    evaluators split rows evenly across devices without growing their
+    jit cache beyond the bucketed shape set.
+    """
 
     def __init__(self, worklist: WorklistBackend,
-                 buckets: Tuple[int, ...] = BUCKETS):
+                 buckets: Tuple[int, ...] = BUCKETS,
+                 shard_multiple: int = 1):
         self.worklist = worklist
         self.buckets = tuple(buckets)
+        self.shard_multiple = max(1, int(shard_multiple))
 
     def bucket_size(self, c: int) -> Optional[int]:
         return next((b for b in self.buckets if b >= c), None)
 
     def pad_batch(self, m: np.ndarray) -> np.ndarray:
-        """Pad C up to the covering bucket by repeating the last row."""
+        """Pad C up to the covering bucket (rounded to a shard multiple)
+        by repeating the last row."""
         c = m.shape[0]
         bucket = self.bucket_size(c)
-        if bucket is None or bucket == c:
+        target = c if bucket is None else bucket
+        k = self.shard_multiple
+        target = -(-target // k) * k
+        if target == c:
             return m
-        pad = np.repeat(m[-1:], bucket - c, axis=0)
+        pad = np.repeat(m[-1:], target - c, axis=0)
         return np.concatenate([m, pad], axis=0)
 
     def dispatch(self, backend: EvalBackend, depth_matrix: np.ndarray,
@@ -108,7 +120,8 @@ class HeteroDispatcher:
     def __init__(self, graphs: Dict[str, SimGraph],
                  worklists: Optional[Dict[str, WorklistBackend]] = None,
                  max_iters: int = 64,
-                 buckets: Sequence[int] = BUCKETS):
+                 buckets: Sequence[int] = BUCKETS,
+                 mesh=None, shards: Optional[int] = None):
         from repro.kernels.fifo_eval.ops import make_hetero_batched_eval
         self.max_iters = int(max_iters)
         self.e_pad = 0
@@ -117,7 +130,17 @@ class HeteroDispatcher:
         self._base: Dict[str, object] = {}   # per-design raw operands
         self._ext: Dict[str, object] = {}    # envelope-padded operands
         self.worklists: Dict[str, WorklistBackend] = {}
-        self._call = make_hetero_batched_eval(max_iters)
+        # design-parallel sharding: rows are stacked design-major, so
+        # partitioning the packed batch over the mesh's devices spreads
+        # whole-design blocks across the fleet (2-D campaign meshes put
+        # contiguous designs on contiguous device groups)
+        if mesh is None and shards is not None:
+            from repro.launch.mesh import make_eval_mesh
+            mesh = make_eval_mesh(shards)
+        self.mesh = mesh
+        self.shard_multiple = (int(mesh.devices.size)
+                               if mesh is not None else 1)
+        self._call = make_hetero_batched_eval(max_iters, mesh=mesh)
         self.buckets = tuple(buckets)
         self.stats = HeteroStats()
         worklists = worklists or {}
@@ -176,11 +199,14 @@ class HeteroDispatcher:
 
     def _pad_rows(self, batch: dict, c: int) -> Tuple[dict, int]:
         bucket = next((b for b in self.buckets if b >= c), None)
-        if bucket is None or bucket == c:
+        target = c if bucket is None else bucket
+        k = self.shard_multiple
+        target = -(-target // k) * k           # sharded: even device split
+        if target == c:
             return batch, c
-        pad = bucket - c
-        return {k: np.concatenate([v, np.repeat(v[-1:], pad, axis=0)])
-                for k, v in batch.items()}, bucket
+        pad = target - c
+        return {k_: np.concatenate([v, np.repeat(v[-1:], pad, axis=0)])
+                for k_, v in batch.items()}, target
 
     def dispatch(self, items: List[Tuple[str, np.ndarray]]
                  ) -> List[Tuple[np.ndarray, np.ndarray, np.ndarray]]:

@@ -45,6 +45,23 @@ class _ScanBackend(EvalBackend):
     use_ref = True
     interpret = True
     wants_bucketing = True
+    #: a jax.sharding.Mesh to shard the config-row axis over (None = solo
+    #: jit on the default device); set by the MeshBackend subclass
+    mesh = None
+
+    @property
+    def shard_multiple(self) -> int:
+        """Row counts must be a multiple of this (the mesh size)."""
+        return int(self.mesh.devices.size) if self.mesh is not None else 1
+
+    def _pad_shards(self, m: np.ndarray) -> Tuple[np.ndarray, int]:
+        """Pad rows (repeating the last) to a shard multiple; returns the
+        padded matrix and the real row count to slice results back to."""
+        c = m.shape[0]
+        k = self.shard_multiple
+        if k > 1 and c % k:
+            m = np.concatenate([m, np.repeat(m[-1:], k - c % k, axis=0)])
+        return m, c
 
     def prepare(self, g: SimGraph):
         from repro.kernels.fifo_eval.ops import make_batched_eval
@@ -52,17 +69,18 @@ class _ScanBackend(EvalBackend):
         self.ops = get_operands(g)
         self._call = make_batched_eval(
             g, interpret=self.interpret, use_ref=self.use_ref,
-            max_iters=self.max_iters)
+            max_iters=self.max_iters, mesh=self.mesh)
         self._call_times = None
         return self.ops
 
     def evaluate(self, depth_matrix: np.ndarray
                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         m = np.atleast_2d(np.asarray(depth_matrix, dtype=np.int32))
+        m, c = self._pad_shards(m)
         lat, bram, status = self._call(m)
-        lat = np.asarray(np.rint(lat), dtype=np.int64)
-        bram = np.asarray(bram, dtype=np.int64)
-        return lat, bram, np.asarray(status, dtype=np.int8)
+        lat = np.asarray(np.rint(lat[:c]), dtype=np.int64)
+        bram = np.asarray(bram[:c], dtype=np.int64)
+        return lat, bram, np.asarray(status[:c], dtype=np.int8)
 
     def evaluate_with_times(self, depth_matrix: np.ndarray
                             ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
@@ -73,13 +91,14 @@ class _ScanBackend(EvalBackend):
             from repro.kernels.fifo_eval.ops import make_batched_eval
             self._call_times = make_batched_eval(
                 self.g, interpret=self.interpret, use_ref=self.use_ref,
-                max_iters=self.max_iters, with_times=True)
+                max_iters=self.max_iters, with_times=True, mesh=self.mesh)
         m = np.atleast_2d(np.asarray(depth_matrix, dtype=np.int32))
+        m, c = self._pad_shards(m)
         lat, bram, status, times = self._call_times(m)
-        lat = np.asarray(np.rint(lat), dtype=np.int64)
-        bram = np.asarray(bram, dtype=np.int64)
-        times = np.asarray(np.rint(times), dtype=np.int64)
-        return lat, bram, np.asarray(status, dtype=np.int8), times
+        lat = np.asarray(np.rint(lat[:c]), dtype=np.int64)
+        bram = np.asarray(bram[:c], dtype=np.int64)
+        times = np.asarray(np.rint(times[:c]), dtype=np.int64)
+        return lat, bram, np.asarray(status[:c], dtype=np.int8), times
 
 
 @register_backend

@@ -78,6 +78,12 @@ class CampaignSpec:
     #: Hetero dispatch runs in the scheduler process, so ``workers`` is
     #: ignored in this mode (no pool is spawned)
     hetero: bool = False
+    #: shard batched evaluation over this many jax devices
+    #: (``docs/mesh.md``).  Hetero campaigns shard the packed
+    #: cross-design batch (design-parallel: design-major row blocks land
+    #: on device groups); per-design campaigns force ``backend="mesh"``.
+    #: None = unsharded.
+    shards: Optional[int] = None
     #: rounds between automatic checkpoints (when a path is configured)
     checkpoint_every: int = 8
     #: record per-round (n_evals, hypervolume) trajectories per task —
@@ -100,8 +106,12 @@ class DesignContext:
 
     def __init__(self, name: str, spec: CampaignSpec):
         self.name = name
+        # hetero campaigns shard the packed cross-design dispatch instead
+        # of each per-design evaluator (which only serves incremental and
+        # escalation rows there)
+        shards = None if spec.hetero else spec.shards
         self.advisor = FifoAdvisor(make_design(name), backend=spec.backend,
-                                   max_iters=spec.max_iters)
+                                   max_iters=spec.max_iters, shards=shards)
 
     @property
     def graph(self):
@@ -204,7 +214,8 @@ class Campaign:
             worklists = {k: d.evaluator._worklist
                          for k, d in self.designs.items()}
             hetero = HeteroDispatcher(graphs, worklists,
-                                      max_iters=spec.max_iters)
+                                      max_iters=spec.max_iters,
+                                      shards=spec.shards)
         self.router = RoundRouter(self.designs, pool=self.pool,
                                   hetero=hetero)
 

@@ -57,6 +57,7 @@ def save_checkpoint(campaign, path: str) -> str:
             "max_iters": spec.max_iters,
             "workers": spec.workers,
             "hetero": spec.hetero,
+            "shards": spec.shards,
             "checkpoint_every": spec.checkpoint_every,
             "track_hypervolume": spec.track_hypervolume,
         },

@@ -47,13 +47,16 @@ class CrossSessionBatcher:
     """
 
     def __init__(self, registry: DesignRegistry, hetero: bool = False,
-                 workers: int = 0):
+                 workers: int = 0, shards: Optional[int] = None):
         self.registry = registry
         self.want_hetero = bool(hetero)
         # hetero owns every full-solve row in this process (same rule as
         # CampaignSpec.hetero): a pool would only idle, so the two are
         # mutually exclusive — normalized here, surfaced by the CLI
         self.workers = 0 if hetero else int(workers)
+        #: shard the hetero dispatch over this many jax devices
+        #: (docs/mesh.md); only meaningful with hetero=True
+        self.shards = shards
         self.router = RoundRouter(registry)
         self.rounds = 0
         self._pool_designs: set = set()   # designs the pool was built with
@@ -78,7 +81,8 @@ class CrossSessionBatcher:
             if self.router.hetero is None:
                 from repro.core.backends.dispatch import HeteroDispatcher
                 self.router.hetero = HeteroDispatcher(
-                    {}, max_iters=self.registry.max_iters)
+                    {}, max_iters=self.registry.max_iters,
+                    shards=self.shards)
             self.router.hetero.add_design(
                 name, adv.graph, getattr(adv.evaluator, "_worklist", None))
         elif self.workers > 0:
@@ -157,17 +161,20 @@ class AdvisoryService:
             dispatch (the TPU-native path; on CPU the worklist is faster).
         workers: worklist worker processes for parallel lanes (0 =
             evaluate inline).
+        shards: shard the hetero dispatch over this many jax devices
+            (``docs/mesh.md``); requires ``hetero=True`` to matter.
         progress_events: default per-session progress streaming flag.
     """
 
     def __init__(self, registry: Optional[DesignRegistry] = None,
                  backend: str = "numpy", max_iters: int = 256,
                  hetero: bool = False, workers: int = 0,
+                 shards: Optional[int] = None,
                  progress_events: bool = True):
         self.registry = registry or DesignRegistry(backend=backend,
                                                    max_iters=max_iters)
         self.batcher = CrossSessionBatcher(self.registry, hetero=hetero,
-                                           workers=workers)
+                                           workers=workers, shards=shards)
         self.progress_events = bool(progress_events)
         self.sessions: Dict[str, Session] = {}
         self._next_sid = 0

@@ -80,7 +80,8 @@ class BatchedEvaluator:
 
     def __init__(self, g: SimGraph, max_iters: int = 64,
                  backend: str = "numpy", use_pallas: bool = False,
-                 condense: object = "auto"):
+                 condense: object = "auto",
+                 mesh=None, shards: Optional[int] = None):
         if g.latency_upper_bound() > F32_EXACT_LIMIT:
             raise ValueError(
                 "design schedule bound exceeds float32-exact domain; "
@@ -90,11 +91,23 @@ class BatchedEvaluator:
         self.stats = BatchStats()
         if use_pallas:
             backend = "pallas"
+        # an explicit mesh/shard count selects the sharded scan backend
+        # (docs/mesh.md); "auto" calibration also races it when the
+        # process sees more than one device
+        if (mesh is not None or shards is not None) \
+                and backend not in ("mesh", "sharded"):
+            backend = "mesh"
+        self._mesh, self._shards = mesh, shards
         self.calibration = None
         if backend == "auto":
             backend = self._calibrate()
         self.backend = backend
-        self._impl = get_backend(backend)(max_iters=self.max_iters)
+        if backend in ("mesh", "sharded"):
+            from repro.core.backends.mesh import MeshBackend
+            self._impl = MeshBackend(max_iters=self.max_iters,
+                                     mesh=mesh, shards=shards)
+        else:
+            self._impl = get_backend(backend)(max_iters=self.max_iters)
         self._impl.prepare(g)
         if isinstance(self._impl, WorklistBackend):
             self._worklist = self._impl
@@ -102,7 +115,9 @@ class BatchedEvaluator:
             self._worklist = WorklistBackend(max_iters=self.max_iters)
             self._worklist.prepare(g)
         self.use_pallas = self._impl.name == "pallas"
-        self.dispatch = DispatchPolicy(self._worklist)
+        self.dispatch = DispatchPolicy(
+            self._worklist,
+            shard_multiple=getattr(self._impl, "shard_multiple", 1))
         self._states: "OrderedDict[bytes, WorklistState]" = OrderedDict()
         self.condensation = self._build_cascade(condense)
 
@@ -142,7 +157,7 @@ class BatchedEvaluator:
                 else [condense]
         rungs = []
         for cg in cgs:
-            impl = type(self._impl)(max_iters=self.max_iters)
+            impl = self._impl.spawn()   # keeps mesh/config of the primary
             impl.prepare(cg)
             rungs.append((cg, impl))
         return rungs
@@ -151,7 +166,8 @@ class BatchedEvaluator:
         """One-shot per-design backend calibration (``backend="auto"``).
 
         Times every calibration candidate (the numpy worklist, plus the
-        jax fixpoint when importable — the Pallas kernel is
+        jax fixpoint when importable, plus the sharded mesh backend when
+        the process sees more than one device — the Pallas kernel is
         correctness-grade in CPU interpret mode) through the SAME
         evaluation path production uses — a full ``BatchedEvaluator``
         including each backend's condensation cascade, on a
@@ -164,6 +180,11 @@ class BatchedEvaluator:
         candidates = ["numpy"]
         if importlib.util.find_spec("jax") is not None:
             candidates.append("jax")
+            import jax
+            if jax.device_count() > 1:
+                # sharding only *can* pay with a real multi-device mesh;
+                # the probe decides whether it actually does here
+                candidates.append("mesh")
         u = np.asarray(self.g.upper_bounds, dtype=np.int64)
         rng = np.random.default_rng(0)
         probe = np.stack([np.maximum(

@@ -35,30 +35,30 @@ from repro.kernels.fifo_eval.fifo_eval import fifo_eval_pallas
 from repro.kernels.fifo_eval.ref import fifo_eval_ref, fifo_eval_ref_hetero
 
 
-def make_batched_eval(ev_or_graph, interpret: bool = True,
-                      use_ref: bool = False,
-                      max_iters: int = None,
-                      with_times: bool = False) -> Callable:
-    """Build the batched evaluation closure for a SimGraph.
+def _shard_over_rows(run: Callable, mesh) -> Callable:
+    """Wrap an un-jitted row-batch fixpoint in ``shard_map`` over ``mesh``.
 
-    Accepts either a :class:`~repro.core.simgraph.SimGraph` (raw or
-    condensed — the condensation offsets ride the shared operands) or
-    any object with ``.g`` / ``.max_iters`` (e.g. a ``BatchedEvaluator``).
-    With ``with_times`` the closure returns ``(lat, bram, status, t)``
-    where ``t`` is the (C, E_pad) final event-time matrix the
-    condensation certificate checks; otherwise ``(lat, bram, status)``
-    and the times are dead-code-eliminated inside the jit.
+    Every input and output is partitioned along its leading (config-row)
+    axis across ALL mesh axes jointly, so a 1-D ``("eval",)`` mesh splits
+    a batch into per-device row shards and a 2-D ``("design", "eval")``
+    campaign mesh splits design-major row blocks onto contiguous device
+    groups.  Rows are independent (one fixpoint per candidate config), so
+    sharding is pure row partitioning — bit-identical to the solo path.
+    ``check_rep=False`` because ``lax.while_loop`` has no replication
+    rule; nothing here relies on replication (no collectives at all).
+    The caller must pad the row count to a multiple of the mesh size.
     """
-    g: SimGraph = getattr(ev_or_graph, "g", ev_or_graph)
-    if max_iters is None:
-        max_iters = getattr(ev_or_graph, "max_iters", 64)
-    max_iters = int(max_iters)
-    ops = get_operands(g)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+    spec = PartitionSpec(tuple(mesh.axis_names))
+    return shard_map(run, mesh=mesh, in_specs=spec, out_specs=spec,
+                     check_rep=False)
 
-    inner = fifo_eval_ref if use_ref else functools.partial(
-        fifo_eval_pallas, interpret=interpret, with_times=with_times)
 
-    @jax.jit
+def _make_run(ops, inner, max_iters: int, with_times: bool) -> Callable:
+    """The un-jitted batched fixpoint body shared by the solo jit path
+    and the shard_map-wrapped mesh path."""
+
     def run(depths):                     # (C, F) int32
         rd_lat_e, bp_idx, bp_valid, bp_base, structural = depth_operands(
             ops, depths)
@@ -79,6 +79,43 @@ def make_batched_eval(ev_or_graph, interpret: bool = True,
             return lat, bram, status, times
         return lat, bram, status
 
+    return run
+
+
+def make_batched_eval(ev_or_graph, interpret: bool = True,
+                      use_ref: bool = False,
+                      max_iters: int = None,
+                      with_times: bool = False,
+                      mesh=None) -> Callable:
+    """Build the batched evaluation closure for a SimGraph.
+
+    Accepts either a :class:`~repro.core.simgraph.SimGraph` (raw or
+    condensed — the condensation offsets ride the shared operands) or
+    any object with ``.g`` / ``.max_iters`` (e.g. a ``BatchedEvaluator``).
+    With ``with_times`` the closure returns ``(lat, bram, status, t)``
+    where ``t`` is the (C, E_pad) final event-time matrix the
+    condensation certificate checks; otherwise ``(lat, bram, status)``
+    and the times are dead-code-eliminated inside the jit.
+
+    ``mesh`` (a :class:`jax.sharding.Mesh`) shards the config-row axis
+    across its devices via ``shard_map`` — see
+    :mod:`repro.core.backends.mesh`; the row count must then be a
+    multiple of the mesh size (``MeshBackend`` pads).
+    """
+    g: SimGraph = getattr(ev_or_graph, "g", ev_or_graph)
+    if max_iters is None:
+        max_iters = getattr(ev_or_graph, "max_iters", 64)
+    max_iters = int(max_iters)
+    ops = get_operands(g)
+
+    inner = fifo_eval_ref if use_ref else functools.partial(
+        fifo_eval_pallas, interpret=interpret, with_times=with_times)
+
+    run = _make_run(ops, inner, max_iters, with_times)
+    if mesh is not None:
+        run = _shard_over_rows(run, mesh)
+    run = jax.jit(run)
+
     def call(depth_matrix: np.ndarray
              ) -> Tuple[np.ndarray, ...]:
         return jax.device_get(
@@ -87,7 +124,7 @@ def make_batched_eval(ev_or_graph, interpret: bool = True,
     return call
 
 
-def make_hetero_batched_eval(max_iters: int = 64) -> Callable:
+def make_hetero_batched_eval(max_iters: int = 64, mesh=None) -> Callable:
     """Build the CROSS-DESIGN batched evaluation closure.
 
     Consumes the stacked per-row batch dict produced by
@@ -101,9 +138,15 @@ def make_hetero_batched_eval(max_iters: int = 64) -> Callable:
     Returns ``call(batch) -> (latency i64, bram i64, status i8)``; the
     jit cache is keyed on the batch shape, so callers should bucket the
     total row count (see ``HeteroDispatcher``).
+
+    ``mesh`` shards the packed row batch over the mesh's devices — since
+    every row carries its own event tables, the stacked batch is sharded
+    leaf-by-leaf along rows with zero replication or collectives.  Rows
+    are stacked design-major, so on a 2-D ``("design", "eval")`` campaign
+    mesh contiguous design blocks land on contiguous device groups.  The
+    (bucketed) row count must be a multiple of the mesh size.
     """
 
-    @jax.jit
     def run(b):
         d = b["depths"].astype(jnp.int32)              # (C, F*)
         w = b["widths"].astype(jnp.int32)              # (C, F*)
@@ -135,6 +178,10 @@ def make_hetero_batched_eval(max_iters: int = 64) -> Callable:
             jnp.where(conv, CONVERGED, UNRESOLVED)).astype(jnp.int8)
         bram = jnp.sum(bram_count_jnp(d, w), axis=1).astype(jnp.int32)
         return lat, bram, status
+
+    if mesh is not None:
+        run = _shard_over_rows(run, mesh)
+    run = jax.jit(run)
 
     def call(batch: dict) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         lat, bram, status = jax.device_get(

@@ -44,6 +44,11 @@ def parse_args(argv=None):
     p.add_argument("--hetero", action="store_true",
                    help="pack cross-design batches into one fixpoint "
                         "dispatch (TPU-native path)")
+    p.add_argument("--shards", type=int, default=None, metavar="N",
+                   help="shard batched evaluation over N jax devices "
+                        "(with --hetero: shards the packed cross-design "
+                        "batch; otherwise forces the mesh backend). "
+                        "See docs/mesh.md for CPU host-platform meshes")
     p.add_argument("--checkpoint", default=None, metavar="PATH",
                    help="write campaign state to this .npz periodically")
     p.add_argument("--checkpoint-every", type=int, default=8,
@@ -105,7 +110,7 @@ def main(argv=None) -> int:
             workers=resolve_workers(args.workers
                                     if args.workers is not None
                                     else "auto"),
-            hetero=args.hetero,
+            hetero=args.hetero, shards=args.shards,
             checkpoint_every=args.checkpoint_every,
             track_hypervolume=args.track_hypervolume)
         campaign = Campaign(spec, checkpoint_path=args.checkpoint)
@@ -113,7 +118,8 @@ def main(argv=None) -> int:
               f"({len(campaign.designs)} designs x "
               f"{len(spec.optimizers)} optimizers), backend="
               f"{spec.backend}, workers={spec.workers}"
-              f"{', hetero' if spec.hetero else ''}")
+              f"{', hetero' if spec.hetero else ''}"
+              f"{f', shards={spec.shards}' if spec.shards else ''}")
 
     store = campaign.run(max_rounds=args.max_rounds)
     wall = time.perf_counter() - t0

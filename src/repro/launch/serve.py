@@ -258,6 +258,9 @@ def parse_args(argv=None):
                         "dispatch (TPU-native path)")
     p.add_argument("--workers", type=int, default=0,
                    help="worklist worker processes (0 = inline)")
+    p.add_argument("--shards", type=int, default=None, metavar="N",
+                   help="with --hetero: shard the packed cross-design "
+                        "dispatch over N jax devices (docs/mesh.md)")
     p.add_argument("--no-progress", action="store_true",
                    help="disable per-round progress events")
     return p.parse_args(argv)
@@ -268,9 +271,14 @@ async def amain(args) -> int:
         print("note: --workers is ignored with --hetero (the fused "
               "dispatch owns every full-solve row in this process)",
               file=sys.stderr)
+    if args.shards and not args.hetero:
+        print("note: --shards only shards the --hetero dispatch; "
+              "use --backend mesh for per-design sharding",
+              file=sys.stderr)
     server = AdvisoryServer(backend=args.backend,
                             max_iters=args.max_iters,
                             hetero=args.hetero, workers=args.workers,
+                            shards=args.shards,
                             progress_events=not args.no_progress)
     if args.designs:
         for name in args.designs.split(","):

@@ -5,8 +5,10 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 # NOTE: no xla_force_host_platform_device_count here — smoke tests and
-# benches must see the 1-device default; only launch/dryrun.py (run as a
-# subprocess) requests 512 host devices.
+# benches must see the 1-device default; launch/dryrun.py (run as a
+# subprocess) requests 512 host devices, and tests/test_mesh.py arms a
+# 4-device mesh at its own import (skipping its multi-device tests when
+# the environment got there first).
 
 # Property tests use hypothesis; fall back to the vendored shim when the
 # real package is not installed (some execution environments cannot pip

@@ -42,11 +42,13 @@ def random_chain(seed: int) -> Design:
     return d
 
 
-def test_registry_has_three_canonical_backends():
-    assert set(available_backends()) == {"worklist", "fixpoint", "pallas"}
+def test_registry_has_canonical_backends():
+    assert set(available_backends()) == {"worklist", "fixpoint", "pallas",
+                                         "mesh"}
     # aliases resolve to the same classes
     assert get_backend("numpy") is get_backend("worklist")
     assert get_backend("jax") is get_backend("fixpoint")
+    assert get_backend("sharded") is get_backend("mesh")
     with pytest.raises(ValueError):
         get_backend("nope")
 

@@ -46,11 +46,11 @@ BLOCKS = collect_blocks()
 
 
 def test_docs_have_snippets():
-    """The gate must be guarding something: all seven pages + README."""
+    """The gate must be guarding something: all eight pages + README."""
     pages = {b.values[0] for b in BLOCKS}
     assert "README.md" in pages
     for page in ("architecture", "backends", "campaign", "fuzzing",
-                 "optimizers", "performance", "service"):
+                 "mesh", "optimizers", "performance", "service"):
         assert f"docs/{page}.md" in pages, f"docs/{page}.md has no "\
             "python snippets (or was deleted)"
 
