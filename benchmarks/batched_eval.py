@@ -14,7 +14,7 @@ from typing import Dict
 import numpy as np
 
 from benchmarks.common import Timer, full_mode, save_json
-from repro.core import build_simgraph
+from repro.core import EvalConfig, build_simgraph
 from repro.core.simulate import BatchedEvaluator
 from repro.designs import make_design
 
@@ -35,7 +35,7 @@ def run() -> Dict:
         row = {}
         events_condensed = None
         for backend in ["numpy", "jax"]:
-            ev = BatchedEvaluator(g, backend=backend)
+            ev = BatchedEvaluator(g, EvalConfig(backend=backend, max_iters=64))
             ev.evaluate(cfgs[:2])             # warm / compile
             ev.evaluate(cfgs)                 # warm the batch bucket
             with Timer() as t:

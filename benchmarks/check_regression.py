@@ -206,6 +206,49 @@ def check_fuzz(base, cur, floor, frac, failures):
                 f"{frac:.0%} of baseline {ref:.2f}x")
 
 
+def check_load(base, cur, p99_ceiling, p99_frac, failures):
+    """Gate the service load harness (``benchmarks/load.py``).
+
+    Overload behavior is exact — shedding with a retry hint while
+    respecting the session cap is correctness, not performance.  The
+    latency SLO is a hard p99 ceiling plus a generous baseline-relative
+    band (shared-runner wall clocks are noisy; this catches "the service
+    got an order of magnitude slower", not millisecond drift).
+    """
+    if cur is None:
+        failures.append("load.quick.json missing from current run")
+        return
+    steady, over = cur.get("steady", {}), cur.get("overload", {})
+    if not steady.get("all_completed"):
+        failures.append("load regression: steady-phase sessions never "
+                        "completed")
+    p99 = steady.get("p99_s")
+    if p99 is None or p99 > p99_ceiling:
+        failures.append(
+            f"load SLO violated: steady p99 {p99}s > hard ceiling "
+            f"{p99_ceiling}s")
+    if not over.get("cap_respected"):
+        failures.append(
+            f"load regression: running sessions exceeded max_sessions "
+            f"(observed {over.get('max_running_observed')})")
+    if not over.get("shed_and_recovered"):
+        failures.append(
+            "load regression: overload burst was not shed with "
+            "E_OVERLOADED, or shed clients never recovered")
+    hint = over.get("min_retry_after_s")
+    if hint is None or hint <= 0:
+        failures.append(
+            f"load regression: overload replies carry no positive "
+            f"retry_after_s hint (got {hint})")
+    if base is not None:
+        ref = base.get("steady", {}).get("p99_s")
+        if ref and p99 is not None and p99 > max(
+                p99_frac * ref, p99_ceiling / 2):
+            failures.append(
+                f"load p99 regression: {p99:.3f}s > {p99_frac:.0f}x "
+                f"baseline {ref:.3f}s")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", required=True,
@@ -253,6 +296,14 @@ def main(argv=None) -> int:
     ap.add_argument("--mesh-frac", type=float, default=0.5,
                     help="required fraction of the baseline mesh "
                          "speedup (same-core-count hosts only)")
+    # the steady-phase p99 on the quick mix is ~0.25s on this container;
+    # the ceiling is the SLO ("a session answers within 2s even behind a
+    # queue"), the frac band catches order-of-magnitude slowdowns
+    ap.add_argument("--load-p99", type=float, default=2.0,
+                    help="hard p99 latency ceiling (seconds) for the "
+                         "steady load phase")
+    ap.add_argument("--load-p99-frac", type=float, default=5.0,
+                    help="allowed p99 multiple of the committed baseline")
     args = ap.parse_args(argv)
 
     failures = []
@@ -276,6 +327,9 @@ def main(argv=None) -> int:
     check_mesh(load(args.baseline, "mesh.quick.json"),
                load(args.current, "mesh.quick.json"),
                args.mesh_floor, args.mesh_eff, args.mesh_frac, failures)
+    check_load(load(args.baseline, "load.quick.json"),
+               load(args.current, "load.quick.json"),
+               args.load_p99, args.load_p99_frac, failures)
 
     if failures:
         print("REGRESSION GATE FAILED:")
@@ -285,7 +339,7 @@ def main(argv=None) -> int:
     print("regression gate passed (accuracy exact, cache hit rate held, "
           "campaign + service speedups held, fuzz differential clean, "
           "certification speedup held, condensation exact + still paying, "
-          "mesh sharding exact + scaling)")
+          "mesh sharding exact + scaling, load SLOs + overload shed held)")
     return 0
 
 

@@ -24,7 +24,7 @@ from typing import Dict
 import numpy as np
 
 from benchmarks.common import Timer, geomean, quick_mode, save_json
-from repro.core import build_simgraph
+from repro.core import EvalConfig, build_simgraph
 from repro.core.condense import condense_auto
 from repro.core.simulate import BatchedEvaluator
 from repro.designs import make_design
@@ -69,9 +69,12 @@ def run(seed: int = 0) -> Dict:
         }
         for backend in ["numpy", "jax"]:
             t_raw, r_raw = _bench(
-                BatchedEvaluator(g, backend=backend, condense=None),
+                BatchedEvaluator(
+                    g, EvalConfig(backend=backend, max_iters=64,
+                                  condense=None)),
                 cfgs, reps)
-            ev_c = BatchedEvaluator(g, backend=backend)
+            ev_c = BatchedEvaluator(
+                g, EvalConfig(backend=backend, max_iters=64))
             t_cond, r_cond = _bench(ev_c, cfgs, reps)
             identical = all((a == b).all() for a, b in zip(r_raw, r_cond))
             identical_all &= identical

@@ -1,0 +1,169 @@
+"""Service load harness: open-loop arrivals, latency SLOs, overload shed.
+
+Two phases against an in-process :class:`AdvisoryService` (the same
+engine the TCP/stdio server fronts — ``repro.launch.serve`` adds only
+transport):
+
+``steady``    an *open-loop* arrival process: session open times are
+              drawn up front from a seeded Poisson process and never
+              react to completions (closed-loop harnesses hide overload
+              by slowing the clients down — the classic coordinated-
+              omission trap).  Each session's latency is measured from
+              its *scheduled* arrival to observed completion, so queue
+              buildup is charged to the service, not forgiven.  Reports
+              p50/p99 latency and sustained throughput.
+
+``overload``  a burst of opens against a small ``max_sessions`` cap.
+              The service must shed with ``E_OVERLOADED`` + a positive
+              ``retry_after_s`` hint (never queue invisibly), keep
+              running sessions at or under the cap, and recover: every
+              shed client retries per the hint and eventually finishes.
+
+The SLO gate (``check_load`` in ``benchmarks/check_regression.py``)
+holds p99 under a hard ceiling and overload behavior exact.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import Timer, full_mode, quick_mode, save_json
+
+OPTIMIZERS = ("grouped_sa", "grouped_random")
+
+
+def _params() -> Dict:
+    if quick_mode():
+        return dict(n_sessions=60, budget=12, rate_per_s=40.0)
+    if full_mode():
+        return dict(n_sessions=400, budget=60, rate_per_s=60.0)
+    return dict(n_sessions=150, budget=30, rate_per_s=50.0)
+
+
+def _mix(n: int, seed: int) -> List[tuple]:
+    """(design, optimizer, seed) per session, cycled over the quick set."""
+    from repro.designs import QUICK_DESIGNS
+    designs = sorted(QUICK_DESIGNS)
+    rng = np.random.default_rng(seed)
+    return [(designs[i % len(designs)], OPTIMIZERS[i % len(OPTIMIZERS)],
+             int(rng.integers(0, 1 << 16))) for i in range(n)]
+
+
+def steady_phase(seed: int = 0) -> Dict:
+    from repro.core.service import AdvisoryService
+
+    p = _params()
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / p["rate_per_s"],
+                                         p["n_sessions"]))
+    mix = _mix(p["n_sessions"], seed)
+
+    done_at: Dict[str, float] = {}
+    sched: Dict[str, float] = {}
+    with AdvisoryService(progress_events=False) as svc:
+        for d in sorted({m[0] for m in mix}):
+            svc.registry.register(d)        # trace cost off the clock
+        with Timer() as t:
+            nxt = 0
+            while len(done_at) < p["n_sessions"]:
+                now = time.perf_counter() - t.t0
+                # open-loop: admit every arrival whose time has come,
+                # regardless of how far behind the service is
+                while nxt < p["n_sessions"] and arrivals[nxt] <= now:
+                    d, o, s = mix[nxt]
+                    sess = svc.open_session(d, optimizer=o,
+                                            budget=p["budget"], seed=s)
+                    sched[sess.id] = float(arrivals[nxt])
+                    nxt += 1
+                if not svc.step() and nxt < p["n_sessions"]:
+                    time.sleep(max(0.0, arrivals[nxt] - (
+                        time.perf_counter() - t.t0)))
+                now = time.perf_counter() - t.t0
+                for sid in list(sched):
+                    if svc.session(sid).done and sid not in done_at:
+                        done_at[sid] = now
+        lat = np.array([done_at[sid] - sched[sid] for sid in sched])
+        stats = svc.stats()
+    return {
+        "n_sessions": p["n_sessions"], "budget": p["budget"],
+        "offered_rate_per_s": p["rate_per_s"],
+        "wall_s": round(t.s, 3),
+        "throughput_per_s": round(p["n_sessions"] / t.s, 2),
+        "p50_s": round(float(np.percentile(lat, 50)), 4),
+        "p99_s": round(float(np.percentile(lat, 99)), 4),
+        "max_s": round(float(lat.max()), 4),
+        "rounds": stats["batcher"]["rounds"],
+        "all_completed": len(done_at) == p["n_sessions"],
+    }
+
+
+def overload_phase(seed: int = 1) -> Dict:
+    from repro.core.service import AdvisoryService, ServiceOverloaded
+
+    cap = 8
+    n_burst = 5 * cap
+    mix = _mix(n_burst, seed)
+    rejected = 0
+    retry_hints: List[float] = []
+    max_running = 0
+    with AdvisoryService(progress_events=False, max_sessions=cap) as svc:
+        for d in sorted({m[0] for m in mix}):
+            svc.registry.register(d)
+        pending = list(mix)
+        with Timer() as t:
+            while pending or svc.running:
+                admitted = []
+                for spec in pending:
+                    d, o, s = spec
+                    try:
+                        svc.open_session(d, optimizer=o, budget=12, seed=s)
+                        admitted.append(spec)
+                    except ServiceOverloaded as exc:
+                        rejected += 1
+                        retry_hints.append(exc.retry_after_s)
+                        break          # back off until the hinted retry
+                for spec in admitted:
+                    pending.remove(spec)
+                max_running = max(max_running, len(svc.running))
+                svc.step()
+        stats = svc.stats()
+    return {
+        "max_sessions": cap, "burst": n_burst,
+        "wall_s": round(t.s, 3),
+        "rejected": rejected,
+        "rejected_counter": stats["rejected"],
+        "max_running_observed": max_running,
+        "cap_respected": max_running <= cap,
+        "min_retry_after_s": round(min(retry_hints), 5) if retry_hints
+        else None,
+        "all_completed": stats["n_sessions"] == n_burst,
+        "shed_and_recovered": bool(rejected and stats["n_sessions"]
+                                   == n_burst),
+    }
+
+
+def run(seed: int = 0) -> Dict:
+    out = {"steady": steady_phase(seed),
+           "overload": overload_phase(seed + 1)}
+    save_json("load.json", out)
+    return out
+
+
+def main():
+    out = run()
+    s, o = out["steady"], out["overload"]
+    print(f"steady: {s['n_sessions']} sessions @ "
+          f"{s['offered_rate_per_s']:.0f}/s offered -> "
+          f"{s['throughput_per_s']:.1f}/s served, "
+          f"p50={s['p50_s'] * 1e3:.1f}ms p99={s['p99_s'] * 1e3:.1f}ms")
+    print(f"overload: burst {o['burst']} vs cap {o['max_sessions']}: "
+          f"{o['rejected']} shed (retry_after>="
+          f"{o['min_retry_after_s']}s), max_running="
+          f"{o['max_running_observed']}, recovered={o['all_completed']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -64,7 +64,7 @@ def _bench(ev, cfgs, reps: int):
 
 
 def _measure(seed: int = 0) -> Dict:
-    from repro.core import build_simgraph
+    from repro.core import EvalConfig, build_simgraph
     from repro.core.simulate import BatchedEvaluator
     from repro.designs import make_design
 
@@ -81,13 +81,16 @@ def _measure(seed: int = 0) -> Dict:
         # condensation off isolates the sharded evaluator itself (the
         # cascade rungs shard identically via spawn())
         t_solo, r_solo = _bench(
-            BatchedEvaluator(g, backend="jax", condense=None), cfgs, reps)
+            BatchedEvaluator(
+                g, EvalConfig(backend="jax", max_iters=64,
+                              condense=None)), cfgs, reps)
         row: Dict = {"solo_us_per_config": round(1e6 * t_solo / C, 1),
                      "shards": {}}
         t_by_shards = {}
         for s in SHARD_COUNTS:
             t_s, r_s = _bench(
-                BatchedEvaluator(g, backend="mesh", shards=s,
+                BatchedEvaluator(g, EvalConfig(backend="mesh", max_iters=64,
+                                               shards=s),
                                  condense=None), cfgs, reps)
             identical = all((a == b).all() for a, b in zip(r_solo, r_s))
             identical_all &= identical
@@ -97,8 +100,10 @@ def _measure(seed: int = 0) -> Dict:
                 configs_per_s=round(C / t_s, 1),
                 identical=identical)
         # production-path identity too: full cascade, sharded vs solo
-        ev_m = BatchedEvaluator(g, backend="mesh", shards=MAX_SHARDS)
-        ev_j = BatchedEvaluator(g, backend="jax")
+        ev_m = BatchedEvaluator(
+            g, EvalConfig(backend="mesh", max_iters=64,
+                          shards=MAX_SHARDS))
+        ev_j = BatchedEvaluator(g, EvalConfig(backend="jax", max_iters=64))
         identical = all((a == b).all() for a, b in
                         zip(ev_j.evaluate(cfgs), ev_m.evaluate(cfgs)))
         identical_all &= identical

@@ -11,7 +11,7 @@ from __future__ import annotations
 from typing import Dict
 
 from benchmarks.common import budget, save_json
-from repro.core import FifoAdvisor
+from repro.core import EvalConfig, FifoAdvisor
 from repro.designs import flowgnn_pna, make_design
 
 DESIGNS = {
@@ -26,7 +26,7 @@ def run(seed: int = 0) -> Dict:
     for name, factory in DESIGNS.items():
         row = {}
         for lb in (False, True):
-            adv = FifoAdvisor(factory(), local_bounds=lb)
+            adv = FifoAdvisor(factory(), EvalConfig(local_bounds=lb))
             for opt in ("random", "grouped_sa"):
                 r = adv.run(opt, budget=budget(), seed=seed)
                 sel = r.selected(alpha=0.7)

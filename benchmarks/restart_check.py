@@ -1,0 +1,135 @@
+"""Warm-restart check: cold boot vs snapshot restore, end to end.
+
+Boots the real server (``python -m repro.launch.serve --stdio``) twice
+with the same preloaded design set:
+
+1. **cold** — traces every design from scratch, serves one session,
+   writes a snapshot via the ``snapshot`` op, and shuts down;
+2. **warm** — same command line; the server finds the snapshot, restores
+   the registry from it, serves the same session, and shuts down.
+
+Asserts that the warm registry-ready time (parsed from the server's
+``registry ready in ...`` stderr line, which excludes interpreter/jax
+startup) beats cold by at least ``--min-speedup`` (default 10x), and
+that the warm session's frontier is bit-identical to the cold one —
+restoring state must never change answers.
+
+  PYTHONPATH=src python benchmarks/restart_check.py
+Exit code 0 = both hold.  CI runs this as the warm-restart gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+#: the served design set: every StreamHLS benchmark design, so the cold
+#: boot pays the full tracing bill the snapshot is meant to erase
+DESIGNS = ("gemm,FeedForward,atax,bicg,gesummv,k15mmseq,ResMLP,"
+           "Autoencoder,DepthSepConvBlock,ResidualBlock,k15mmseq_relu,"
+           "k15mmseq_imbalanced")
+READY_RE = re.compile(
+    r"registry ready in ([0-9.]+)s \((cold|warm, (\d+) restored)\)")
+
+
+def boot(snapshot_dir: str, take_snapshot: bool, budget: int) -> dict:
+    """One server lifetime over stdio; returns parsed timings + result."""
+    script = [
+        {"op": "hello", "proto": 2},
+        {"op": "open", "design": "gemm", "optimizer": "grouped_sa",
+         "budget": budget, "seed": 0, "id": "open"},
+        {"op": "run"},
+        {"op": "result", "session": "s0", "id": "result"},
+    ]
+    if take_snapshot:
+        script.append({"op": "snapshot", "id": "snap"})
+    script.append({"op": "shutdown"})
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--stdio",
+         "--no-progress", "--snapshot-dir", snapshot_dir,
+         "--designs", DESIGNS],
+        input="".join(json.dumps(m) + "\n" for m in script),
+        capture_output=True, text=True,
+        env=dict(os.environ, PYTHONPATH="src"), timeout=600)
+    if proc.returncode != 0:
+        raise RuntimeError(f"server exited {proc.returncode}:\n"
+                           f"{proc.stderr[-2000:]}")
+    m = READY_RE.search(proc.stderr)
+    if not m:
+        raise RuntimeError(f"no 'registry ready' line in stderr:\n"
+                           f"{proc.stderr[-2000:]}")
+    frames = [json.loads(line) for line in proc.stdout.splitlines()
+              if line.strip()]
+    by_id = {f["id"]: f for f in frames if "id" in f}
+    if take_snapshot and not by_id.get("snap", {}).get("ok"):
+        raise RuntimeError(f"snapshot op failed: {by_id.get('snap')}")
+    return {
+        "ready_s": float(m.group(1)),
+        "warm": m.group(2) != "cold",
+        "restored": int(m.group(3)) if m.group(3) else 0,
+        "frontier": by_id["result"]["result"]["frontier"],
+        "n_evals": by_id["result"]["result"]["n_evals"],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--min-speedup", type=float, default=10.0,
+                    help="required cold/warm registry-ready ratio")
+    ap.add_argument("--budget", type=int, default=60)
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="snapshot directory (default: a temp dir)")
+    args = ap.parse_args(argv)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        snap_dir = args.snapshot_dir or os.path.join(tmp, "snap")
+        cold = boot(snap_dir, take_snapshot=True, budget=args.budget)
+        warm = boot(snap_dir, take_snapshot=False, budget=args.budget)
+
+    n_designs = len(DESIGNS.split(","))
+    speedup = cold["ready_s"] / max(warm["ready_s"], 1e-9)
+    print(f"cold ready: {cold['ready_s'] * 1e3:8.1f} ms "
+          f"({n_designs} designs traced)")
+    print(f"warm ready: {warm['ready_s'] * 1e3:8.1f} ms "
+          f"({warm['restored']} restored from snapshot)")
+    print(f"speedup:    {speedup:8.1f}x (required: "
+          f">={args.min_speedup:.0f}x)")
+    print(f"warm first answer: n_evals={warm['n_evals']} "
+          f"(cold: {cold['n_evals']})")
+
+    failures = []
+    if cold["warm"]:
+        failures.append("first boot unexpectedly found a snapshot")
+    if not warm["warm"] or warm["restored"] != n_designs:
+        failures.append(
+            f"second boot did not restore all {n_designs} designs "
+            f"(restored={warm['restored']})")
+    if speedup < args.min_speedup:
+        failures.append(
+            f"warm restart speedup {speedup:.1f}x below required "
+            f"{args.min_speedup:.0f}x")
+    if warm["frontier"] != cold["frontier"]:
+        failures.append(
+            "warm frontier differs from cold — snapshot restore changed "
+            "answers")
+    if warm["n_evals"] != 0:
+        failures.append(
+            f"warm run simulated {warm['n_evals']} configs; the restored "
+            "cache should serve every one")
+    if failures:
+        print("WARM-RESTART CHECK FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("warm-restart check passed (snapshot restore fast + "
+          "bit-identical)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -103,6 +103,14 @@ def _fuzz() -> str:
             f"cert_speedup={fz['cert_geomean_speedup']:.2f}x")
 
 
+def _load() -> str:
+    from benchmarks import load
+    ld = load.run()
+    s, o = ld["steady"], ld["overload"]
+    return (f"p99_s={s['p99_s']};throughput={s['throughput_per_s']}/s;"
+            f"shed={o['rejected']};cap_respected={o['cap_respected']}")
+
+
 def _pruning() -> str:
     from benchmarks import pruning
     k = pruning.run()["k15mmtree"]
@@ -133,6 +141,7 @@ STEPS = [
     ("condense", _condense),
     ("mesh", _mesh),
     ("cache_lookup", _cache_lookup),
+    ("load", _load),
     ("fuzz", _fuzz),
     ("pruning", _pruning),
     ("roofline", _roofline),

@@ -21,7 +21,7 @@ import numpy as np
 
 from benchmarks.common import (Timer, budget, design_set, full_mode,
                                geomean, quick_mode, save_json)
-from repro.core import FifoAdvisor, simulate
+from repro.core import EvalConfig, FifoAdvisor, simulate
 from repro.core.backends import worklist as wl
 from repro.core.optimizers import PAPER_OPTIMIZERS
 from repro.core.simulate import BatchedEvaluator
@@ -48,7 +48,7 @@ def backend_throughput(g, seed: int = 0) -> Dict:
     backends = ["numpy", "jax"] + (["pallas"] if full_mode() else [])
     for backend in backends:
         n = C if backend != "pallas" else 8
-        ev = BatchedEvaluator(g, backend=backend)
+        ev = BatchedEvaluator(g, EvalConfig(backend=backend, max_iters=64))
         ev.evaluate(cfgs[:2])              # warm / compile
         ev.evaluate(cfgs[:n])              # warm the batch bucket
         with Timer() as t:
@@ -60,7 +60,7 @@ def backend_throughput(g, seed: int = 0) -> Dict:
                             condensation=ev.condensation_info())
     # one-shot per-design backend calibration (DispatchPolicy satellite):
     # which backend the auto probe would pick, and the probe timings
-    ev_auto = BatchedEvaluator(g, backend="auto")
+    ev_auto = BatchedEvaluator(g, EvalConfig(backend="auto", max_iters=64))
     out["auto"] = dict(chosen=ev_auto.calibration["chosen"],
                        probe_s={k: round(v, 5) for k, v in
                                 ev_auto.calibration["probe_s"].items()})

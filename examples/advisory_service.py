@@ -29,25 +29,25 @@ def main():
     # interleave a few rounds, then one client disconnects
     for _ in range(4):
         client.request({"op": "step"})
-    print(f"cancelling {c} mid-run:", client.cancel(c))
+    print(f"cancelling {c} mid-run:", c.cancel())
 
     client.drive()   # run the survivors to completion
 
-    for sid in (a, b):
-        st = client.status(sid)
-        print(f"{sid}: {st['design']}/{st['optimizer']} -> {st['state']} "
+    for h in (a, b):
+        st = h.status()
+        print(f"{h}: {st['design']}/{st['optimizer']} -> {st['state']} "
               f"after {st['rounds']} rounds, {st['n_evals']} simulated")
-        for ev in client.events(sid)[-3:]:
+        for ev in client.events(h)[-3:]:
             print(f"   {ev['event']:9s} frontier={ev['frontier_size']} "
                   f"hv={ev['hypervolume']:.0f}")
 
     # the service guarantee: batched == solo, bit for bit
-    served = client.result(a)
+    served = a.result()
     solo = FifoAdvisor(make_design("gemm")).run("grouped_sa", budget=200,
                                                 seed=0)
     assert np.array_equal(served.frontier_points, solo.frontier_points)
     print("\nserved frontier == solo frontier:", True)
-    print("selected (alpha=0.7):", client.result_json(a)["selected"])
+    print("selected (alpha=0.7):", a.result_json()["selected"])
 
     stats = client.request({"op": "stats"})["stats"]
     print(f"service: {stats['n_sessions']} sessions, "

@@ -3,7 +3,7 @@
   PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core import FifoAdvisor
+from repro.core import EvalConfig, FifoAdvisor
 from repro.core.design import Design
 
 
@@ -47,7 +47,7 @@ def main():
     # backend="numpy" (default) is the worklist evaluator with the
     # incremental fast path; "jax" / "pallas" select the batched scan
     # backends (docs/backends.md)
-    advisor = FifoAdvisor(build_design(), backend="numpy")
+    advisor = FifoAdvisor(build_design(), EvalConfig(backend="numpy"))
     print(f"Baseline-Max: latency={advisor.baseline_max.latency} "
           f"BRAMs={advisor.baseline_max.bram}")
     print(f"Baseline-Min: latency={advisor.baseline_min.latency} "

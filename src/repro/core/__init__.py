@@ -13,6 +13,7 @@ from repro.core.backends import (ConfigCache, EvalBackend,
                                  register_backend)
 from repro.core.condense import (CondensedGraph, condense, condense_auto,
                                  expand_times, verify_rows)
+from repro.core.config import EvalConfig, resolve_config
 from repro.core.deadlock import (CertificationResult, WaitForGraph,
                                  certify_min_depths, deadlock_blame,
                                  extract_wait_graph)
@@ -24,10 +25,10 @@ from repro.core.tracer import Trace, collect_trace
 
 __all__ = [
     "Baseline", "BatchedEvaluator", "CertificationResult", "CondensedGraph",
-    "ConfigCache", "Design", "DseResult", "EvalBackend", "Fifo",
+    "ConfigCache", "Design", "DseResult", "EvalBackend", "EvalConfig", "Fifo",
     "FifoAdvisor", "SimGraph", "SimResult", "Task", "Trace", "WaitForGraph",
     "available_backends", "build_simgraph", "certify_min_depths",
     "collect_trace", "condense", "condense_auto", "deadlock_blame",
     "evaluate_np", "expand_times", "extract_wait_graph", "get_backend",
-    "register_backend", "simulate", "verify_rows",
+    "register_backend", "resolve_config", "simulate", "verify_rows",
 ]

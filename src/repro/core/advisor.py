@@ -10,11 +10,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.core.backends import ConfigCache
+from repro.core.config import EvalConfig, resolve_config
 from repro.core.design import Design
 from repro.core.optimizers import OPTIMIZERS, EvalContext, OptResult
 from repro.core.pareto import hypervolume_2d, select_alpha_point
@@ -132,55 +134,45 @@ class FifoAdvisor:
 
     Args:
         design: the dataflow design to size.
+        config: an :class:`~repro.core.config.EvalConfig` — backend,
+            iteration cap, condensation, sharding, and the pruning
+            flags, in one frozen serializable object (the same one the
+            service registry, campaign specs, and snapshots carry).
         upper_bounds: per-FIFO depth caps (default: declared/observed).
-        occupancy_cap: collapse candidates above observed occupancy
-            (beyond-paper pruning; behaviour-preserving).
-        local_bounds: sound per-FIFO lower bounds from task-pair
-            feasibility (beyond-paper pruning).
-        certified_floor: clamp every search to depths at or above
-            :meth:`min_safe_depths` — feasibility is monotone in depth,
-            so every sampled configuration is then deadlock-free by
-            construction (``docs/fuzzing.md``).
-        use_pallas / backend / max_iters: evaluator selection — see
-            ``docs/backends.md``.  ``backend="auto"`` runs a one-shot
-            calibration probe and picks the fastest backend.
-        mesh / shards: shard batched evaluation across a jax device
-            mesh (``docs/mesh.md``).  Either forces ``backend="mesh"``;
-            ``shards=N`` uses the first N devices, ``mesh=`` an explicit
-            :class:`jax.sharding.Mesh`.
-        condense: event-graph condensation — ``"auto"`` (default)
-            condenses once at trace time and routes evaluation batches
-            through the certified rung cascade; ``None`` disables it
-            (``docs/performance.md``).
+            A runtime array, so it stays outside ``EvalConfig``.
+        mesh: an explicit :class:`jax.sharding.Mesh` to shard batched
+            evaluation over (``docs/mesh.md``); forces the mesh
+            backend.  Runtime-only, like ``upper_bounds``.
+
+    The pre-``EvalConfig`` keyword spellings (``backend=``,
+    ``max_iters=``, ``condense=``, ``shards=``, ``use_pallas=``,
+    ``occupancy_cap=``, ``local_bounds=``, ``certified_floor=``) still
+    work for one release and emit a :class:`DeprecationWarning`.
     """
 
-    def __init__(self, design: Design,
-                 upper_bounds: Optional[np.ndarray] = None,
-                 occupancy_cap: bool = False,
-                 local_bounds: bool = False,
-                 certified_floor: bool = False,
-                 use_pallas: bool = False,
-                 backend: str = "numpy",
-                 max_iters: int = 256,
-                 condense: object = "auto",
-                 mesh=None, shards: Optional[int] = None):
+    def __init__(self, design: Design, config: Optional[EvalConfig] = None,
+                 *, upper_bounds: Optional[np.ndarray] = None,
+                 mesh=None, **legacy):
+        if config is not None and not isinstance(config, EvalConfig):
+            # pre-EvalConfig signature: the second positional argument
+            # was the upper_bounds array
+            warnings.warn(
+                "FifoAdvisor(design, upper_bounds) positional form is "
+                "deprecated; pass upper_bounds= by keyword",
+                DeprecationWarning, stacklevel=2)
+            upper_bounds, config = np.asarray(config), None
+        self.config = resolve_config(config, legacy, "FifoAdvisor")
         t0 = time.perf_counter()
         self.design = design
         self.trace: Trace = collect_trace(design)
         self.graph: SimGraph = build_simgraph(design, self.trace)
-        self.evaluator = BatchedEvaluator(self.graph, max_iters=max_iters,
-                                          backend=backend,
-                                          use_pallas=use_pallas,
-                                          condense=condense,
-                                          mesh=mesh, shards=shards)
+        self.evaluator = BatchedEvaluator(self.graph, self.config,
+                                          mesh=mesh)
         # One evaluation cache for the whole advisor session: every
         # optimizer run (and the baselines) shares hits.
         self.cache = ConfigCache(self.graph.n_fifos)
         self.trace_time_s = time.perf_counter() - t0
         self._upper_bounds = upper_bounds
-        self._occupancy_cap = occupancy_cap
-        self._local_bounds = local_bounds
-        self._certified_floor = certified_floor
         self._certification = None   # cached CertificationResult
         self._lb_cache: Optional[np.ndarray] = None
         self._incr_base: Optional[np.ndarray] = None
@@ -188,6 +180,57 @@ class FifoAdvisor:
         ctx = self._fresh_ctx(seed=0)
         self.baseline_max = self._baseline(ctx.baseline_max())
         self.baseline_min = self._baseline(ctx.baseline_min())
+
+    @classmethod
+    def restore(cls, design: Design, *, trace: Trace, graph: SimGraph,
+                config: EvalConfig, upper_bounds=None, rungs=None,
+                baseline_max: "Baseline", baseline_min: "Baseline",
+                certification=None, lb_cache=None,
+                cache_data=None) -> "FifoAdvisor":
+        """Rebuild an advisor from previously computed parts.
+
+        The warm-restart constructor behind
+        :mod:`repro.core.service.snapshot`: the expensive artifacts —
+        trace, simgraph, condensation ``rungs``, deadlock
+        ``certification``, and the evaluation-cache contents
+        (``cache_data`` = ``(rows, lat, bram, dead)`` in insertion
+        order) — are handed in instead of recomputed, so construction
+        is milliseconds.  A restored advisor is bit-identical to a
+        freshly traced one in everything observable but wall-clock
+        (``trace_time_s`` records the restore time) and ``n_evals``
+        (cache hits are not re-simulated).
+        """
+        t0 = time.perf_counter()
+        self = cls.__new__(cls)
+        self.config = config
+        self.design = design
+        self.trace = trace
+        self.graph = graph
+        self.evaluator = BatchedEvaluator(graph, config, rungs=rungs)
+        self.cache = ConfigCache(graph.n_fifos)
+        if cache_data is not None:
+            self.cache.load_rows(*cache_data)
+        self._upper_bounds = upper_bounds
+        self._certification = certification
+        self._lb_cache = lb_cache
+        self._incr_base = None
+        self.baseline_max = baseline_max
+        self.baseline_min = baseline_min
+        self.trace_time_s = time.perf_counter() - t0
+        return self
+
+    # Read-only views kept for the pre-EvalConfig attribute spellings.
+    @property
+    def _occupancy_cap(self) -> bool:
+        return self.config.occupancy_cap
+
+    @property
+    def _local_bounds(self) -> bool:
+        return self.config.local_bounds
+
+    @property
+    def _certified_floor(self) -> bool:
+        return self.config.certified_floor
 
     def make_context(self, seed: int = 0) -> EvalContext:
         """A fresh :class:`EvalContext` sharing this advisor's evaluator,

@@ -162,6 +162,40 @@ class ConfigCache:
             new[: self._n] = old[: self._n]
             setattr(self, name, new)
 
+    def load_rows(self, rows: np.ndarray, lat: np.ndarray,
+                  bram: np.ndarray, dead: np.ndarray) -> None:
+        """Bulk-restore cache contents (the snapshot warm-start path).
+
+        ``rows`` must be the insertion-order contents of a previously
+        populated cache (as snapshotted from ``_rows[:_n]``) — already
+        deduplicated, so every row hash is unique and the restored
+        first-winner ``_map`` matches the original insert order exactly.
+        One vectorized pass instead of :meth:`insert`'s per-row loop;
+        the sorted lookup index is rebuilt eagerly so the first lookup
+        after a warm restart pays no argsort.
+        """
+        if self._n:
+            raise ValueError("load_rows requires an empty cache")
+        m = np.atleast_2d(np.asarray(rows, dtype=np.int64))
+        C = m.shape[0]
+        if C == 0:
+            return
+        self._grow_to(C)
+        hashes = self._hash_rows(m)
+        self._rows[:C] = m
+        self._lat[:C] = np.asarray(lat, dtype=np.int64)
+        self._bram[:C] = np.asarray(bram, dtype=np.int64)
+        self._dead[:C] = np.asarray(dead, dtype=bool)
+        self._hashes[:C] = hashes
+        self._n = C
+        self._map = {}
+        for i, h in enumerate(hashes.tolist()):
+            self._map.setdefault(int(h), i)
+        order = np.argsort(hashes, kind="stable")
+        self._sorted_h = hashes[order]
+        self._sorted_idx = order.astype(np.int64)
+        self._tail_start = C
+
     def insert(self, depth_matrix: np.ndarray, lat: np.ndarray,
                bram: np.ndarray, dead: np.ndarray):
         """Record evaluated rows (duplicates of cached rows are skipped)."""

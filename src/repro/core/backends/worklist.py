@@ -61,12 +61,12 @@ def _worklist_tables(g: SimGraph):
     F = g.n_fifos
     reader_seg = np.full(F, -1, dtype=np.int64)
     writer_seg = np.full(F, -1, dtype=np.int64)
-    for e in range(E):
-        f = int(g.fifo[e])
-        if g.kind[e] == READ:
-            reader_seg[f] = seg_of_evt[e]
-        else:
-            writer_seg[f] = seg_of_evt[e]
+    # the owning segment of each fifo endpoint is the LAST event touching
+    # it; seg_of_evt is nondecreasing, so last-touched == max over touches
+    fifo_idx = g.fifo.astype(np.int64)
+    is_read = g.kind == READ
+    np.maximum.at(reader_seg, fifo_idx[is_read], seg_of_evt[is_read])
+    np.maximum.at(writer_seg, fifo_idx[~is_read], seg_of_evt[~is_read])
     kind = g.kind.astype(np.int64)
     fifo = g.fifo.astype(np.int64)
     delta = g.delta.astype(np.int64)

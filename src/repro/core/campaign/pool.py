@@ -50,8 +50,9 @@ class _WorkerDesign:
             from repro.designs import make_design
             design = make_design(name)
             graph = build_simgraph(design, collect_trace(design))
-        self.ev = BatchedEvaluator(graph, max_iters=max_iters,
-                                   backend="numpy")
+        from repro.core.config import EvalConfig
+        self.ev = BatchedEvaluator(
+            graph, EvalConfig(backend="numpy", max_iters=max_iters))
 
     def evaluate(self, depths: np.ndarray, base: Optional[np.ndarray]
                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:

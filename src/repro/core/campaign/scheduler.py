@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core.advisor import FifoAdvisor
 from repro.core.campaign.router import RoundRouter, RoutedRequest
+from repro.core.config import EvalConfig
 from repro.core.optimizers import OPTIMIZERS, OptResult
 from repro.core.pareto import hypervolume_2d
 from repro.designs import QUICK_DESIGNS, make_design
@@ -62,15 +63,26 @@ class TaskSpec:
 
 @dataclasses.dataclass(frozen=True)
 class CampaignSpec:
-    """What to run and how to evaluate it."""
+    """What to run and how to evaluate it.
+
+    How to *evaluate* lives in ``eval`` (an
+    :class:`~repro.core.config.EvalConfig` — the same object advisors,
+    the service registry, and snapshots carry); the remaining fields are
+    scheduling concerns.  The pre-``EvalConfig`` spellings
+    (``backend=``/``max_iters=``/``shards=`` directly on the spec) still
+    construct and read correctly — they emit a
+    :class:`DeprecationWarning` and are folded into ``eval``; the
+    attributes remain readable as views of it.
+    """
 
     designs: Tuple[str, ...]
     optimizers: Tuple[str, ...]
     budget: int = 300
     seed: int = 0
-    #: per-design evaluator backend ("numpy" worklist is the CPU fast path)
-    backend: str = "numpy"
-    max_iters: int = 256
+    #: deprecated spelling of ``eval.backend``
+    backend: Optional[str] = None
+    #: deprecated spelling of ``eval.max_iters``
+    max_iters: Optional[int] = None
     #: worklist worker processes; 0 = evaluate inline in this process
     workers: int = 0
     #: pack cross-design full-solve batches into one fixpoint dispatch
@@ -78,11 +90,9 @@ class CampaignSpec:
     #: Hetero dispatch runs in the scheduler process, so ``workers`` is
     #: ignored in this mode (no pool is spawned)
     hetero: bool = False
-    #: shard batched evaluation over this many jax devices
-    #: (``docs/mesh.md``).  Hetero campaigns shard the packed
-    #: cross-design batch (design-parallel: design-major row blocks land
-    #: on device groups); per-design campaigns force ``backend="mesh"``.
-    #: None = unsharded.
+    #: deprecated spelling of ``eval.shards``.  Hetero campaigns shard
+    #: the packed cross-design batch (design-parallel); per-design
+    #: campaigns force ``backend="mesh"``.  None = unsharded.
     shards: Optional[int] = None
     #: rounds between automatic checkpoints (when a path is configured)
     checkpoint_every: int = 8
@@ -90,10 +100,32 @@ class CampaignSpec:
     #: costs a full frontier recomputation per task per round, so it is
     #: off by default and meant for convergence studies
     track_hypervolume: bool = False
+    #: how to evaluate candidate configurations (``docs/campaign.md``)
+    eval: Optional[EvalConfig] = None
 
     def __post_init__(self):
         object.__setattr__(self, "designs", tuple(self.designs))
         object.__setattr__(self, "optimizers", tuple(self.optimizers))
+        legacy = {k: getattr(self, k)
+                  for k in ("backend", "max_iters", "shards")
+                  if getattr(self, k) is not None}
+        if self.eval is None:
+            if legacy:
+                import warnings
+                warnings.warn(
+                    f"CampaignSpec({', '.join(sorted(legacy))}=...) is "
+                    f"deprecated; pass eval=EvalConfig(...) instead",
+                    DeprecationWarning, stacklevel=3)
+            object.__setattr__(self, "eval", EvalConfig(**legacy))
+        elif legacy:
+            raise TypeError(
+                f"CampaignSpec: pass either eval=EvalConfig(...) or the "
+                f"deprecated field(s) {sorted(legacy)}, not both")
+        # keep the deprecated fields readable as views of ``eval`` (the
+        # whole codebase reads spec.backend / spec.max_iters / spec.shards)
+        object.__setattr__(self, "backend", self.eval.backend)
+        object.__setattr__(self, "max_iters", self.eval.max_iters)
+        object.__setattr__(self, "shards", self.eval.shards)
 
     def tasks(self) -> List[TaskSpec]:
         return [TaskSpec(design=d, optimizer=o, seed=self.seed,
@@ -109,9 +141,10 @@ class DesignContext:
         # hetero campaigns shard the packed cross-design dispatch instead
         # of each per-design evaluator (which only serves incremental and
         # escalation rows there)
-        shards = None if spec.hetero else spec.shards
-        self.advisor = FifoAdvisor(make_design(name), backend=spec.backend,
-                                   max_iters=spec.max_iters, shards=shards)
+        cfg = spec.eval
+        if spec.hetero and cfg.shards is not None:
+            cfg = cfg.replace(shards=None)
+        self.advisor = FifoAdvisor(make_design(name), cfg)
 
     @property
     def graph(self):
@@ -340,6 +373,17 @@ class Campaign:
         spec_dict = dict(data["spec"])
         if workers is not None:
             spec_dict["workers"] = workers
+        ev = spec_dict.pop("eval", None)
+        if ev is not None:
+            spec_dict["eval"] = EvalConfig.from_dict(ev)
+        else:
+            # version-1 checkpoint: the eval knobs were spec fields;
+            # fold them into an EvalConfig without a deprecation warning
+            # (resuming old state is supported, not deprecated)
+            spec_dict["eval"] = EvalConfig(**{
+                k: spec_dict.pop(k)
+                for k in ("backend", "max_iters", "shards")
+                if spec_dict.get(k) is not None})
         spec = CampaignSpec(**spec_dict)
         tasks = [TaskSpec(design=t["design"], optimizer=t["optimizer"],
                           seed=t["seed"], budget=t["budget"],

@@ -30,7 +30,11 @@ from typing import Dict
 
 import numpy as np
 
-CHECKPOINT_VERSION = 1
+#: version 2 records the evaluation knobs as one ``eval`` EvalConfig
+#: dict; version-1 checkpoints (flat backend/max_iters/shards keys) are
+#: still loadable — ``Campaign.resume`` folds them into an EvalConfig
+CHECKPOINT_VERSION = 2
+_READABLE_VERSIONS = (1, 2)
 
 
 class CheckpointMismatch(RuntimeError):
@@ -53,11 +57,9 @@ def save_checkpoint(campaign, path: str) -> str:
             "optimizers": list(spec.optimizers),
             "budget": spec.budget,
             "seed": spec.seed,
-            "backend": spec.backend,
-            "max_iters": spec.max_iters,
+            "eval": spec.eval.to_dict(),
             "workers": spec.workers,
             "hetero": spec.hetero,
-            "shards": spec.shards,
             "checkpoint_every": spec.checkpoint_every,
             "track_hypervolume": spec.track_hypervolume,
         },
@@ -106,10 +108,10 @@ def load_checkpoint(path: str) -> Dict:
     """Read a checkpoint into ``{spec, round, tasks, histories}``."""
     with np.load(path, allow_pickle=False) as z:
         manifest = json.loads(str(z["manifest"]))
-        if manifest["version"] != CHECKPOINT_VERSION:
+        if manifest["version"] not in _READABLE_VERSIONS:
             raise CheckpointMismatch(
-                f"checkpoint version {manifest['version']} != "
-                f"{CHECKPOINT_VERSION}")
+                f"checkpoint version {manifest['version']} not in "
+                f"readable versions {_READABLE_VERSIONS}")
         histories = []
         for i in range(len(manifest["tasks"])):
             histories.append((z[f"t{i}_configs"], z[f"t{i}_lat"],

@@ -1,0 +1,134 @@
+"""EvalConfig: the one frozen, serializable evaluation configuration.
+
+Every engine that evaluates depth configurations — ``FifoAdvisor``,
+``BatchedEvaluator``, the service ``DesignRegistry``, campaign specs,
+and the launch CLIs — used to grow its own copy of the same kwarg
+sprawl (``backend/max_iters/condense/shards/use_pallas/...``).  This
+module consolidates them into one frozen dataclass that
+
+* round-trips through JSON (:meth:`EvalConfig.to_dict` /
+  :meth:`EvalConfig.from_dict`) so snapshots and campaign checkpoints
+  can persist it verbatim;
+* hashes and compares by value (``frozen=True``), so registries and
+  caches can key on it;
+* carries only *serializable* knobs.  Runtime-only objects stay
+  explicit keyword arguments on the consumers: a ``jax.sharding.Mesh``
+  and per-design ``upper_bounds`` arrays on ``FifoAdvisor``, prebuilt
+  ``CondensedGraph`` rung lists (``rungs=``) on ``BatchedEvaluator``.
+
+The legacy keyword spellings still work for one release through
+:func:`resolve_config`, which maps them 1:1 onto an ``EvalConfig`` and
+emits a :class:`DeprecationWarning`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional
+
+__all__ = ["EvalConfig", "resolve_config"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalConfig:
+    """How to evaluate candidate depth configurations.
+
+    Args:
+        backend: evaluation backend — ``"numpy"``/``"worklist"`` (CPU
+            fast path with incremental re-simulation), ``"jax"`` /
+            ``"fixpoint"``, ``"pallas"``, ``"mesh"``, or ``"auto"``
+            (one-shot per-design calibration probe).  See
+            ``docs/backends.md``.
+        max_iters: fixpoint iteration cap for the batched backends.
+        condense: event-graph condensation — ``"auto"`` condenses once
+            per design and routes batches through the certified rung
+            cascade; ``None`` disables it (``docs/performance.md``).
+        shards: shard batched evaluation over this many jax devices
+            (forces the mesh backend; ``docs/mesh.md``).  None =
+            unsharded.
+        occupancy_cap: collapse candidates above observed occupancy
+            (beyond-paper pruning; behaviour-preserving).
+        local_bounds: sound per-FIFO lower bounds from task-pair
+            feasibility (beyond-paper pruning).
+        certified_floor: clamp every search to depths at or above the
+            certified minimal safe depths (``docs/fuzzing.md``).
+    """
+
+    backend: str = "numpy"
+    max_iters: int = 256
+    condense: Optional[str] = "auto"
+    shards: Optional[int] = None
+    occupancy_cap: bool = False
+    local_bounds: bool = False
+    certified_floor: bool = False
+
+    def __post_init__(self):
+        if self.condense not in ("auto", None):
+            raise ValueError(
+                f"EvalConfig.condense must be 'auto' or None, got "
+                f"{self.condense!r} (pass prebuilt rungs via the "
+                f"evaluator's rungs= argument instead)")
+        object.__setattr__(self, "max_iters", int(self.max_iters))
+        if self.shards is not None:
+            object.__setattr__(self, "shards", int(self.shards))
+
+    # ------------------------------------------------------ serialization
+    def to_dict(self) -> dict:
+        """JSON-ready dict; ``from_dict`` round-trips it exactly."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "EvalConfig":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(
+                f"unknown EvalConfig field(s) {sorted(unknown)}; "
+                f"expected a subset of {sorted(known)}")
+        return cls(**d)
+
+    def replace(self, **changes) -> "EvalConfig":
+        """A copy with the given fields replaced."""
+        return dataclasses.replace(self, **changes)
+
+
+#: legacy keyword -> EvalConfig field (1:1 except use_pallas)
+_LEGACY_KEYS = ("backend", "max_iters", "condense", "shards",
+                "occupancy_cap", "local_bounds", "certified_floor",
+                "use_pallas")
+
+
+def resolve_config(config: Optional[EvalConfig], legacy: dict,
+                   where: str, default: Optional[EvalConfig] = None,
+                   stacklevel: int = 3) -> EvalConfig:
+    """Merge deprecated keyword arguments into an :class:`EvalConfig`.
+
+    ``legacy`` is the consumer's ``**kwargs`` dict.  Unknown keys raise
+    ``TypeError`` (same contract as a plain signature); known legacy
+    keys emit one :class:`DeprecationWarning` and map onto a fresh
+    config (``use_pallas=True`` maps to ``backend="pallas"``).  Passing
+    both ``config`` and legacy keywords is an error — silently merging
+    them would hide which one wins.
+    """
+    unknown = [k for k in legacy if k not in _LEGACY_KEYS]
+    if unknown:
+        raise TypeError(
+            f"{where}() got unexpected keyword argument(s) "
+            f"{sorted(unknown)}")
+    if not legacy:
+        return config if config is not None else (default or EvalConfig())
+    if config is not None:
+        raise TypeError(
+            f"{where}(): pass either config=EvalConfig(...) or the "
+            f"deprecated keyword(s) {sorted(legacy)}, not both")
+    warnings.warn(
+        f"{where}({', '.join(sorted(legacy))}=...) is deprecated; pass "
+        f"config=EvalConfig(...) instead (the keywords map 1:1; "
+        f"use_pallas=True becomes backend='pallas')",
+        DeprecationWarning, stacklevel=stacklevel)
+    base = default or EvalConfig()
+    fields = {k: v for k, v in legacy.items() if k != "use_pallas"}
+    if legacy.get("use_pallas"):
+        fields["backend"] = "pallas"
+    return dataclasses.replace(base, **fields)

@@ -15,15 +15,23 @@ Everything here is exact: a session's frontier is bit-identical to a
 solo ``FifoAdvisor.run()`` with the same seed, regardless of batching.
 """
 
-from repro.core.service.batcher import AdvisoryService, CrossSessionBatcher
-from repro.core.service.protocol import (AdvisorClient, ProtocolError,
-                                         ProtocolHandler, decode_line,
-                                         encode_line)
+from repro.core.config import EvalConfig
+from repro.core.service.batcher import (AdvisoryService,
+                                        CrossSessionBatcher,
+                                        ServiceOverloaded)
+from repro.core.service.protocol import (ERROR_CODES, PROTO, AdvisorClient,
+                                         ProtocolError, ProtocolHandler,
+                                         SessionHandle, adapt_v1,
+                                         decode_line, encode_line)
 from repro.core.service.registry import DesignRegistry
 from repro.core.service.session import Session
+from repro.core.service.snapshot import (SnapshotError, load_snapshot,
+                                         save_snapshot)
 
 __all__ = [
     "AdvisorClient", "AdvisoryService", "CrossSessionBatcher",
-    "DesignRegistry", "ProtocolError", "ProtocolHandler", "Session",
-    "decode_line", "encode_line",
+    "DesignRegistry", "ERROR_CODES", "EvalConfig", "PROTO",
+    "ProtocolError", "ProtocolHandler", "ServiceOverloaded", "Session",
+    "SessionHandle", "SnapshotError", "adapt_v1", "decode_line",
+    "encode_line", "load_snapshot", "save_snapshot",
 ]

@@ -26,16 +26,35 @@ seed — batching changes wall-clock, never results.
 
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core.advisor import DseResult
 from repro.core.campaign.router import RoundRouter, RoutedRequest
+from repro.core.config import EvalConfig, resolve_config
 from repro.core.service.registry import DesignRegistry
 from repro.core.service.session import Session
 
-__all__ = ["AdvisoryService", "CrossSessionBatcher"]
+__all__ = ["AdvisoryService", "CrossSessionBatcher", "ServiceOverloaded"]
+
+
+class ServiceOverloaded(RuntimeError):
+    """Admission refused: the service is at its concurrent-session cap.
+
+    ``retry_after_s`` is the service's live estimate of when capacity
+    frees up (a few batched rounds at the current measured round time);
+    the wire protocol surfaces it verbatim in the ``E_OVERLOADED``
+    error frame so clients can back off instead of hammering.
+    """
+
+    def __init__(self, max_sessions: int, retry_after_s: float):
+        self.max_sessions = int(max_sessions)
+        self.retry_after_s = float(retry_after_s)
+        super().__init__(
+            f"service at capacity ({max_sessions} running sessions); "
+            f"retry in {retry_after_s:.3f}s")
 
 
 class CrossSessionBatcher:
@@ -59,6 +78,9 @@ class CrossSessionBatcher:
         self.shards = shards
         self.router = RoundRouter(registry)
         self.rounds = 0
+        #: EWMA of the wall time of one batched round, feeding the
+        #: overload replies' retry-after estimate
+        self.round_ewma_s = 0.0
         self._pool_designs: set = set()   # designs the pool was built with
 
     @property
@@ -110,6 +132,7 @@ class CrossSessionBatcher:
         each session (history, budget, optimizer step, progress events).
         Returns the number of sessions that advanced.
         """
+        t0 = time.perf_counter()
         pending: List[RoutedRequest] = []
         for sess in sessions:
             req = sess.propose()
@@ -123,6 +146,9 @@ class CrossSessionBatcher:
         for p in pending:
             p.tag.complete_round(p)
         self.rounds += 1
+        dt = time.perf_counter() - t0
+        self.round_ewma_s = (dt if self.round_ewma_s == 0.0
+                             else 0.8 * self.round_ewma_s + 0.2 * dt)
         return len(pending)
 
     def stats(self) -> dict:
@@ -156,7 +182,9 @@ class AdvisoryService:
     Args:
         registry: a shared :class:`DesignRegistry` (one is built when
             omitted).
-        backend / max_iters: forwarded to the registry when building it.
+        config: :class:`EvalConfig` for the registry when building it
+            (the deprecated ``backend=``/``max_iters=`` keywords still
+            map onto it).
         hetero: pack cross-design full-solve rows into one fixpoint
             dispatch (the TPU-native path; on CPU the worklist is faster).
         workers: worklist worker processes for parallel lanes (0 =
@@ -164,27 +192,58 @@ class AdvisoryService:
         shards: shard the hetero dispatch over this many jax devices
             (``docs/mesh.md``); requires ``hetero=True`` to matter.
         progress_events: default per-session progress streaming flag.
+        max_sessions: admission-control cap on concurrently *running*
+            sessions; :meth:`open_session` raises
+            :class:`ServiceOverloaded` (with a live retry-after
+            estimate) above it.  None = unbounded.
     """
 
     def __init__(self, registry: Optional[DesignRegistry] = None,
-                 backend: str = "numpy", max_iters: int = 256,
+                 config: Optional[EvalConfig] = None,
                  hetero: bool = False, workers: int = 0,
                  shards: Optional[int] = None,
-                 progress_events: bool = True):
-        self.registry = registry or DesignRegistry(backend=backend,
-                                                   max_iters=max_iters)
+                 progress_events: bool = True,
+                 max_sessions: Optional[int] = None, **legacy):
+        if registry is None:
+            registry = DesignRegistry(
+                resolve_config(config, legacy, "AdvisoryService"))
+        elif legacy:
+            resolve_config(config, legacy, "AdvisoryService")
+        self.registry = registry
         self.batcher = CrossSessionBatcher(self.registry, hetero=hetero,
                                            workers=workers, shards=shards)
         self.progress_events = bool(progress_events)
+        self.max_sessions = None if max_sessions is None else int(max_sessions)
+        self.rejected = 0              # admissions refused while at capacity
         self.sessions: Dict[str, Session] = {}
         self._next_sid = 0
+
+    @property
+    def config(self) -> EvalConfig:
+        return self.registry.config
+
+    def retry_after_s(self) -> float:
+        """How long an overloaded client should wait before retrying:
+        a few batched rounds at the current measured round time, floored
+        so cold services never advertise a zero backoff."""
+        return max(0.01, 4.0 * self.batcher.round_ewma_s)
 
     # ---------------------------------------------------------- sessions
     def open_session(self, design: str, optimizer: str = "grouped_sa",
                      budget: int = 300, seed: int = 0,
                      design_obj=None, progress_events: Optional[bool] = None,
                      **opt_kwargs) -> Session:
-        """Open a DSE session (tracing the design on first use)."""
+        """Open a DSE session (tracing the design on first use).
+
+        Raises :class:`ServiceOverloaded` when ``max_sessions`` running
+        sessions already exist — admission is checked *before* the
+        (potentially expensive) first-use trace, so overload replies
+        stay cheap even under a thundering herd of new designs.
+        """
+        if (self.max_sessions is not None
+                and len(self.running) >= self.max_sessions):
+            self.rejected += 1
+            raise ServiceOverloaded(self.max_sessions, self.retry_after_s())
         advisor = self.registry.register(design, design_obj)
         self.batcher.add_design(design)
         sid = f"s{self._next_sid}"
@@ -266,6 +325,9 @@ class AdvisoryService:
             states[s.state] = states.get(s.state, 0) + 1
         return {"n_sessions": len(self.sessions),
                 "session_states": states,
+                "max_sessions": self.max_sessions,
+                "rejected": self.rejected,
+                "round_ewma_s": round(self.batcher.round_ewma_s, 6),
                 "batcher": self.batcher.stats(),
                 "designs": self.registry.stats()}
 

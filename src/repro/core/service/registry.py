@@ -18,6 +18,7 @@ from __future__ import annotations
 from typing import Dict, Iterator, Optional
 
 from repro.core.advisor import FifoAdvisor
+from repro.core.config import EvalConfig, resolve_config
 from repro.core.design import Design
 
 __all__ = ["DesignRegistry"]
@@ -27,23 +28,30 @@ class DesignRegistry:
     """Mapping of design name -> cached :class:`FifoAdvisor`.
 
     Args:
-        backend: evaluator backend for every advisor (``"numpy"`` is the
-            CPU fast path with incremental re-simulation).
-        max_iters: fixpoint iteration cap passed to each evaluator.
-        advisor_kwargs: extra keyword arguments forwarded to every
-            :class:`FifoAdvisor` (e.g. ``occupancy_cap=True``).
+        config: the :class:`EvalConfig` every advisor is built with
+            (defaults to ``EvalConfig()``).  The deprecated
+            ``backend=``/``max_iters=`` keywords still map onto it.
+        advisor_kwargs: extra *runtime-only* keyword arguments forwarded
+            to every :class:`FifoAdvisor` (e.g. ``mesh=...``).
     """
 
-    def __init__(self, backend: str = "numpy", max_iters: int = 256,
-                 advisor_kwargs: Optional[dict] = None):
-        self.backend = backend
-        self.max_iters = int(max_iters)
+    def __init__(self, config: Optional[EvalConfig] = None,
+                 advisor_kwargs: Optional[dict] = None, **legacy):
+        self.config = resolve_config(config, legacy, "DesignRegistry")
         self.advisor_kwargs = dict(advisor_kwargs or {})
         self._advisors: Dict[str, FifoAdvisor] = {}
         #: names registered with an explicit Design object — these are
         #: NOT rebuildable via ``make_design`` in a fresh process, which
         #: matters to engines that re-trace by name (the worker pool)
         self.custom_names: set = set()
+
+    @property
+    def backend(self) -> str:
+        return self.config.backend
+
+    @property
+    def max_iters(self) -> int:
+        return self.config.max_iters
 
     def register(self, name: str,
                  design: Optional[Design] = None) -> FifoAdvisor:
@@ -62,10 +70,22 @@ class DesignRegistry:
             design = make_design(name)
         else:
             self.custom_names.add(name)
-        adv = FifoAdvisor(design, backend=self.backend,
-                          max_iters=self.max_iters, **self.advisor_kwargs)
+        adv = FifoAdvisor(design, self.config, **self.advisor_kwargs)
         self._advisors[name] = adv
         return adv
+
+    def adopt(self, name: str, advisor: FifoAdvisor,
+              custom: bool = False) -> FifoAdvisor:
+        """Install a prebuilt advisor (the snapshot warm-restart path).
+
+        Re-adopting an existing name replaces the cached advisor; the
+        snapshot loader uses this to hand the registry fully restored
+        advisors without re-tracing.
+        """
+        self._advisors[name] = advisor
+        if custom:
+            self.custom_names.add(name)
+        return advisor
 
     # --------------------------------------------------- mapping protocol
     def __getitem__(self, name: str) -> FifoAdvisor:

@@ -43,6 +43,13 @@ RUNNING = "running"
 DONE = "done"
 CANCELLED = "cancelled"
 
+#: per-session event-queue bound.  A client that never drains its
+#: progress stream must not grow server memory without limit; beyond
+#: this the oldest events are dropped (counted in ``events_dropped``
+#: and surfaced via ``status()``).  The terminal done/cancelled event
+#: is always the newest append, so completion is never the one lost.
+MAX_QUEUED_EVENTS = 1024
+
 
 class Session:
     """One client's DSE run, drivable one batched round at a time.
@@ -84,7 +91,8 @@ class Session:
         self.rounds = 0
         self.eval_s = 0.0
         self.opened_at = time.perf_counter()
-        self.events: Deque[dict] = deque()
+        self.events: Deque[dict] = deque(maxlen=MAX_QUEUED_EVENTS)
+        self.events_dropped = 0
         self._last_hv = 0.0
         self._last_frontier = 0
         self._result: Optional[DseResult] = None
@@ -145,7 +153,7 @@ class Session:
     def _finish(self, state: str) -> None:
         self.state = state
         self._result = self._make_result()
-        self.events.append({
+        self._queue_event({
             "event": state, "session": self.id,
             "n_evals": int(self.ctx.n_evals),
             "rounds": self.rounds,
@@ -155,6 +163,11 @@ class Session:
         })
 
     # ----------------------------------------------------------- events
+    def _queue_event(self, event: dict) -> None:
+        if len(self.events) == MAX_QUEUED_EVENTS:
+            self.events_dropped += 1     # deque(maxlen) evicts the oldest
+        self.events.append(event)
+
     def _hypervolume(self, pts: np.ndarray) -> float:
         return hypervolume_2d(pts,
                               self.advisor.baseline_max.hv_reference())
@@ -166,7 +179,7 @@ class Session:
         if (pts.shape[0] == self._last_frontier
                 and hv == self._last_hv and self.rounds > 1):
             return
-        self.events.append({
+        self._queue_event({
             "event": "progress", "session": self.id,
             "round": self.rounds,
             "n_evals": int(self.ctx.n_evals),
@@ -193,4 +206,5 @@ class Session:
             "seed": self.seed, "budget": self.budget,
             "rounds": self.rounds, "n_evals": int(self.ctx.n_evals),
             "eval_s": round(self.eval_s, 4),
+            "events_dropped": self.events_dropped,
         }

@@ -1,0 +1,322 @@
+"""Warm-restart snapshots: registry state -> versioned, checksummed files.
+
+A service restart used to cost what cold start costs: re-trace every
+design, rebuild every simgraph, re-run condensation, re-certify deadlock
+floors, and re-simulate everything the evaluation caches had already
+paid for.  This module serializes exactly those artifacts so a restarted
+server answers its first request in milliseconds:
+
+* the collected :class:`~repro.core.tracer.Trace` (op streams per task),
+* the packed :class:`~repro.core.simgraph.SimGraph` arrays,
+* every condensation rung (:class:`~repro.core.condense.CondensedGraph`)
+  with its index maps and certificate tables,
+* the deadlock :class:`~repro.core.deadlock.CertificationResult` and
+  pruning bound caches, and
+* the full :class:`~repro.core.backends.ConfigCache` contents in
+  insertion order.
+
+Format: one ``<design>.snap.npz`` per design (named numpy arrays plus an
+embedded JSON ``meta`` record) under a ``MANIFEST.json`` carrying the
+snapshot version, the registry's :class:`~repro.core.config.EvalConfig`,
+and a SHA-256 per design file.  Loads verify the version and every
+checksum before touching a byte of array data; any mismatch raises
+:class:`SnapshotError` — a torn or tampered snapshot degrades to a cold
+start, never to silently wrong state.
+
+Restored advisors are *bit-identical* to freshly traced ones in every
+observable (frontiers, histories, certificates); only wall-clock and
+``n_evals`` differ, because cache hits are not re-simulated
+(``tests/test_snapshot.py`` asserts this).
+
+Custom designs (registered with an explicit :class:`Design` object) are
+skipped: a fresh process cannot rebuild the design callable by name, and
+an advisor without its design cannot serve ``explain_deadlock`` or
+re-trace.  The manifest records them under ``"skipped"`` so operators
+see the gap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.advisor import Baseline, FifoAdvisor
+from repro.core.condense import CondensedGraph
+from repro.core.config import EvalConfig
+from repro.core.deadlock.certify import CertificationResult
+from repro.core.service.registry import DesignRegistry
+from repro.core.simgraph import SimGraph
+from repro.core.tracer import TaskTrace, Trace
+
+__all__ = ["SNAPSHOT_VERSION", "SnapshotError", "save_snapshot",
+           "load_snapshot"]
+
+#: bump on any incompatible change to the array layout or meta schema;
+#: loaders reject other versions outright (cold start beats guessing)
+SNAPSHOT_VERSION = 1
+
+MANIFEST = "MANIFEST.json"
+
+
+class SnapshotError(RuntimeError):
+    """The snapshot directory is unreadable, tampered, or incompatible."""
+
+
+class _BlobReader:
+    """Named-array access over one contiguous buffer.
+
+    Restores read ~50 arrays per design; going through the npz zip
+    member machinery per array costs more than the data itself, so the
+    on-disk layout is a single ``blob`` plus a ``{name: dtype/shape/
+    offset}`` index in the meta record.  Arrays are copied out (not
+    viewed) so restored state is writable and owns its memory.
+    """
+
+    def __init__(self, blob: np.ndarray, index: Dict[str, dict]):
+        self._buf = np.ascontiguousarray(blob)
+        self._index = index
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._index
+
+    def __getitem__(self, name: str) -> np.ndarray:
+        e = self._index[name]
+        dtype = np.dtype(e["dtype"])
+        count = int(np.prod(e["shape"], dtype=np.int64)) if e["shape"] \
+            else 1
+        a = np.frombuffer(self._buf, dtype=dtype, count=count,
+                          offset=e["offset"])
+        return a.reshape(e["shape"]).copy()
+
+
+def _pack_blob(arrays: Dict[str, np.ndarray]) -> tuple:
+    """Concatenate named arrays into (blob, index) for :class:`_BlobReader`."""
+    parts: List[bytes] = []
+    index: Dict[str, dict] = {}
+    offset = 0
+    for name, a in arrays.items():
+        a = np.ascontiguousarray(a)
+        raw = a.tobytes()
+        index[name] = {"dtype": a.dtype.str, "shape": list(a.shape),
+                       "offset": offset}
+        parts.append(raw)
+        offset += len(raw)
+    return np.frombuffer(b"".join(parts), dtype=np.uint8), index
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _array_fields(cls) -> List[str]:
+    """Dataclass fields that hold numpy arrays (everything except the
+    design/raw back-references and scalar metadata)."""
+    skip = {"design", "raw", "unbounded_latency", "_bound", "tag"}
+    return [f.name for f in dataclasses.fields(cls) if f.name not in skip]
+
+
+# ----------------------------------------------------------------- save
+def _pack_advisor(adv: FifoAdvisor) -> tuple:
+    """(arrays dict, meta dict) for one advisor."""
+    arrays: Dict[str, np.ndarray] = {}
+    meta: dict = {
+        "version": SNAPSHOT_VERSION,
+        "design": adv.design.name,
+        "config": adv.evaluator.config.to_dict(),
+        "graph": {"unbounded_latency": int(adv.graph.unbounded_latency)},
+        "baseline_max": _pack_baseline(adv.baseline_max, "bmax", arrays),
+        "baseline_min": _pack_baseline(adv.baseline_min, "bmin", arrays),
+    }
+
+    # trace: per-task op streams, concatenated with per-task counts
+    tr = adv.trace
+    arrays["tr_kinds"] = np.concatenate(
+        [t.kinds for t in tr.tasks]) if tr.tasks else np.zeros(0, np.int8)
+    arrays["tr_fifos"] = np.concatenate(
+        [t.fifos for t in tr.tasks]) if tr.tasks else np.zeros(0, np.int32)
+    arrays["tr_deltas"] = np.concatenate(
+        [t.deltas for t in tr.tasks]) if tr.tasks else np.zeros(0, np.int64)
+    arrays["tr_ops"] = np.asarray([t.n_ops for t in tr.tasks], np.int64)
+    arrays["tr_task"] = np.asarray([t.task for t in tr.tasks], np.int64)
+    arrays["tr_end"] = np.asarray([t.end_delay for t in tr.tasks], np.int64)
+    arrays["tr_writes"] = tr.write_counts
+    arrays["tr_reads"] = tr.read_counts
+
+    for name in _array_fields(SimGraph):
+        arrays[f"g_{name}"] = getattr(adv.graph, name)
+
+    rungs = [cg for cg, _impl in adv.evaluator.condensation]
+    meta["rungs"] = []
+    for i, cg in enumerate(rungs):
+        meta["rungs"].append({
+            "tag": cg.tag, "bound": int(cg._bound),
+            "unbounded_latency": int(cg.unbounded_latency)})
+        for name in _array_fields(CondensedGraph):
+            arrays[f"cg{i}_{name}"] = getattr(cg, name)
+
+    cache = adv.cache
+    n = len(cache)
+    arrays["cache_rows"] = cache._rows[:n]
+    arrays["cache_lat"] = cache._lat[:n]
+    arrays["cache_bram"] = cache._bram[:n]
+    arrays["cache_dead"] = cache._dead[:n]
+
+    if adv._upper_bounds is not None:
+        arrays["upper_bounds"] = np.asarray(adv._upper_bounds, np.int64)
+    if adv._lb_cache is not None:
+        arrays["lb_cache"] = adv._lb_cache
+    cert = adv._certification
+    if cert is not None:
+        arrays["cert_depths"] = cert.depths
+        arrays["cert_start"] = cert.start
+        meta["certification"] = {
+            "latency": int(cert.latency), "bram": int(cert.bram),
+            "n_probes": int(cert.n_probes), "wall_s": float(cert.wall_s)}
+    return arrays, meta
+
+
+def _pack_baseline(b: Baseline, prefix: str, arrays: dict) -> dict:
+    arrays[f"{prefix}_depths"] = np.asarray(b.depths, np.int64)
+    return {"latency": int(b.latency), "bram": int(b.bram),
+            "deadlocked": bool(b.deadlocked)}
+
+
+def save_snapshot(registry: DesignRegistry, directory: str) -> dict:
+    """Write a warm-restart snapshot of every registered design.
+
+    Returns the manifest dict that was written to ``MANIFEST.json``.
+    Files are written before the manifest, so a crash mid-save leaves no
+    manifest referencing missing data; re-saving overwrites in place.
+    """
+    os.makedirs(directory, exist_ok=True)
+    manifest = {"version": SNAPSHOT_VERSION,
+                "config": registry.config.to_dict(),
+                "designs": {}, "skipped": sorted(registry.custom_names)}
+    for name in registry.names():
+        if name in registry.custom_names:
+            continue
+        arrays, meta = _pack_advisor(registry[name])
+        blob, meta["arrays"] = _pack_blob(arrays)
+        fname = f"{name}.snap.npz"
+        path = os.path.join(directory, fname)
+        with open(path, "wb") as f:
+            np.savez(f, blob=blob, meta=np.frombuffer(
+                json.dumps(meta).encode("utf-8"), dtype=np.uint8))
+        manifest["designs"][name] = {"file": fname, "sha256": _sha256(path)}
+    with open(os.path.join(directory, MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return manifest
+
+
+# ----------------------------------------------------------------- load
+def _unpack_advisor(name: str, z, meta: dict) -> FifoAdvisor:
+    from repro.designs import make_design
+    design = make_design(name)
+    config = EvalConfig.from_dict(meta["config"])
+
+    ops = z["tr_ops"]
+    splits = np.cumsum(ops)[:-1]
+    kinds = np.split(z["tr_kinds"], splits)
+    fifos = np.split(z["tr_fifos"], splits)
+    deltas = np.split(z["tr_deltas"], splits)
+    tasks = [TaskTrace(task=int(z["tr_task"][i]), kinds=kinds[i],
+                       fifos=fifos[i], deltas=deltas[i],
+                       end_delay=int(z["tr_end"][i]))
+             for i in range(len(ops))]
+    # functional results are only consumed on freshly collected traces
+    # (the fuzzer's differential oracle); a restored trace serves timing
+    trace = Trace(design=design, tasks=tasks, results={},
+                  write_counts=z["tr_writes"], read_counts=z["tr_reads"])
+
+    graph = SimGraph(
+        design=design,
+        unbounded_latency=int(meta["graph"]["unbounded_latency"]),
+        **{f: z[f"g_{f}"] for f in _array_fields(SimGraph)})
+
+    rungs = []
+    for i, rm in enumerate(meta.get("rungs", [])):
+        rungs.append(CondensedGraph(
+            raw=graph, tag=rm["tag"], _bound=int(rm["bound"]),
+            unbounded_latency=int(rm["unbounded_latency"]),
+            **{f: z[f"cg{i}_{f}"] for f in _array_fields(CondensedGraph)}))
+
+    cert = None
+    if "certification" in meta:
+        cm = meta["certification"]
+        cert = CertificationResult(
+            depths=z["cert_depths"], start=z["cert_start"],
+            latency=cm["latency"], bram=cm["bram"],
+            n_probes=cm["n_probes"], wall_s=cm["wall_s"])
+
+    def baseline(prefix: str, key: str) -> Baseline:
+        bm = meta[key]
+        return Baseline(depths=z[f"{prefix}_depths"], latency=bm["latency"],
+                        bram=bm["bram"], deadlocked=bm["deadlocked"])
+
+    return FifoAdvisor.restore(
+        design, trace=trace, graph=graph, config=config,
+        upper_bounds=z["upper_bounds"] if "upper_bounds" in z else None,
+        rungs=rungs,
+        baseline_max=baseline("bmax", "baseline_max"),
+        baseline_min=baseline("bmin", "baseline_min"),
+        certification=cert,
+        lb_cache=z["lb_cache"] if "lb_cache" in z else None,
+        cache_data=(z["cache_rows"], z["cache_lat"],
+                    z["cache_bram"], z["cache_dead"]))
+
+
+def load_snapshot(directory: str,
+                  registry: Optional[DesignRegistry] = None
+                  ) -> DesignRegistry:
+    """Restore a :class:`DesignRegistry` from a snapshot directory.
+
+    Verifies the manifest version and every per-file SHA-256 *before*
+    deserializing any array data.  When ``registry`` is given, restored
+    advisors are adopted into it (its config must match the snapshot's);
+    otherwise a fresh registry is built from the snapshot's config.
+    """
+    mpath = os.path.join(directory, MANIFEST)
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        raise SnapshotError(f"unreadable snapshot manifest {mpath}: {e}")
+    version = manifest.get("version")
+    if version != SNAPSHOT_VERSION:
+        raise SnapshotError(
+            f"snapshot version {version!r} != supported {SNAPSHOT_VERSION}")
+    config = EvalConfig.from_dict(manifest["config"])
+    if registry is None:
+        registry = DesignRegistry(config)
+    elif registry.config != config:
+        raise SnapshotError(
+            f"snapshot config {config} != registry config {registry.config}")
+    entries = manifest.get("designs", {})
+    for name, entry in entries.items():
+        path = os.path.join(directory, entry["file"])
+        if not os.path.exists(path):
+            raise SnapshotError(f"snapshot file missing: {path}")
+        digest = _sha256(path)
+        if digest != entry["sha256"]:
+            raise SnapshotError(
+                f"checksum mismatch for {entry['file']}: manifest "
+                f"{entry['sha256'][:12]}..., file {digest[:12]}...")
+    for name, entry in entries.items():
+        with np.load(os.path.join(directory, entry["file"])) as npz:
+            meta = json.loads(bytes(npz["meta"]).decode("utf-8"))
+            if meta.get("version") != SNAPSHOT_VERSION:
+                raise SnapshotError(
+                    f"design {name}: snapshot version "
+                    f"{meta.get('version')!r} != {SNAPSHOT_VERSION}")
+            z = _BlobReader(npz["blob"], meta["arrays"])
+        registry.adopt(name, _unpack_advisor(name, z, meta))
+    return registry

@@ -42,6 +42,7 @@ from repro.core.backends import (BIG, BUCKETS, CONVERGED, DEADLOCK,
                                  WorklistBackend, evaluate_np, get_backend)
 from repro.core.backends.worklist import WorklistState
 from repro.core.bram import design_bram_np
+from repro.core.config import EvalConfig, resolve_config
 from repro.core.simgraph import SimGraph
 
 __all__ = [
@@ -70,27 +71,58 @@ class BatchStats:
     wall_s: float = 0.0
 
 
+#: historical BatchedEvaluator default (the advisor default is 256)
+_EVALUATOR_DEFAULT = EvalConfig(max_iters=64)
+
+
 class BatchedEvaluator:
-    """Incremental trace-based evaluation over candidate depth matrices."""
+    """Incremental trace-based evaluation over candidate depth matrices.
+
+    ``config`` is the shared :class:`~repro.core.config.EvalConfig`
+    (backend, iteration cap, condensation, sharding).  Runtime objects
+    stay explicit keywords: ``rungs`` is a prebuilt
+    :class:`~repro.core.condense.CondensedGraph` (or list) to use
+    verbatim on any backend — the snapshot-restore and test hook —
+    and ``mesh`` an explicit :class:`jax.sharding.Mesh`.  The legacy
+    keyword spellings (``backend=``, ``max_iters=``, ``condense=``,
+    ``shards=``, ``use_pallas=``) are deprecated shims.
+    """
 
     BUCKETS = BUCKETS
 
     #: how many solved worklist states to keep for incremental re-solves
     STATE_CACHE_CAP = 128
 
-    def __init__(self, g: SimGraph, max_iters: int = 64,
-                 backend: str = "numpy", use_pallas: bool = False,
-                 condense: object = "auto",
-                 mesh=None, shards: Optional[int] = None):
+    def __init__(self, g: SimGraph, config: Optional[EvalConfig] = None,
+                 *, rungs=None, mesh=None, **legacy):
+        if config is not None and not isinstance(config, EvalConfig):
+            # pre-EvalConfig signature: second positional was max_iters
+            import warnings
+            warnings.warn(
+                "BatchedEvaluator(g, max_iters) positional form is "
+                "deprecated; pass config=EvalConfig(max_iters=...)",
+                DeprecationWarning, stacklevel=2)
+            config, legacy = None, dict(legacy, max_iters=int(config))
+        if "condense" in legacy and not isinstance(
+                legacy["condense"], (str, type(None))):
+            # prebuilt CondensedGraph rungs used to ride the condense=
+            # kwarg; they are runtime objects, so they move to rungs=
+            import warnings
+            warnings.warn(
+                "BatchedEvaluator(condense=<rungs>) is deprecated; pass "
+                "prebuilt CondensedGraphs via rungs=", DeprecationWarning,
+                stacklevel=2)
+            rungs = legacy.pop("condense")
+        config = resolve_config(config, legacy, "BatchedEvaluator",
+                                default=_EVALUATOR_DEFAULT)
         if g.latency_upper_bound() > F32_EXACT_LIMIT:
             raise ValueError(
                 "design schedule bound exceeds float32-exact domain; "
                 "split the design or reduce trip counts")
         self.g = g
-        self.max_iters = int(max_iters)
+        self.max_iters = config.max_iters
         self.stats = BatchStats()
-        if use_pallas:
-            backend = "pallas"
+        backend, shards = config.backend, config.shards
         # an explicit mesh/shard count selects the sharded scan backend
         # (docs/mesh.md); "auto" calibration also races it when the
         # process sees more than one device
@@ -102,6 +134,7 @@ class BatchedEvaluator:
         if backend == "auto":
             backend = self._calibrate()
         self.backend = backend
+        self.config = config.replace(backend=backend)
         if backend in ("mesh", "sharded"):
             from repro.core.backends.mesh import MeshBackend
             self._impl = MeshBackend(max_iters=self.max_iters,
@@ -119,13 +152,15 @@ class BatchedEvaluator:
             self._worklist,
             shard_multiple=getattr(self._impl, "shard_multiple", 1))
         self._states: "OrderedDict[bytes, WorklistState]" = OrderedDict()
-        self.condensation = self._build_cascade(condense)
+        self.condensation = self._build_cascade(
+            config.condense if rungs is None else rungs)
 
     # ------------------------------------------------------- condensation
     def _build_cascade(self, condense):
         """Condense once per evaluator: ``"auto"`` builds (and caches on
         the graph) the default rung cascade; an explicit CondensedGraph
-        or list uses those rungs verbatim; None disables condensation.
+        or list (the ``rungs=`` argument) uses those rungs verbatim;
+        None disables condensation.
 
         The per-row worklist's cost is bound by wake-wave count rather
         than event count, so it skips ``aggressive`` rungs — they only
@@ -192,8 +227,8 @@ class BatchedEvaluator:
             for _ in range(16)])
         timings = {}
         for name in candidates:
-            ev = BatchedEvaluator(self.g, max_iters=self.max_iters,
-                                  backend=name)
+            ev = BatchedEvaluator(self.g, EvalConfig(
+                backend=name, max_iters=self.max_iters))
             ev.evaluate(probe)                # warm (jit compile)
             t0 = time.perf_counter()
             ev.evaluate(probe)

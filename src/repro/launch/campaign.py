@@ -102,15 +102,17 @@ def main(argv=None) -> int:
               f"{campaign.round} "
               f"({sum(t.done for t in campaign.tasks)} already done)")
     else:
+        from repro.core.config import EvalConfig
         spec = CampaignSpec(
             designs=tuple(resolve_designs(args.designs)),
             optimizers=tuple(
                 o.strip() for o in args.optimizers.split(",") if o.strip()),
-            budget=args.budget, seed=args.seed, backend=args.backend,
+            budget=args.budget, seed=args.seed,
+            eval=EvalConfig(backend=args.backend, shards=args.shards),
             workers=resolve_workers(args.workers
                                     if args.workers is not None
                                     else "auto"),
-            hetero=args.hetero, shards=args.shards,
+            hetero=args.hetero,
             checkpoint_every=args.checkpoint_every,
             track_hypervolume=args.track_hypervolume)
         campaign = Campaign(spec, checkpoint_path=args.checkpoint)

@@ -36,6 +36,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.config import EvalConfig
 from repro.core.oracle import simulate
 from repro.core.simgraph import build_simgraph
 from repro.core.simulate import BatchedEvaluator
@@ -135,9 +136,12 @@ def differential_check(gen: GeneratedDesign,
                 # duplicate of the plain worklist run; skip rather than
                 # double-count the seed as condensation coverage
                 continue
-            ev = BatchedEvaluator(g, backend="worklist", condense=rungs)
+            ev = BatchedEvaluator(
+                g, EvalConfig(backend="worklist", max_iters=64),
+                rungs=rungs)
         else:
-            ev = BatchedEvaluator(g, backend=name)
+            ev = BatchedEvaluator(
+                g, EvalConfig(backend=name, max_iters=64))
         lat, _, dead = ev.evaluate(matrix)
         for i in range(matrix.shape[0]):
             if bool(dead[i]) != bool(oracle_dead[i]):

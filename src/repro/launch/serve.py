@@ -60,10 +60,11 @@ class AdvisoryServer:
     """
 
     def __init__(self, service=None, idle_sleep_s: float = 0.02,
-                 **service_kwargs):
+                 snapshot_dir: Optional[str] = None, **service_kwargs):
         from repro.core.service import AdvisoryService, ProtocolHandler
         self.service = service or AdvisoryService(**service_kwargs)
-        self.handler = ProtocolHandler(self.service)
+        self.handler = ProtocolHandler(self.service,
+                                       snapshot_dir=snapshot_dir)
         self.idle_sleep_s = float(idle_sleep_s)
         self._owners: Dict[str, asyncio.Queue] = {}   # sid -> out queue
         self._shutdown = asyncio.Event()
@@ -263,6 +264,14 @@ def parse_args(argv=None):
                         "dispatch over N jax devices (docs/mesh.md)")
     p.add_argument("--no-progress", action="store_true",
                    help="disable per-round progress events")
+    p.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                   help="warm-restart snapshot directory: loaded at "
+                        "startup when it holds a valid snapshot, and "
+                        "the default target of the 'snapshot' op")
+    p.add_argument("--max-sessions", type=int, default=None, metavar="N",
+                   help="admission cap on concurrently running sessions "
+                        "(overload replies carry E_OVERLOADED + a "
+                        "retry-after hint; default unbounded)")
     return p.parse_args(argv)
 
 
@@ -275,19 +284,44 @@ async def amain(args) -> int:
         print("note: --shards only shards the --hetero dispatch; "
               "use --backend mesh for per-design sharding",
               file=sys.stderr)
-    server = AdvisoryServer(backend=args.backend,
-                            max_iters=args.max_iters,
+    import os
+    import time
+
+    from repro.core.service import EvalConfig, SnapshotError, load_snapshot
+
+    config = EvalConfig(backend=args.backend, max_iters=args.max_iters)
+    server = AdvisoryServer(config=config, snapshot_dir=args.snapshot_dir,
                             hetero=args.hetero, workers=args.workers,
                             shards=args.shards,
-                            progress_events=not args.no_progress)
+                            progress_events=not args.no_progress,
+                            max_sessions=args.max_sessions)
+    # registry-ready timing: everything between here and the "ready"
+    # line is design preparation (snapshot load or cold trace), the part
+    # warm restarts compress — interpreter/jax startup is excluded so
+    # benchmarks/restart_check.py measures the restart path itself
+    t0 = time.perf_counter()
+    restored = []
+    if args.snapshot_dir and os.path.exists(
+            os.path.join(args.snapshot_dir, "MANIFEST.json")):
+        try:
+            load_snapshot(args.snapshot_dir, server.service.registry)
+            restored = server.service.registry.names()
+            for name in restored:
+                server.service.batcher.add_design(name)
+        except SnapshotError as exc:
+            print(f"snapshot load failed ({exc}); cold-starting",
+                  file=sys.stderr)
     if args.designs:
         for name in args.designs.split(","):
             name = name.strip()
-            if name:
+            if name and name not in server.service.registry:
                 server.service.registry.register(name)
                 server.service.batcher.add_design(name)
         print(f"preloaded designs: {server.service.registry.names()}",
               file=sys.stderr)
+    print(f"registry ready in {time.perf_counter() - t0:.6f}s "
+          f"({'warm, ' + str(len(restored)) + ' restored' if restored else 'cold'})",
+          file=sys.stderr)
     try:
         if args.stdio:
             await server.serve_stdio()

@@ -17,6 +17,7 @@ from repro.core.backends import (ConfigCache, available_backends,
 from repro.core.backends import worklist as wl
 from repro.core.design import Design
 from repro.core.optimizers import EvalContext
+from repro.core.config import EvalConfig
 from repro.core.simulate import BatchedEvaluator
 from repro.designs.builder import map_stage, producer, sink, streams
 from repro.designs.ddcf import mult_by_2
@@ -66,7 +67,8 @@ def test_backend_equivalence_on_random_designs(seed):
                      for _ in range(6)])
     results = {}
     for backend in ("numpy", "jax", "pallas"):
-        ev = BatchedEvaluator(g, backend=backend, max_iters=128)
+        ev = BatchedEvaluator(
+            g, EvalConfig(backend=backend, max_iters=128))
         results[backend] = ev.evaluate(cfgs)
     for backend in ("jax", "pallas"):
         for a, b in zip(results["numpy"], results[backend]):
@@ -81,7 +83,7 @@ def test_backend_equivalence_on_known_deadlock():
     cfgs = np.array([[14, 2], [15, 2], [16, 2], [2, 2]])
     expect_dead = np.array([True, False, False, True])
     for backend in ("numpy", "jax", "pallas"):
-        ev = BatchedEvaluator(g, backend=backend, max_iters=128)
+        ev = BatchedEvaluator(g, EvalConfig(backend=backend, max_iters=128))
         _, _, dead = ev.evaluate(cfgs)
         np.testing.assert_array_equal(dead, expect_dead, err_msg=backend)
 
@@ -91,7 +93,7 @@ def test_dispatch_escalates_unresolved_rows():
     must escalate them to the worklist and still return exact results."""
     d = mult_by_2(24)
     g = build_simgraph(d)
-    ev = BatchedEvaluator(g, backend="jax", max_iters=3)
+    ev = BatchedEvaluator(g, EvalConfig(backend="jax", max_iters=3))
     lat, _, dead = ev.evaluate(np.array([[24, 2], [2, 2]]))
     assert ev.stats.n_fallbacks >= 1
     ref_lat, ref_dead = wl.evaluate_np(g, np.array([24, 2]))
@@ -108,8 +110,8 @@ def test_dispatch_bucket_padding_matches_unpadded():
     u = g.upper_bounds
     cfgs = np.stack([rng.integers(2, np.maximum(3, u + 1))
                      for _ in range(5)])     # 5 -> bucket 8
-    ev = BatchedEvaluator(g, backend="jax", max_iters=128)
-    ev_ref = BatchedEvaluator(g, backend="numpy")
+    ev = BatchedEvaluator(g, EvalConfig(backend="jax", max_iters=128))
+    ev_ref = BatchedEvaluator(g, EvalConfig(backend="numpy", max_iters=64))
     for a, b in zip(ev.evaluate(cfgs), ev_ref.evaluate(cfgs)):
         np.testing.assert_array_equal(a, b)
 
@@ -153,7 +155,7 @@ def test_incremental_from_deadlocked_base():
 def test_evaluator_incremental_api_matches_evaluate():
     d = mult_by_2(24)
     g = build_simgraph(d)
-    ev = BatchedEvaluator(g, backend="numpy")
+    ev = BatchedEvaluator(g, EvalConfig(backend="numpy", max_iters=64))
     base = np.array([40, 2])
     trials = np.array([[24, 2], [2, 2], [40, 8]])
     lat_i, bram_i, dead_i = ev.evaluate_incremental(base, trials)

@@ -26,6 +26,7 @@ import repro.core.backends.worklist as wl
 from repro.core import build_simgraph
 from repro.core.condense import (condense, condense_auto, expand_times,
                                  verify_rows)
+from repro.core.config import EvalConfig
 from repro.core.simulate import BatchedEvaluator
 from repro.designs import make_design, mult_by_2
 from repro.designs.generate import generate_design, load_corpus_specs, \
@@ -176,8 +177,11 @@ def test_evaluator_cascade_identical_to_raw():
             for _ in range(8)])
         rows = np.concatenate([rows, hot])
         for backend in backends:
-            ev_raw = BatchedEvaluator(g, backend=backend, condense=None)
-            ev_c = BatchedEvaluator(g, backend=backend)
+            ev_raw = BatchedEvaluator(
+                g, EvalConfig(backend=backend, max_iters=64,
+                              condense=None))
+            ev_c = BatchedEvaluator(
+                g, EvalConfig(backend=backend, max_iters=64))
             got_raw = ev_raw.evaluate(rows)
             got_c = ev_c.evaluate(rows)
             for a, b in zip(got_raw, got_c):
@@ -193,8 +197,10 @@ def test_forced_worklist_cascade_identical_to_raw():
     g = build_simgraph(make_design("mvt"))
     cgs = condense_auto(g)
     rows = np.stack(_probe_rows(g, n_random=6, seed=5))
-    ev_raw = BatchedEvaluator(g, backend="numpy", condense=None)
-    ev_c = BatchedEvaluator(g, backend="numpy", condense=cgs)
+    ev_raw = BatchedEvaluator(
+        g, EvalConfig(backend="numpy", max_iters=64, condense=None))
+    ev_c = BatchedEvaluator(
+        g, EvalConfig(backend="numpy", max_iters=64), rungs=cgs)
     for a, b in zip(ev_raw.evaluate(rows), ev_c.evaluate(rows)):
         np.testing.assert_array_equal(a, b)
 

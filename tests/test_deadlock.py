@@ -14,7 +14,7 @@ import pytest
 from hypothesis import given, settings
 import hypothesis.strategies as st
 
-from repro.core import FifoAdvisor
+from repro.core import EvalConfig, FifoAdvisor
 from repro.core.deadlock import (certify_min_depths_oracle, deadlock_blame,
                                  extract_wait_graph)
 from repro.core.oracle import simulate
@@ -111,7 +111,7 @@ def test_certified_floor_clamps_searches():
     Baseline-Min probe the annealing optimizers issue (it clamps to the
     certified floor)."""
     for optimizer in ("grouped_random", "grouped_sa", "greedy"):
-        adv = FifoAdvisor(mult_by_2(24), certified_floor=True)
+        adv = FifoAdvisor(mult_by_2(24), EvalConfig(certified_floor=True))
         res = adv.run(optimizer, budget=60, seed=3)
         assert res.result.configs.shape[0] > 0
         assert not res.result.deadlock.any(), optimizer
@@ -135,14 +135,14 @@ def test_certified_floor_respects_user_upper_bounds():
     deadlock-free configuration exists under the caps, the advisor says
     so instead of silently sampling deadlocks."""
     caps = np.array([70, 3])
-    adv = FifoAdvisor(mult_by_2(64), certified_floor=True,
+    adv = FifoAdvisor(mult_by_2(64), EvalConfig(certified_floor=True),
                       upper_bounds=caps)
     assert adv.min_safe_depths().tolist() == [63, 1]
     res = adv.run("grouped_random", budget=30, seed=0)
     assert not res.result.deadlock.any()
     assert (res.result.configs <= caps[None, :]).all()
     with pytest.raises(ValueError):
-        FifoAdvisor(mult_by_2(64), certified_floor=True,
+        FifoAdvisor(mult_by_2(64), EvalConfig(certified_floor=True),
                     upper_bounds=np.array([16, 16]))
 
 

@@ -10,6 +10,7 @@ import pytest
 
 from repro.core.design import Design
 from repro.core.simgraph import build_simgraph
+from repro.core.config import EvalConfig
 from repro.core.simulate import BatchedEvaluator, evaluate_np
 from repro.designs.builder import map_stage, producer, sink, streams
 from repro.designs.ddcf import mult_by_2
@@ -45,7 +46,7 @@ def test_kernel_matches_ref_and_worklist(name, factory, batch):
                     [rng.integers(2, np.maximum(3, u + 1))
                      for _ in range(max(batch - 2, 0))])[:batch]
 
-    ev = BatchedEvaluator(g, backend="numpy")
+    ev = BatchedEvaluator(g, EvalConfig(backend="numpy", max_iters=64))
     pallas_call = make_batched_eval(ev, interpret=True, max_iters=128)
     ref_call = make_batched_eval(ev, use_ref=True, max_iters=128)
 
@@ -67,8 +68,9 @@ def test_kernel_matches_ref_and_worklist(name, factory, batch):
 def test_full_evaluator_pallas_backend_end_to_end():
     d = mult_by_2(24)
     g = build_simgraph(d)
-    ev_np = BatchedEvaluator(g, backend="numpy")
-    ev_pl = BatchedEvaluator(g, backend="pallas", max_iters=128)
+    ev_np = BatchedEvaluator(g, EvalConfig(backend="numpy", max_iters=64))
+    ev_pl = BatchedEvaluator(
+        g, EvalConfig(backend="pallas", max_iters=128))
     rng = np.random.default_rng(3)
     cfgs = np.stack([rng.integers(2, 30, size=2) for _ in range(12)])
     a = ev_np.evaluate(cfgs)
@@ -82,7 +84,7 @@ def test_kernel_iteration_cap_reports_unresolved_not_wrong():
     (status 2) rather than return a wrong latency as CONVERGED."""
     d = mult_by_2(32)
     g = build_simgraph(d)
-    ev = BatchedEvaluator(g, backend="numpy")
+    ev = BatchedEvaluator(g, EvalConfig(backend="numpy", max_iters=64))
     call = make_batched_eval(ev, interpret=True, max_iters=2)
     cfgs = np.array([[40, 2], [2, 2]])
     lat, _, st = call(cfgs)

@@ -22,6 +22,7 @@ import os
 import numpy as np
 import pytest
 
+from repro.core.config import EvalConfig
 from repro.launch.mesh import (device_grid, ensure_host_platform_devices,
                                make_campaign_mesh, make_eval_mesh)
 
@@ -70,13 +71,14 @@ def test_sharded_matches_every_solo_backend_on_corpus():
     from repro.core.simulate import BatchedEvaluator
     for name, g in _corpus_graphs():
         cfgs = _configs(g, 10, seed=hash(name) % 1000)
-        ref = BatchedEvaluator(g, backend="numpy",
-                               max_iters=128).evaluate(cfgs)
+        ref = BatchedEvaluator(
+            g, EvalConfig(backend="numpy", max_iters=128)).evaluate(cfgs)
         for backend, kw in [("jax", {}), ("pallas", {}),
                             ("mesh", {"shards": 4}),
                             ("mesh", {"shards": 2})]:
-            got = BatchedEvaluator(g, backend=backend, max_iters=128,
-                                   **kw).evaluate(cfgs)
+            got = BatchedEvaluator(
+                g, EvalConfig(backend=backend, max_iters=128, **kw)
+            ).evaluate(cfgs)
             for a, b in zip(ref, got):
                 np.testing.assert_array_equal(
                     a, b, err_msg=f"{name}:{backend}:{kw}")
@@ -94,7 +96,8 @@ def test_deadlock_verdicts_identical_across_shard_counts():
     expect_dead = np.array([True, False, False, True, True])
     for shards in (1, 2, 4):
         lat, _, dead = BatchedEvaluator(
-            g, backend="mesh", shards=shards).evaluate(cfgs)
+            g, EvalConfig(backend="mesh", max_iters=64,
+                          shards=shards)).evaluate(cfgs)
         np.testing.assert_array_equal(dead, expect_dead,
                                       err_msg=f"shards={shards}")
         assert (lat[dead] == -1).all()
@@ -108,8 +111,9 @@ def test_ragged_batches_pad_to_shard_multiples_exactly():
     from repro.core.simulate import BatchedEvaluator
     from repro.designs import make_design
     g = build_simgraph(make_design("gemm"))
-    solo = BatchedEvaluator(g, backend="jax")
-    mesh = BatchedEvaluator(g, backend="mesh", shards=4)
+    solo = BatchedEvaluator(g, EvalConfig(backend="jax", max_iters=64))
+    mesh = BatchedEvaluator(
+        g, EvalConfig(backend="mesh", max_iters=64, shards=4))
     assert mesh.dispatch.shard_multiple == 4
     all_cfgs = _configs(g, 13, seed=7)
     for C in (1, 3, 5, 13):
@@ -152,7 +156,8 @@ def test_campaign_with_shards_matches_sequential():
     from repro.designs import make_design
     spec = dict(designs=("gemm", "FeedForward"),
                 optimizers=("grouped_random",), budget=30, seed=0)
-    store = Campaign(CampaignSpec(**spec, hetero=True, shards=4)).run()
+    store = Campaign(CampaignSpec(**spec, hetero=True,
+                                  eval=EvalConfig(shards=4))).run()
     for key in store.keys():
         dse = store[key]
         design, opt, _ = key.split(":")
@@ -179,8 +184,8 @@ def test_hetero_dispatcher_with_mesh_matches_per_design_worklists():
              for i, (k, g) in enumerate(graphs.items())]
     results = hd.dispatch(items)
     for (k, cfgs), (lat, bram, dead) in zip(items, results):
-        ref = BatchedEvaluator(graphs[k],
-                               backend="numpy").evaluate(cfgs)
+        ref = BatchedEvaluator(
+            graphs[k], EvalConfig(backend="numpy", max_iters=64)).evaluate(cfgs)
         np.testing.assert_array_equal(lat, ref[0], err_msg=k)
         np.testing.assert_array_equal(bram, ref[1], err_msg=k)
         np.testing.assert_array_equal(dead, ref[2], err_msg=k)
@@ -221,7 +226,7 @@ def test_spawn_preserves_mesh_and_calibration_lists_mesh():
     clone = impl.spawn()
     assert clone.mesh is impl.mesh and clone.inner == impl.inner
     g = build_simgraph(mult_by_2(24))
-    ev = BatchedEvaluator(g, backend="auto")
+    ev = BatchedEvaluator(g, EvalConfig(backend="auto", max_iters=64))
     assert "mesh" in ev.calibration["probe_s"]
     assert ev.backend == min(ev.calibration["probe_s"],
                              key=ev.calibration["probe_s"].get)
@@ -249,11 +254,11 @@ def test_jit_cache_env_populates_cache_dir(tmp_path):
     env["PYTHONPATH"] = os.pathsep.join(sys.path)
     code = (
         "import numpy as np\n"
-        "from repro.core import build_simgraph\n"
+        "from repro.core import EvalConfig, build_simgraph\n"
         "from repro.core.simulate import BatchedEvaluator\n"
         "from repro.designs.ddcf import mult_by_2\n"
         "g = build_simgraph(mult_by_2(8))\n"
-        "ev = BatchedEvaluator(g, backend='jax')\n"
+        "ev = BatchedEvaluator(g, EvalConfig(backend='jax', max_iters=64))\n"
         "ev.evaluate(np.stack([g.upper_bounds] * 2))\n")
     subprocess.run([sys.executable, "-c", code], env=env, check=True,
                    capture_output=True, text=True)

@@ -3,7 +3,7 @@ effectiveness."""
 
 import pytest
 
-from repro.core import FifoAdvisor, build_simgraph
+from repro.core import EvalConfig, FifoAdvisor, build_simgraph
 from repro.core.optimizers import EvalContext
 from repro.core.prune import local_lower_bounds, pair_feasible, task_pairs
 from repro.core.simulate import evaluate_np
@@ -58,7 +58,8 @@ def test_single_fifo_pairs_not_pruned():
 
 def test_pruning_removes_deadlocked_samples(tree_graph):
     adv_off = FifoAdvisor(make_design("k15mmtree"))
-    adv_on = FifoAdvisor(make_design("k15mmtree"), local_bounds=True)
+    adv_on = FifoAdvisor(make_design("k15mmtree"),
+                         EvalConfig(local_bounds=True))
     r_off = adv_off.run("random", budget=200, seed=0)
     r_on = adv_on.run("random", budget=200, seed=0)
     assert r_off.result.deadlock.sum() > 100

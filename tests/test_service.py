@@ -16,11 +16,15 @@ import json
 import numpy as np
 import pytest
 
-from repro.core import FifoAdvisor
+from repro.core import EvalConfig, FifoAdvisor
 from repro.core.campaign.router import RoundRouter
 from repro.core.service import (AdvisorClient, AdvisoryService,
                                 DesignRegistry, ProtocolError,
-                                ProtocolHandler)
+                                ProtocolHandler, SessionHandle, adapt_v1)
+from repro.core.service.protocol import (E_BAD_DESIGN, E_BAD_OPTIMIZER,
+                                         E_BAD_REQUEST, E_BAD_SESSION,
+                                         E_OVERLOADED, E_PROTO, PROTO,
+                                         SUPPORTED_PROTOS)
 from repro.designs import make_design
 
 DESIGNS = ("gemm", "FeedForward")
@@ -61,7 +65,8 @@ def test_concurrent_sessions_bit_identical_to_solo():
 def test_forced_hetero_packing_bit_identical():
     """hetero=True packs cross-design rows into shared dispatches and
     still reproduces every solo run exactly."""
-    with AdvisoryService(hetero=True, max_iters=64) as svc:
+    with AdvisoryService(hetero=True,
+                         config=EvalConfig(max_iters=64)) as svc:
         sids = [svc.open_session(d, optimizer=o, budget=BUDGET,
                                  seed=s).id for d, o, s in SESSIONS]
         svc.run_until_idle()
@@ -234,15 +239,140 @@ def test_protocol_roundtrip_and_errors():
     assert not bad["ok"] and bad["id"] == 7
 
 
+def test_error_frames_carry_stable_codes():
+    """Every failure class maps to its documented ERROR_CODES entry —
+    clients branch on ``code``, never on message prose."""
+    handler = ProtocolHandler(AdvisoryService())
+    cases = [
+        ({"op": "nope"}, E_PROTO),
+        ({"op": "hello", "proto": 99}, E_PROTO),
+        ({"op": "open"}, E_BAD_REQUEST),
+        ({"op": "status"}, E_BAD_REQUEST),
+        ({"op": "open", "design": "no_such_design"}, E_BAD_DESIGN),
+        ({"op": "open", "design": "gemm",
+          "optimizer": "no_such_optimizer"}, E_BAD_OPTIMIZER),
+        ({"op": "status", "session": "s99"}, E_BAD_SESSION),
+        ({"op": "snapshot"}, E_BAD_REQUEST),
+    ]
+    for msg, code in cases:
+        out = handler.handle(msg)
+        assert not out["ok"] and out["code"] == code, (msg, out)
+        assert out["error"]            # the v1 human string is still there
+
+
+def test_hello_negotiates_proto_and_advertises_ops():
+    with AdvisorClient() as client:
+        assert client.proto == PROTO
+        for proto in SUPPORTED_PROTOS:
+            hello = client.request({"op": "hello", "proto": proto})
+            assert hello["proto"] == proto
+            assert "release" in hello["ops"]
+            assert "close" not in hello["ops"]   # v1 spelling not advertised
+        with pytest.raises(ProtocolError) as err:
+            client.request({"op": "hello", "proto": 3})
+        assert err.value.code == E_PROTO
+
+
+def test_v1_messages_round_trip_through_adapter():
+    """Every v1 request — including the renamed ``close`` — must keep
+    working verbatim against a v2 handler (no hello, v1 field names)."""
+    assert adapt_v1({"op": "close", "session": "s0"})["op"] == "release"
+    assert adapt_v1({"op": "status", "session": "s0"})["op"] == "status"
+    handler = ProtocolHandler(AdvisoryService())
+    opened = handler.handle({"op": "open", "design": "gemm",
+                             "optimizer": "grouped_random", "budget": 20,
+                             "id": "v1-1"})
+    assert opened["ok"] and opened["id"] == "v1-1"
+    sid = opened["session"]
+    v1_ops = [{"op": "status", "session": sid},
+              {"op": "step"},
+              {"op": "run"},
+              {"op": "result", "session": sid},
+              {"op": "designs"},
+              {"op": "stats"},
+              {"op": "cancel", "session": sid},
+              {"op": "close", "session": sid},    # v1 name for release
+              {"op": "shutdown"}]
+    for msg in v1_ops:
+        out = handler.handle(dict(msg, id=f"v1-{msg['op']}"))
+        assert out["ok"], (msg, out)
+        assert out["id"] == f"v1-{msg['op']}"
+    # the closed session is really gone
+    assert not handler.handle({"op": "status", "session": sid})["ok"]
+
+
+def test_session_handle_stream_and_context_manager():
+    with AdvisorClient() as client:
+        with client.open("gemm", optimizer="grouped_random",
+                         budget=30, progress=True) as h:
+            assert isinstance(h, SessionHandle)
+            assert isinstance(h, str)          # the handle IS the sid
+            assert json.dumps({"session": h})  # JSON-safe as a string
+            events = list(h.stream())
+            assert events and events[-1]["event"] == "done"
+            assert any(e["event"] == "progress" for e in events)
+            assert h.status()["state"] == "done"
+            assert h.result().result.configs.shape[0] > 0
+            assert h.result_json()["design"] == "gemm"
+        # the with-block released the session server-side
+        assert client.service.sessions == {}
+        with pytest.raises(ProtocolError) as err:
+            h.status()
+        assert err.value.code == E_BAD_SESSION
+
+
+def test_deprecated_sid_methods_still_work_and_warn():
+    with AdvisorClient() as client:
+        h = client.open("gemm", optimizer="grouped_random", budget=20)
+        client.drive()
+        sid = str(h)
+        with pytest.warns(DeprecationWarning, match="status"):
+            assert client.status(sid)["state"] == "done"
+        with pytest.warns(DeprecationWarning, match="result"):
+            assert client.result(sid).result.configs.shape[0] > 0
+        with pytest.warns(DeprecationWarning, match="result_json"):
+            assert client.result_json(sid)["design"] == "gemm"
+        with pytest.warns(DeprecationWarning, match="release"):
+            rel = client.release(sid)
+        assert rel["released"] and rel["state"] == "done"
+
+
+def test_overload_sheds_with_retry_after():
+    """At the session cap, ``open`` fails fast with E_OVERLOADED and a
+    positive retry hint; running sessions never exceed the cap and
+    admission resumes after a release."""
+    with AdvisorClient(max_sessions=2) as client:
+        h1 = client.open("gemm", optimizer="grouped_random", budget=20)
+        h2 = client.open("gemm", optimizer="grouped_random", budget=20,
+                         seed=1)
+        with pytest.raises(ProtocolError) as err:
+            client.open("gemm", optimizer="grouped_random", budget=20,
+                        seed=2)
+        assert err.value.code == E_OVERLOADED
+        assert err.value.extra["retry_after_s"] > 0
+        assert err.value.extra["max_sessions"] == 2
+        assert len(client.service.running) <= 2
+        assert client.service.stats()["rejected"] == 1
+        client.drive()
+        assert_identical(h1.result(), solo_run("gemm", "grouped_random",
+                                               0, 20))
+        h1.release()
+        h2.release()
+        h3 = client.open("gemm", optimizer="grouped_random", budget=20,
+                         seed=2)             # admission resumes
+        client.drive()
+        assert h3.status()["state"] == "done"
+
+
 def test_release_evicts_session_and_hetero_ignores_workers():
     with AdvisorClient() as client:
-        sid = client.open("gemm", optimizer="grouped_random", budget=20)
+        h = client.open("gemm", optimizer="grouped_random", budget=20)
         client.drive()
-        assert client.result(sid).result.configs.shape[0] > 0
-        rel = client.release(sid)
+        assert h.result().result.configs.shape[0] > 0
+        rel = h.release()
         assert rel["released"] and rel["state"] == "done"
         with pytest.raises(ProtocolError):
-            client.status(sid)     # forgotten server-side
+            h.status()     # forgotten server-side
         assert client.service.sessions == {}
     # hetero owns full-solve rows in-process: workers are normalized off
     with AdvisoryService(hetero=True, workers=4) as svc:
@@ -262,10 +392,11 @@ def test_optimizer_close_is_public_and_terminal():
 
 def test_advisor_client_run_matches_solo():
     with AdvisorClient() as client:
-        dse = client.run("gemm", optimizer="grouped_sa", budget=BUDGET,
-                         seed=2)
-        assert_identical(dse, solo_run("gemm", "grouped_sa", 2))
-        payload = client.result_json("s0")
+        h = client.open("gemm", optimizer="grouped_sa", budget=BUDGET,
+                        seed=2)
+        client.drive()
+        assert_identical(h.result(), solo_run("gemm", "grouped_sa", 2))
+        payload = h.result_json()
         assert payload["design"] == "gemm"
         assert json.dumps(payload)   # JSON-ready end to end
         with pytest.raises(ProtocolError):

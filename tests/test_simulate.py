@@ -13,6 +13,7 @@ from hypothesis import strategies as st
 from repro.core.design import Design
 from repro.core.oracle import simulate
 from repro.core.simgraph import DesignRuleError, build_simgraph
+from repro.core.config import EvalConfig
 from repro.core.simulate import BatchedEvaluator, evaluate_np
 from repro.designs.builder import map_stage, producer, sink, streams
 from repro.designs.ddcf import mult_by_2
@@ -59,7 +60,7 @@ def test_jax_backend_equals_oracle_on_random_configs():
     rng = np.random.default_rng(0)
     d = mult_by_2(24)
     g = build_simgraph(d)
-    ev = BatchedEvaluator(g, backend="jax", max_iters=64)
+    ev = BatchedEvaluator(g, EvalConfig(backend="jax", max_iters=64))
     cfgs = np.stack([rng.integers(2, 30, size=2) for _ in range(32)])
     lat, bram, dead = ev.evaluate(cfgs)
     for i in range(32):
@@ -72,7 +73,7 @@ def test_jax_backend_equals_oracle_on_random_configs():
 def test_low_iteration_cap_falls_back_exactly():
     d = mult_by_2(24)
     g = build_simgraph(d)
-    ev = BatchedEvaluator(g, backend="jax", max_iters=3)
+    ev = BatchedEvaluator(g, EvalConfig(backend="jax", max_iters=3))
     lat, _, dead = ev.evaluate(np.array([[24, 2], [2, 2]]))
     assert ev.stats.n_fallbacks >= 1
     r0 = simulate(d, [24, 2])

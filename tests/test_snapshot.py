@@ -1,0 +1,188 @@
+"""Warm-restart snapshots: bit-identity, integrity, and speed.
+
+The format contract (core/service/snapshot.py): a restored advisor is
+indistinguishable from the one that was saved in every observable —
+frontiers, histories, baselines, certificates, cache contents — and a
+snapshot that fails *any* integrity check (checksum, version, config)
+raises SnapshotError instead of loading approximately.
+"""
+
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import EvalConfig, FifoAdvisor
+from repro.core.service import (AdvisoryService, DesignRegistry,
+                                ProtocolHandler, SnapshotError,
+                                load_snapshot, save_snapshot)
+from repro.core.service.snapshot import MANIFEST, SNAPSHOT_VERSION
+from repro.designs import make_design
+
+DESIGN = "gemm"
+BUDGET = 60
+
+
+def warm_registry(config=None, designs=(DESIGN,), budget=BUDGET):
+    """A registry whose advisors have run a search (cache + history)."""
+    reg = DesignRegistry(config or EvalConfig())
+    runs = {}
+    for name in designs:
+        adv = reg.register(name)
+        runs[name] = adv.run("grouped_sa", budget=budget, seed=0)
+    return reg, runs
+
+
+# ------------------------------------------------------------ round trip
+def test_restore_is_bit_identical_and_simulates_nothing(tmp_path):
+    reg, runs = warm_registry()
+    save_snapshot(reg, str(tmp_path))
+
+    t0 = time.perf_counter()
+    reg2 = load_snapshot(str(tmp_path))
+    restore_s = time.perf_counter() - t0
+    adv = reg2[DESIGN]
+
+    # structural identity
+    ref = reg[DESIGN]
+    assert adv.config == ref.config
+    assert np.array_equal(adv.graph.upper_bounds, ref.graph.upper_bounds)
+    assert adv.baseline_max.latency == ref.baseline_max.latency
+    assert adv.baseline_min.deadlocked == ref.baseline_min.deadlocked
+    assert len(adv.cache) == len(ref.cache)
+
+    # the warm-restart payoff: re-running the same search touches only
+    # the restored cache — zero fresh simulations, identical trajectory
+    dse = adv.run("grouped_sa", budget=BUDGET, seed=0)
+    ref_dse = runs[DESIGN]
+    assert dse.result.n_evals == 0
+    assert np.array_equal(dse.result.configs, ref_dse.result.configs)
+    assert np.array_equal(dse.result.latency, ref_dse.result.latency)
+    assert np.array_equal(dse.frontier_points, ref_dse.frontier_points)
+    assert dse.hypervolume() == ref_dse.hypervolume()
+
+    # and it is fast: restoring skips tracing/condensation/simulation
+    fresh = FifoAdvisor(make_design(DESIGN))
+    assert restore_s < max(0.5, fresh.trace_time_s), (
+        f"restore took {restore_s:.3f}s vs trace {fresh.trace_time_s:.3f}s")
+
+
+def test_restore_preserves_certified_floor(tmp_path):
+    cfg = EvalConfig(certified_floor=True)
+    reg = DesignRegistry(cfg)
+    reg.register("gemm")
+    ref = reg["gemm"]
+    ref.run("grouped_random", budget=30, seed=0)
+    assert ref._certification is not None
+    save_snapshot(reg, str(tmp_path))
+    adv = load_snapshot(str(tmp_path))["gemm"]
+    cert, ref_cert = adv._certification, ref._certification
+    assert cert is not None
+    assert np.array_equal(cert.depths, ref_cert.depths)
+    assert cert.latency == ref_cert.latency
+    assert cert.n_probes == ref_cert.n_probes
+
+
+def test_snapshot_skips_custom_designs(tmp_path):
+    from repro.core.design import Design
+    d = Design("custom_inline")
+    d.fifo("a", width=32)
+
+    @d.task("src")
+    def src(ctx):
+        for i in range(8):
+            yield ctx.delay(1)
+            yield ctx.write("a", i)
+
+    @d.task("sink")
+    def sink(ctx):
+        for _ in range(8):
+            yield ctx.read("a")
+
+    reg, _ = warm_registry()
+    reg.register("custom_inline", d)
+    manifest = save_snapshot(reg, str(tmp_path))
+    assert manifest["skipped"] == ["custom_inline"]
+    assert "custom_inline" not in manifest["designs"]
+    reg2 = load_snapshot(str(tmp_path))
+    assert reg2.names() == [DESIGN]
+
+
+# ------------------------------------------------------------- integrity
+def test_tampered_snapshot_is_rejected(tmp_path):
+    reg, _ = warm_registry()
+    save_snapshot(reg, str(tmp_path))
+    victim = tmp_path / f"{DESIGN}.snap.npz"
+    blob = bytearray(victim.read_bytes())
+    blob[len(blob) // 2] ^= 0xFF
+    victim.write_bytes(bytes(blob))
+    with pytest.raises(SnapshotError, match="checksum"):
+        load_snapshot(str(tmp_path))
+
+
+def test_version_mismatch_is_rejected(tmp_path):
+    reg, _ = warm_registry()
+    save_snapshot(reg, str(tmp_path))
+    mpath = tmp_path / MANIFEST
+    manifest = json.loads(mpath.read_text())
+    manifest["version"] = SNAPSHOT_VERSION + 1
+    mpath.write_text(json.dumps(manifest))
+    with pytest.raises(SnapshotError, match="version"):
+        load_snapshot(str(tmp_path))
+
+
+def test_missing_file_and_unreadable_manifest_rejected(tmp_path):
+    reg, _ = warm_registry()
+    save_snapshot(reg, str(tmp_path))
+    os.remove(tmp_path / f"{DESIGN}.snap.npz")
+    with pytest.raises(SnapshotError, match="missing"):
+        load_snapshot(str(tmp_path))
+    with pytest.raises(SnapshotError, match="manifest"):
+        load_snapshot(str(tmp_path / "no_such_dir"))
+
+
+def test_config_mismatch_is_rejected(tmp_path):
+    reg, _ = warm_registry(EvalConfig(max_iters=64))
+    save_snapshot(reg, str(tmp_path))
+    other = DesignRegistry(EvalConfig(max_iters=128))
+    with pytest.raises(SnapshotError, match="config"):
+        load_snapshot(str(tmp_path), other)
+    # matching registry adopts fine
+    ok = DesignRegistry(EvalConfig(max_iters=64))
+    load_snapshot(str(tmp_path), ok)
+    assert ok.names() == [DESIGN]
+
+
+# ----------------------------------------------------- protocol + service
+def test_snapshot_op_and_warm_first_answer(tmp_path):
+    """End-to-end through the protocol: a served session populates the
+    registry, the ``snapshot`` op persists it, and a *restarted* service
+    answers its first request from cache — warm and bit-identical."""
+    svc = AdvisoryService()
+    handler = ProtocolHandler(svc, snapshot_dir=str(tmp_path))
+    opened = handler.handle({"op": "open", "design": DESIGN,
+                             "optimizer": "grouped_sa", "budget": BUDGET})
+    assert opened["ok"]
+    handler.handle({"op": "run"})
+    ref = handler.handle({"op": "result", "session": opened["session"]})
+    snap = handler.handle({"op": "snapshot"})
+    assert snap["ok"] and snap["designs"] == [DESIGN]
+    svc.close()
+
+    # "restart": fresh service, registry restored from disk
+    t0 = time.perf_counter()
+    reg = load_snapshot(str(tmp_path))
+    svc2 = AdvisoryService(registry=reg)
+    handler2 = ProtocolHandler(svc2)
+    opened2 = handler2.handle({"op": "open", "design": DESIGN,
+                               "optimizer": "grouped_sa",
+                               "budget": BUDGET})
+    handler2.handle({"op": "run"})
+    res = handler2.handle({"op": "result", "session": opened2["session"]})
+    first_answer_s = time.perf_counter() - t0
+    assert res["result"]["frontier"] == ref["result"]["frontier"]
+    assert res["result"]["n_evals"] == 0           # pure cache hits
+    assert first_answer_s < 2.0, f"warm first answer {first_answer_s:.2f}s"
+    svc2.close()
