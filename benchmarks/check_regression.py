@@ -141,6 +141,46 @@ def check_condense(base, cur, floor, frac, failures):
                 f"{frac:.0%} of baseline {ref:.2f}x")
 
 
+def check_condensed_kernel(base, cur, min_wins, frac, failures):
+    """Gate the fused-kernel rung shootout (``benchmarks/condense.py``).
+
+    Identity of the kernel's on-device certificate path with the scan
+    rung protocol is unconditional.  The perf criterion is ordinal — the
+    kernel must still *win* (speedup > 1) on at least ``min_wins``
+    benchmark designs, with auto-calibration agreeing on those designs —
+    plus a generous baseline-relative band on the geomean (shared-runner
+    interpret-mode wall clocks are noisy).
+    """
+    if cur is None:
+        failures.append("condense.quick.json missing from current run")
+        return
+    if not cur.get("kernel_identical_all", False):
+        failures.append(
+            "fused-kernel regression: kernel rung results (status / "
+            "latency / certificate mask) no longer identical to the "
+            "scan + verify_rows protocol")
+    wins = cur.get("kernel_wins", 0)
+    n = cur.get("kernel_designs", 0)
+    if wins < min_wins:
+        failures.append(
+            f"fused-kernel regression: kernel beats the scan rung on "
+            f"only {wins}/{n} designs (need >= {min_wins})")
+    picks = cur.get("calibration_picks", {})
+    n_pallas = sum(1 for v in picks.values() if v == "pallas")
+    if n_pallas < min_wins:
+        failures.append(
+            f"calibration regression: auto picks the kernel backend on "
+            f"only {n_pallas}/{len(picks)} designs ({picks}); the fused "
+            f"path stopped paying end to end")
+    speedup = cur.get("kernel_geomean_speedup", 0.0)
+    if base is not None:
+        ref = base.get("kernel_geomean_speedup")
+        if ref and speedup < frac * ref:
+            failures.append(
+                f"fused-kernel speedup regression: {speedup:.2f}x < "
+                f"{frac:.0%} of baseline {ref:.2f}x")
+
+
 def check_mesh(base, cur, floor, eff, frac, failures):
     """Gate the sharded-evaluation benchmark (``benchmarks/mesh.py``).
 
@@ -284,6 +324,14 @@ def main(argv=None) -> int:
     ap.add_argument("--condense-frac", type=float, default=0.4,
                     help="required fraction of the baseline condensed "
                          "speedup")
+    # the ISSUE-8 criterion: the fused kernel beats the scan rung on
+    # >= 2 of the 3 benchmark designs with calibration agreeing
+    ap.add_argument("--kernel-min-wins", type=int, default=2,
+                    help="designs the fused kernel must beat the scan "
+                         "rung on (and auto-calibration must pick it)")
+    ap.add_argument("--kernel-frac", type=float, default=0.4,
+                    help="required fraction of the baseline fused-kernel "
+                         "geomean speedup")
     # host-platform devices are threads: the achievable 8-vs-1-shard
     # speedup scales with real cores, so the requirement is
     # max(floor, eff * min(8, cores)) — 3x at 8 cores (the ISSUE
@@ -324,6 +372,10 @@ def main(argv=None) -> int:
     check_condense(load(args.baseline, "condense.quick.json"),
                    load(args.current, "condense.quick.json"),
                    args.condense_floor, args.condense_frac, failures)
+    check_condensed_kernel(load(args.baseline, "condense.quick.json"),
+                           load(args.current, "condense.quick.json"),
+                           args.kernel_min_wins, args.kernel_frac,
+                           failures)
     check_mesh(load(args.baseline, "mesh.quick.json"),
                load(args.current, "mesh.quick.json"),
                args.mesh_floor, args.mesh_eff, args.mesh_frac, failures)
@@ -339,6 +391,7 @@ def main(argv=None) -> int:
     print("regression gate passed (accuracy exact, cache hit rate held, "
           "campaign + service speedups held, fuzz differential clean, "
           "certification speedup held, condensation exact + still paying, "
+          "fused kernel exact + winning its rungs, "
           "mesh sharding exact + scaling, load SLOs + overload shed held)")
     return 0
 

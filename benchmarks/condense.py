@@ -13,8 +13,17 @@ proportional to E_pad, so compression converts ~directly into speedup
 (folding back-pressure anchors away also slashes Jacobi iterations).
 The per-row numpy worklist is wave-bound, reported for reference.
 
+The **aggressive-rung shootout** additionally races the fused Pallas
+mega-kernel (:mod:`repro.kernels.fifo_eval.condensed` — fixpoint +
+on-device certificate in one launch) against the scan backend's rung
+protocol (evaluate, ship event times to the host, ``verify_rows``) at
+the top rung, asserting identical statuses / latencies / certificate
+masks, and records which backend ``backend="auto"`` calibration picks
+per design.
+
 ``check_regression.py``'s ``check_condense`` gates on the scan-backend
-geomean speedup and on result identity.
+geomean speedup and on result identity; ``check_condensed_kernel``
+gates on the shootout (identity + the kernel still winning).
 """
 
 from __future__ import annotations
@@ -43,12 +52,75 @@ def _bench(ev, cfgs, reps: int):
     return best, result
 
 
+def _bench_fn(fn, reps: int):
+    fn()                                  # warm / compile
+    best, result = float("inf"), None
+    for _ in range(reps):
+        with Timer() as t:
+            result = fn()
+        best = min(best, t.s)
+    return best, result
+
+
+def _rung_shootout(g, cg, cfgs, reps: int) -> Dict:
+    """Race the fused kernel against the scan rung protocol at one rung.
+
+    The scan side pays the rung's REAL cost: evaluate with per-anchor
+    times, ship them to the host, run ``verify_rows`` on converged rows.
+    The kernel side is one ``evaluate_certified`` launch.  Identity of
+    statuses, certificate masks, and converged-row latencies is asserted
+    (integer-exact, so ``==``).
+    """
+    from repro.core.backends.base import CONVERGED
+    from repro.core.backends.fixpoint import FixpointBackend
+    from repro.core.backends.pallas import PallasBackend
+    from repro.core.condense import verify_rows
+
+    C = cfgs.shape[0]
+    scan = FixpointBackend(max_iters=64)
+    scan.prepare(cg)
+    kern = PallasBackend(max_iters=64)
+    kern.prepare(cg)
+    if not kern.fused_certificate:
+        return {"skipped": "no certificate tables for the fused kernel"}
+
+    def scan_rung():
+        lat, bram, status, times = scan.evaluate_with_times(cfgs)
+        ok = np.zeros(C, dtype=bool)
+        conv = status == CONVERGED
+        if conv.any():
+            ok[conv] = verify_rows(cg, cfgs[conv], times[conv])
+        return lat, bram, status, ok
+
+    def kernel_rung():
+        return kern.evaluate_certified(cfgs)
+
+    t_scan, r_scan = _bench_fn(scan_rung, reps)
+    t_kern, r_kern = _bench_fn(kernel_rung, reps)
+    conv = r_scan[2] == CONVERGED
+    identical = (
+        bool((r_scan[2] == r_kern[2]).all())           # statuses
+        and bool((r_scan[3] == r_kern[3]).all())       # cert masks
+        and bool((r_scan[1] == r_kern[1]).all())       # bram
+        and bool((r_scan[0][conv] == r_kern[0][conv]).all()))
+    return {
+        "rung": cg.tag,
+        "scan_cfgs_per_s": round(C / max(t_scan, 1e-12), 1),
+        "kernel_cfgs_per_s": round(C / max(t_kern, 1e-12), 1),
+        "kernel_speedup": round(t_scan / max(t_kern, 1e-12), 2),
+        "certified_rows": int(np.asarray(r_kern[3]).sum()),
+        "identical": identical,
+    }
+
+
 def run(seed: int = 0) -> Dict:
     C = 32 if quick_mode() else 64
     reps = 2 if quick_mode() else 3
     out: Dict = {"designs": {}, "batch": C}
     scan_speedups = []
     identical_all = True
+    kernel_speedups, calib_picks = [], {}
+    kernel_wins, kernel_identical = 0, True
     for name in DESIGNS:
         g = build_simgraph(make_design(name))
         rng = np.random.default_rng(seed)
@@ -88,8 +160,25 @@ def run(seed: int = 0) -> Dict:
                 cert_failures=ev_c.stats.n_cond_fail)
             if backend == "jax":
                 scan_speedups.append(speedup)
+        # aggressive-rung shootout: fused kernel vs scan-rung protocol
+        if cgs:
+            shoot = _rung_shootout(g, cgs[0], cfgs.astype(np.int32), reps)
+            ev_auto = BatchedEvaluator(
+                g, EvalConfig(backend="auto", max_iters=64))
+            shoot["calibration_pick"] = ev_auto.backend
+            row["kernel_shootout"] = shoot
+            if "kernel_speedup" in shoot:
+                kernel_speedups.append(shoot["kernel_speedup"])
+                kernel_wins += shoot["kernel_speedup"] > 1.0
+                kernel_identical &= shoot["identical"]
+                calib_picks[name] = shoot["calibration_pick"]
         out["designs"][name] = row
     out["geomean_speedup_scan"] = round(geomean(scan_speedups), 2)
+    out["kernel_geomean_speedup"] = round(geomean(kernel_speedups), 2)
+    out["kernel_wins"] = int(kernel_wins)
+    out["kernel_designs"] = len(kernel_speedups)
+    out["kernel_identical_all"] = bool(kernel_identical)
+    out["calibration_picks"] = calib_picks
     out["geomean_condensation_ratio"] = round(geomean(
         [d["condensation_ratio"] for d in out["designs"].values()]), 2)
     out["identical_all"] = bool(identical_all)
@@ -104,11 +193,25 @@ def main():
                          for r in d["rungs"])
         cols = "  ".join(
             f"{k}={v['speedup']:.2f}x" for k, v in d["backends"].items())
+        shoot = d.get("kernel_shootout", {})
+        extra = ""
+        if "kernel_speedup" in shoot:
+            extra = (f" kernel@{shoot['rung']}={shoot['kernel_speedup']}x"
+                     f" ({shoot['kernel_cfgs_per_s']:.0f} vs "
+                     f"{shoot['scan_cfgs_per_s']:.0f} cfg/s,"
+                     f" auto->{shoot['calibration_pick']})")
         print(f"{name:14s} E={d['events_raw']:6d} [{rungs}] {cols} "
-              f"identical={all(v['identical'] for v in d['backends'].values())}")
+              f"identical="
+              f"{all(v['identical'] for v in d['backends'].values())}"
+              f"{extra}")
     print(f"geomean scan speedup {out['geomean_speedup_scan']}x, "
           f"condensation ratio {out['geomean_condensation_ratio']}x, "
           f"identical={out['identical_all']}")
+    print(f"fused kernel: geomean {out['kernel_geomean_speedup']}x over "
+          f"the scan rung, wins {out['kernel_wins']}/"
+          f"{out['kernel_designs']}, "
+          f"identical={out['kernel_identical_all']}, "
+          f"calibration picks {out['calibration_picks']}")
 
 
 if __name__ == "__main__":

@@ -26,7 +26,8 @@ from repro.core.backends.base import (BACKENDS, BIG, CONVERGED, DEADLOCK,
                                       get_backend, register_backend)
 from repro.core.backends.cache import CacheStats, ConfigCache
 from repro.core.backends.dispatch import (BUCKETS, DispatchPolicy,
-                                          HeteroDispatcher, HeteroStats)
+                                          HeteroDispatcher, HeteroStats,
+                                          RungCascade)
 from repro.core.backends.worklist import (IncrementalStats, WorklistBackend,
                                           WorklistState, affected_segments,
                                           evaluate_np, solve, solve_delta)
@@ -60,7 +61,7 @@ __all__ = [
     "DEADLOCK", "DispatchPolicy", "EvalBackend", "F32_EXACT_LIMIT",
     "FixpointBackend", "GraphOperands", "HeteroDispatcher", "HeteroOperands",
     "HeteroStats", "IncrementalStats", "MeshBackend", "PallasBackend",
-    "UNRESOLVED",
+    "RungCascade", "UNRESOLVED",
     "WorklistBackend", "WorklistState", "affected_segments",
     "available_backends", "bram_count_jnp", "build_operands",
     "depth_operands", "evaluate_np", "extend_operands", "get_backend",

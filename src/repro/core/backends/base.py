@@ -48,6 +48,11 @@ class EvalBackend(abc.ABC):
     #: whether the dispatch policy should pad batches to bucket sizes so the
     #: backend's jit cache sees a small, reusable set of batch shapes
     wants_bucketing: bool = False
+    #: True when (prepared on a CondensedGraph) the backend fuses the
+    #: exactness certificate into evaluation: it then exposes
+    #: ``evaluate_certified(m) -> (lat, bram, status, cert)`` and the
+    #: rung cascade skips the host-side ``verify_rows`` entirely
+    fused_certificate: bool = False
 
     def __init__(self, max_iters: int = 64):
         self.max_iters = int(max_iters)

@@ -15,6 +15,14 @@ Owns the three batch-shaping concerns that used to be tangled into
    feasible rows converge slowly) are re-solved exactly by the worklist
    arbiter, counted in ``stats.n_fallbacks``.
 
+:class:`RungCascade` owns the condensation escalation ladder (moved here
+from ``BatchedEvaluator``): route each row through the most aggressive
+admissible rung, accept rows whose exactness certificate passes (or whose
+relaxed solve already proves deadlock), and fall through rung by rung to
+the raw dispatch backstop.  Kernel-backed rung evaluators certify
+on-device (``fused_certificate``); the rest return event times for the
+host-side ``condense.verify_rows``.
+
 :class:`HeteroDispatcher` extends the same concerns across *designs*: it
 packs rows from many SimGraphs into one lane-aligned hetero batch (shared
 E*/F*/R* envelope, one jit cache for the whole campaign instead of one
@@ -30,7 +38,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.backends.base import (DEADLOCK, F32_EXACT_LIMIT,
+from repro.core.backends.base import (CONVERGED, DEADLOCK, F32_EXACT_LIMIT,
                                       EvalBackend, UNRESOLVED)
 from repro.core.backends.worklist import WorklistBackend
 from repro.core.simgraph import SimGraph
@@ -89,6 +97,100 @@ class DispatchPolicy:
                 stats.n_fallbacks += int(unresolved.size)
         lat = np.where(dead, -1, lat)
         return lat, bram, dead
+
+
+class RungCascade:
+    """The condensation escalation ladder over certified rungs.
+
+    ``rungs`` is the ordered ``[(CondensedGraph, prepared backend), ...]``
+    list (most aggressive first); ``policy`` the shared
+    :class:`DispatchPolicy`; ``primary`` the raw-graph backend used as
+    the unconditional backstop.  Per rung, rows inside the rung's
+    routing box are evaluated on the condensed stream and accepted when
+
+    * the relaxed solve proves DEADLOCK (sound: the condensed fixpoint
+      is a lower bound of the raw one), or
+    * the row CONVERGED and its exactness certificate passes.
+
+    Certification runs one of two ways:
+
+    * **fused** — kernel-backed rung evaluators
+      (``backend.fused_certificate``) evaluate and certify in ONE device
+      program via ``evaluate_certified``; the event-time matrix never
+      reaches the host, so a fully-certifying batch costs exactly one
+      dispatch (asserted by the device-residency regression tests);
+    * **host** — scan/worklist evaluators return per-anchor times
+      (``evaluate_with_times``) and ``condense.verify_rows`` checks the
+      folded cross constraints on the host.
+
+    Everything still pending after the last rung goes to the raw
+    dispatch backstop (bucketing + UNRESOLVED worklist escalation).
+    """
+
+    def __init__(self, rungs, policy: DispatchPolicy,
+                 primary: EvalBackend):
+        self.rungs = list(rungs)
+        self.policy = policy
+        self.primary = primary
+
+    def evaluate(self, m: np.ndarray, stats=None
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        """Unique (C, F) rows -> exact ``(latency i64, deadlock bool)``
+        with -1 latency on deadlocked rows."""
+        from repro.core.condense import verify_rows
+        m = np.asarray(m, dtype=np.int64)
+        C = m.shape[0]
+        lat = np.zeros(C, dtype=np.int64)
+        dead = np.zeros(C, dtype=bool)
+        pending = np.ones(C, dtype=bool)
+        for cg, impl in self.rungs:
+            sel = np.flatnonzero(pending & cg.in_box(m))
+            if not sel.size:
+                continue
+            rows = m[sel]
+            fused = impl.fused_certificate
+            if impl.wants_bucketing or fused:
+                # the fused kernel path buckets too: its jit cache is
+                # keyed on the padded batch shape like any scan backend
+                batch = self.policy.pad_batch(rows)
+            else:
+                batch = rows
+            if fused:
+                rlat, _, rstatus, ok = impl.evaluate_certified(batch)
+                rlat = rlat[: sel.size]
+                rstatus = rstatus[: sel.size]
+                ok = ok[: sel.size]
+                dl = rstatus == DEADLOCK   # sound: relaxed system stalls
+            else:
+                rlat, _, rstatus, times = impl.evaluate_with_times(batch)
+                rlat = rlat[: sel.size]
+                rstatus = rstatus[: sel.size]
+                times = times[: sel.size, : cg.n_events]
+                dl = rstatus == DEADLOCK
+                ok = np.zeros(sel.size, dtype=bool)
+                conv = rstatus == CONVERGED
+                if conv.any():
+                    ci = np.flatnonzero(conv)
+                    ok[ci] = verify_rows(cg, rows[ci], times[ci])
+            acc = dl | ok
+            if stats is not None:
+                stats.n_cond_fail += int(sel.size - acc.sum())
+            if acc.any():
+                idx = sel[acc]
+                lat[idx] = np.where(dl[acc], -1, rlat[acc])
+                dead[idx] = dl[acc]
+                pending[idx] = False
+                if stats is not None:
+                    stats.n_condensed += int(acc.sum())
+            if not pending.any():
+                break
+        rem = np.flatnonzero(pending)
+        if rem.size:
+            rlat, _, rdead = self.policy.dispatch(
+                self.primary, m[rem], stats)
+            lat[rem] = rlat
+            dead[rem] = rdead
+        return lat, dead
 
 
 @dataclasses.dataclass

@@ -53,9 +53,12 @@ class MeshBackend(_ScanBackend):
         shards: shorthand — build a 1-D eval mesh over this many devices
             (default: every device).  Ignored when ``mesh`` is given.
         inner: ``"fixpoint"`` (the jnp associative-scan reference, the
-            default and the auto-calibration winner post-condensation)
-            or ``"pallas"`` (the hand-rolled kernel; interpret mode on
-            CPU).
+            default) or ``"pallas"`` (the hand-rolled kernels; interpret
+            mode on CPU).  With ``inner="pallas"`` the condensation rung
+            cascade rides the FUSED condensed kernel sharded over the
+            mesh: each device evaluates and certifies its row shard in
+            one launch (``evaluate_certified`` composes with
+            ``shard_map`` unchanged), bit-identical to the solo path.
     """
 
     name = "mesh"

@@ -41,7 +41,7 @@ the latency reduction.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -350,3 +350,161 @@ def depth_operands(ops: GraphOperands, depths: jnp.ndarray
     bp_idx = ops.read_evt_flat[flat]                      # (C, E_pad)
     bp_base = ops.read_off_flat[flat] + 1.0               # (C, E_pad)
     return rd_lat_e, bp_idx, bp_valid, bp_base, structural
+
+
+# --------------------------------------------------------------------------
+# fused exactness-certificate tables (condensed graphs only)
+# --------------------------------------------------------------------------
+#
+# ``repro.core.condense.verify_rows`` checks, per depth row, every folded
+# event's dropped cross constraint against the *expanded* raw-space times
+# ``t_hat[e] = t_cond[cond_of[e]] + off_of[e]``.  Every one of those
+# checks only ever compares two expanded times plus a per-row integer, so
+# it rewrites into CONDENSED anchor space as a flat list of slots
+#
+#     violated  iff  valid and  t_cond[src] - t_cond[dst] > thr
+#
+# * folded read r (raw data source s):  src = cond_of[s],
+#   dst = cond_of[r], thr = (off_of[r] - off_of[s]) - rd_lat[row, fifo_r]
+#   — the read-latency term is the only depth-dependent part;
+# * folded write w at rank j of fifo f with depth d:  active iff j >= d;
+#   its partner read slot is ``pos = read_base[f] + j - d`` whose
+#   condensed anchor/offset are exactly ``read_evt_flat[pos]`` /
+#   ``read_off_flat[pos]`` (GraphOperands already carries both), so
+#   src = read_evt_flat[pos], dst = cond_of[w],
+#   thr = off_of[w] - read_off_flat[pos] - 1;  a write whose partner
+#   read does not exist (``j - d >= n_reads[f]``) is a structural
+#   deadlock at that row and is encoded as a forced-fail slot
+#   (src = dst = 0, thr = -1: ``t - t > -1`` always fires).
+#
+# All quantities are integers below the f32-exact limit (the evaluator
+# façade asserts the schedule bound < 2**24), so evaluating the slots in
+# float32 *inside the kernel* is bit-for-bit equal to the int64 host
+# check — the kernel can certify its own fixpoint in the same launch.
+
+
+@dataclasses.dataclass(frozen=True)
+class CertTables:
+    """Depth-independent certificate slots for one CondensedGraph.
+
+    Slots are padded to ``v_pad`` (a LANES multiple) with ``valid = 0``;
+    the depth-dependent parts (read latencies, write activation and
+    partner gathers) are filled per row by :func:`cert_row_operands`.
+    """
+
+    n_read: int              # folded-read slot count
+    n_write: int             # folded-write slot count
+    v_pad: int               # total slots padded to a LANES multiple
+    # folded reads: static anchors, depth-dependent threshold
+    r_src: jnp.ndarray       # (Nr,) i32 cond_of[data_src]
+    r_dst: jnp.ndarray       # (Nr,) i32 cond_of[read]
+    r_base: jnp.ndarray      # (Nr,) f32 off_of[read] - off_of[data_src]
+    r_fifo: jnp.ndarray      # (Nr,) i32
+    # folded writes: depth-dependent partner anchor AND threshold
+    w_dst: jnp.ndarray       # (Nw,) i32 cond_of[write]
+    w_dst_off: jnp.ndarray   # (Nw,) f32 off_of[write]
+    w_fifo: jnp.ndarray      # (Nw,) i32
+    w_rank: jnp.ndarray      # (Nw,) i32
+    w_read_base: jnp.ndarray     # (Nw,) i32 read_base[fifo]
+    w_n_reads: jnp.ndarray       # (Nw,) i32 n_reads[fifo]
+
+
+def build_cert_tables(cg) -> Optional[CertTables]:
+    """Certificate slots for a CondensedGraph (use :func:`get_cert_tables`).
+
+    Returns None when the graph's folded tables cannot be expressed as
+    gather slots (a folded read without a data source would index
+    ``t_hat[:, -1]`` on the host — numpy wraps where jnp clips, so such
+    graphs keep the host verifier).
+    """
+    vr_src = np.asarray(cg.vr_src, dtype=np.int64)
+    if vr_src.size and (vr_src < 0).any():
+        return None
+    cond_of = np.asarray(cg.cond_of, dtype=np.int64)
+    off_of = np.asarray(cg.off_of, dtype=np.float32)
+    vr_idx = np.asarray(cg.vr_idx, dtype=np.int64)
+    vw_idx = np.asarray(cg.vw_idx, dtype=np.int64)
+    vw_fifo = np.asarray(cg.vw_fifo, dtype=np.int64)
+    n_read, n_write = vr_idx.size, vw_idx.size
+    v_pad = max(LANES, -(-max(n_read + n_write, 1) // LANES) * LANES)
+    g = cg.raw
+    return CertTables(
+        n_read=n_read,
+        n_write=n_write,
+        v_pad=v_pad,
+        r_src=jnp.asarray(cond_of[vr_src], dtype=jnp.int32),
+        r_dst=jnp.asarray(cond_of[vr_idx], dtype=jnp.int32),
+        r_base=jnp.asarray(off_of[vr_idx] - off_of[vr_src],
+                           dtype=jnp.float32),
+        r_fifo=jnp.asarray(cg.vr_fifo, dtype=jnp.int32),
+        w_dst=jnp.asarray(cond_of[vw_idx], dtype=jnp.int32),
+        w_dst_off=jnp.asarray(off_of[vw_idx], dtype=jnp.float32),
+        w_fifo=jnp.asarray(vw_fifo, dtype=jnp.int32),
+        w_rank=jnp.asarray(cg.vw_rank, dtype=jnp.int32),
+        w_read_base=jnp.asarray(g.read_base[vw_fifo], dtype=jnp.int32),
+        w_n_reads=jnp.asarray(g.n_reads[vw_fifo], dtype=jnp.int32),
+    )
+
+
+_CERT_MISS = object()
+
+
+def get_cert_tables(cg) -> Optional[CertTables]:
+    """Cached :class:`CertTables` for ``cg`` (None = host verify only)."""
+    cached = getattr(cg, "_cert_tables_cache", _CERT_MISS)
+    if cached is _CERT_MISS:
+        cached = build_cert_tables(cg)
+        cg._cert_tables_cache = cached
+    return cached
+
+
+def cert_row_operands(ops: GraphOperands, ct: CertTables,
+                      depths: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                 jnp.ndarray]:
+    """Per-row certificate slots (jnp, jit traceable).
+
+    depths: (C, F) int.  Returns ``(src i32, dst i32, thr f32, valid
+    f32)``, each (C, v_pad): slot ``v`` of row ``c`` is violated iff
+    ``valid > 0`` and ``t[src] - t[dst] > thr`` at that row's condensed
+    fixpoint — exactly the constraint ``verify_rows`` checks in raw
+    index space.
+    """
+    depths = depths.astype(jnp.int32)
+    C = depths.shape[0]
+    srcs, dsts, thrs, vals = [], [], [], []
+    if ct.n_read:
+        is_bram = ~((depths <= SRL_DEPTH) | (depths * ops.widths <= SRL_BITS))
+        rd_lat_f = 1.0 + is_bram.astype(jnp.float32)          # (C, F)
+        srcs.append(jnp.broadcast_to(ct.r_src[None, :], (C, ct.n_read)))
+        dsts.append(jnp.broadcast_to(ct.r_dst[None, :], (C, ct.n_read)))
+        thrs.append(ct.r_base[None, :] - rd_lat_f[:, ct.r_fifo])
+        vals.append(jnp.ones((C, ct.n_read), dtype=jnp.float32))
+    if ct.n_write:
+        d = depths[:, ct.w_fifo]                              # (C, Nw)
+        j = ct.w_rank[None, :]
+        act = j >= d
+        overrun = act & (j - d >= ct.w_n_reads[None, :])
+        pos = jnp.clip(ct.w_read_base[None, :] + j - d, 0,
+                       ops.n_flat_reads - 1)
+        src = jnp.where(overrun, 0, ops.read_evt_flat[pos])
+        dst = jnp.where(overrun, 0,
+                        jnp.broadcast_to(ct.w_dst[None, :], d.shape))
+        thr = jnp.where(overrun, jnp.float32(-1.0),
+                        ct.w_dst_off[None, :]
+                        - ops.read_off_flat[pos] - 1.0)
+        srcs.append(src)
+        dsts.append(dst)
+        thrs.append(thr)
+        vals.append(act.astype(jnp.float32))
+    n = ct.n_read + ct.n_write
+    pad = ct.v_pad - n
+    if pad:
+        srcs.append(jnp.zeros((C, pad), dtype=jnp.int32))
+        dsts.append(jnp.zeros((C, pad), dtype=jnp.int32))
+        thrs.append(jnp.zeros((C, pad), dtype=jnp.float32))
+        vals.append(jnp.zeros((C, pad), dtype=jnp.float32))
+    return (jnp.concatenate(srcs, axis=1).astype(jnp.int32),
+            jnp.concatenate(dsts, axis=1).astype(jnp.int32),
+            jnp.concatenate(thrs, axis=1),
+            jnp.concatenate(vals, axis=1))

@@ -1,5 +1,18 @@
-"""Pallas-kernel backend: the fifo_eval TPU kernel behind the shared
-operand/dispatch machinery (interpret mode on CPU, native on TPU)."""
+"""Pallas-kernel backend: condensation-native evaluation behind the
+shared operand/dispatch machinery (interpret mode on CPU, native on TPU).
+
+Two kernels back this registry entry, selected by what ``prepare`` is
+given (the rung cascade spawns one backend per rung via
+``EvalBackend.spawn()`` and prepares it on that rung's graph):
+
+* a **CondensedGraph** selects the fused mega-kernel
+  (:mod:`repro.kernels.fifo_eval.condensed`): row-blocked condensed
+  tiles through VMEM, fixpoint + exactness certificate in ONE launch,
+  ``evaluate_certified`` exposed to the cascade so accepted/escalated
+  rows never ship event times to the host;
+* a raw **SimGraph** keeps the one-row-per-program Hillis-Steele kernel
+  (:mod:`repro.kernels.fifo_eval.fifo_eval`) as the backstop engine.
+"""
 
 from __future__ import annotations
 
@@ -9,10 +22,13 @@ from repro.core.backends.fixpoint import _ScanBackend
 
 @register_backend
 class PallasBackend(_ScanBackend):
-    """The :mod:`repro.kernels.fifo_eval` Hillis-Steele kernel.
+    """The :mod:`repro.kernels.fifo_eval` kernels (see module docstring).
 
-    The kernel launches one grid program per configuration, so batch
-    padding buys nothing — bucketing is disabled.
+    Raw graphs launch one grid program per configuration, so batch
+    padding buys nothing there — bucketing is disabled.  The fused
+    condensed path buckets anyway (inside the cascade): its row-blocked
+    grid is batch-shaped, so jit-cache reuse pays exactly like the scan
+    backends.
     """
 
     name = "pallas"

@@ -39,7 +39,8 @@ import numpy as np
 
 from repro.core.backends import (BIG, BUCKETS, CONVERGED, DEADLOCK,
                                  F32_EXACT_LIMIT, UNRESOLVED, DispatchPolicy,
-                                 WorklistBackend, evaluate_np, get_backend)
+                                 RungCascade, WorklistBackend, evaluate_np,
+                                 get_backend)
 from repro.core.backends.worklist import WorklistState
 from repro.core.bram import design_bram_np
 from repro.core.config import EvalConfig, resolve_config
@@ -154,6 +155,9 @@ class BatchedEvaluator:
         self._states: "OrderedDict[bytes, WorklistState]" = OrderedDict()
         self.condensation = self._build_cascade(
             config.condense if rungs is None else rungs)
+        self._cascade = RungCascade(self.condensation, self.dispatch,
+                                    self._impl) if self.condensation \
+            else None
 
     # ------------------------------------------------------- condensation
     def _build_cascade(self, condense):
@@ -201,14 +205,13 @@ class BatchedEvaluator:
         """One-shot per-design backend calibration (``backend="auto"``).
 
         Times every calibration candidate (the numpy worklist, plus the
-        jax fixpoint when importable, plus the sharded mesh backend when
-        the process sees more than one device — the Pallas kernel is
-        correctness-grade in CPU interpret mode) through the SAME
-        evaluation path production uses — a full ``BatchedEvaluator``
-        including each backend's condensation cascade, on a
-        DSE-representative 16-row batch — and picks the fastest.  The
-        probe timings are kept in ``self.calibration`` for the runtime
-        report.
+        jax fixpoint when importable, plus the fused Pallas kernel when
+        the design condenses, plus the sharded mesh backend when the
+        process sees more than one device) through the SAME evaluation
+        path production uses — a full ``BatchedEvaluator`` including
+        each backend's condensation cascade, on a DSE-representative
+        16-row batch — and picks the fastest.  The probe timings are
+        kept in ``self.calibration`` for the runtime report.
         """
         import importlib.util
 
@@ -220,6 +223,17 @@ class BatchedEvaluator:
                 # sharding only *can* pay with a real multi-device mesh;
                 # the probe decides whether it actually does here
                 candidates.append("mesh")
+            # the condensation-native kernel evaluates AND certifies the
+            # hot rungs in one device launch — it only *can* win where a
+            # cascade exists, so probe it exactly there (raw streams
+            # would just time the interpret-mode kernel at full E_pad)
+            cgs = getattr(self.g, "_cascade_cache", None)
+            if cgs is None:
+                from repro.core.condense import condense_auto
+                cgs = condense_auto(self.g)
+                self.g._cascade_cache = cgs
+            if cgs:
+                candidates.append("pallas")
         u = np.asarray(self.g.upper_bounds, dtype=np.int64)
         rng = np.random.default_rng(0)
         probe = np.stack([np.maximum(
@@ -269,51 +283,14 @@ class BatchedEvaluator:
                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Unique rows -> exact results: condensation cascade first (each
         accepted row carries a passed exactness certificate or a sound
-        deadlock verdict), raw dispatch as the unconditional backstop."""
-        if not self.condensation:
+        deadlock verdict), raw dispatch as the unconditional backstop.
+        The escalation logic lives in
+        :class:`repro.core.backends.RungCascade`; kernel-backed rungs
+        certify on-device, the rest through the host verifier."""
+        if self._cascade is None:
             return self.dispatch.dispatch(self._impl, m, self.stats)
-        from repro.core.backends.base import CONVERGED, DEADLOCK
-        from repro.core.condense import verify_rows
         m = np.asarray(m, dtype=np.int64)
-        C = m.shape[0]
-        lat = np.zeros(C, dtype=np.int64)
-        dead = np.zeros(C, dtype=bool)
-        pending = np.ones(C, dtype=bool)
-        for cg, impl in self.condensation:
-            sel = np.flatnonzero(pending & cg.in_box(m))
-            if not sel.size:
-                continue
-            rows = m[sel]
-            if impl.wants_bucketing:
-                batch = self.dispatch.pad_batch(rows)
-            else:
-                batch = rows
-            rlat, _, rstatus, times = impl.evaluate_with_times(batch)
-            rlat = rlat[: sel.size]
-            rstatus = rstatus[: sel.size]
-            times = times[: sel.size, : cg.n_events]
-            dl = rstatus == DEADLOCK       # sound: relaxed system stalls
-            ok = np.zeros(sel.size, dtype=bool)
-            conv = rstatus == CONVERGED
-            if conv.any():
-                ci = np.flatnonzero(conv)
-                ok[ci] = verify_rows(cg, rows[ci], times[ci])
-            acc = dl | ok
-            self.stats.n_cond_fail += int(sel.size - acc.sum())
-            if acc.any():
-                idx = sel[acc]
-                lat[idx] = np.where(dl[acc], -1, rlat[acc])
-                dead[idx] = dl[acc]
-                pending[idx] = False
-                self.stats.n_condensed += int(acc.sum())
-            if not pending.any():
-                break
-        rem = np.flatnonzero(pending)
-        if rem.size:
-            rlat, _, rdead = self.dispatch.dispatch(
-                self._impl, m[rem], self.stats)
-            lat[rem] = rlat
-            dead[rem] = rdead
+        lat, dead = self._cascade.evaluate(m, self.stats)
         bram = design_bram_np(m, np.asarray(self.g.widths))
         return lat, bram, dead
 

@@ -18,7 +18,8 @@ Tests diff the two against each other and against the numpy worklist.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Tuple
+from collections import Counter
+from typing import Callable, Optional, Tuple
 
 import numpy as np
 
@@ -26,13 +27,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.backends.base import CONVERGED, DEADLOCK, UNRESOLVED
-from repro.core.backends.operands import (bram_count_jnp, depth_operands,
+from repro.core.backends.operands import (bram_count_jnp, cert_row_operands,
+                                          depth_operands, get_cert_tables,
                                           get_operands)
 from repro.core.bram import (BRAM_READ_LATENCY, SRL_BITS, SRL_DEPTH,
                              SRL_READ_LATENCY)
 from repro.core.simgraph import SimGraph
 from repro.kernels.fifo_eval.fifo_eval import fifo_eval_pallas
 from repro.kernels.fifo_eval.ref import fifo_eval_ref, fifo_eval_ref_hetero
+
+#: device dispatches per wrapper kind ("batched" / "hetero" /
+#: "condensed").  The cascade device-residency regression tests assert
+#: that a fully-certifying batch costs exactly ONE "condensed" dispatch
+#: and never touches the host verifier.
+DISPATCH_COUNTS: Counter = Counter()
 
 
 def _shard_over_rows(run: Callable, mesh) -> Callable:
@@ -118,6 +126,86 @@ def make_batched_eval(ev_or_graph, interpret: bool = True,
 
     def call(depth_matrix: np.ndarray
              ) -> Tuple[np.ndarray, ...]:
+        DISPATCH_COUNTS["batched"] += 1
+        return jax.device_get(
+            run(jnp.asarray(depth_matrix, dtype=jnp.int32)))
+
+    return call
+
+
+def make_condensed_eval(cg, interpret: bool = True,
+                        max_iters: int = 64,
+                        with_times: bool = False,
+                        mesh=None, block: int = None
+                        ) -> Optional[Callable]:
+    """Build the FUSED condensed evaluation closure for a CondensedGraph.
+
+    One kernel launch per batch evaluates the condensed fixpoint AND the
+    exactness certificate (:mod:`repro.kernels.fifo_eval.condensed`),
+    returning ``call(depths) -> (lat, bram, status, cert)`` — ``cert``
+    is the per-row pass/fail mask with ``verify_rows`` semantics, True
+    only on CONVERGED rows, so the rung cascade accepts/escalates rows
+    without the event-time matrix ever leaving the device.  Returns None
+    when the graph has no expressible certificate tables (the caller
+    falls back to the host verifier).
+
+    ``mesh`` shards the config-row axis like :func:`make_batched_eval`;
+    the batch is padded to the kernel's row-block size internally (per
+    shard under a mesh), so callers only pad to the shard multiple.
+    """
+    from repro.kernels.fifo_eval.condensed import (fifo_eval_condensed,
+                                                   pick_block)
+    ops = get_operands(cg)
+    ct = get_cert_tables(cg)
+    if ct is None:
+        return None
+    if block is None:
+        block = pick_block(ops.e_pad, ct.v_pad)
+    max_iters = int(max_iters)
+
+    def run(depths):                     # (C, F) int32, C % shards == 0
+        c = depths.shape[0]
+        # shrink the row block to the (static) batch size: escalation
+        # rungs see small bucketed batches (8 rows), and padding those up
+        # to the full-batch block would re-evaluate the rung 4x over
+        b = min(block, max(8, 1 << (c - 1).bit_length()))
+        pad = -c % b
+        if pad:
+            depths = jnp.concatenate(
+                [depths,
+                 jnp.broadcast_to(depths[-1:], (pad, depths.shape[1]))])
+        rd_lat_e, bp_idx, bp_valid, bp_base, structural = depth_operands(
+            ops, depths)
+        csrc, cdst, cthr, cval = cert_row_operands(ops, ct, depths)
+        out, times = fifo_eval_condensed(
+            ops.delta, ops.seg_start, ops.is_read, ops.has_data,
+            ops.data_idx, ops.end_bonus, rd_lat_e, bp_idx, bp_valid,
+            bp_base, csrc, cdst, cthr, cval, max_iters=max_iters,
+            bound=ops.bound, block=b, interpret=interpret,
+            with_times=with_times)
+        lat = jnp.maximum(out[:, 0], ops.taskless_lat)
+        conv = out[:, 1] > 0
+        over = out[:, 2] > 0
+        status = jnp.where(
+            structural | over, DEADLOCK,
+            jnp.where(conv, CONVERGED, UNRESOLVED)).astype(jnp.int8)
+        # kernel cert = conv & ~over & no violated slot; a structurally
+        # deadlocked row must additionally never certify
+        cert = (out[:, 4] > 0) & (status == CONVERGED)
+        bram = jnp.sum(bram_count_jnp(depths.astype(jnp.int32),
+                                      ops.widths[None, :]),
+                       axis=1).astype(jnp.int32)
+        res = (lat[:c], bram[:c], status[:c], cert[:c])
+        if with_times:
+            res = res + (times[:c],)
+        return res
+
+    if mesh is not None:
+        run = _shard_over_rows(run, mesh)
+    run = jax.jit(run)
+
+    def call(depth_matrix: np.ndarray) -> Tuple[np.ndarray, ...]:
+        DISPATCH_COUNTS["condensed"] += 1
         return jax.device_get(
             run(jnp.asarray(depth_matrix, dtype=jnp.int32)))
 
@@ -184,6 +272,7 @@ def make_hetero_batched_eval(max_iters: int = 64, mesh=None) -> Callable:
     run = jax.jit(run)
 
     def call(batch: dict) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        DISPATCH_COUNTS["hetero"] += 1
         lat, bram, status = jax.device_get(
             run({k: jnp.asarray(v) for k, v in batch.items()}))
         lat = np.asarray(np.rint(lat), dtype=np.int64)

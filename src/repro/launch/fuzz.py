@@ -139,6 +139,19 @@ def differential_check(gen: GeneratedDesign,
             ev = BatchedEvaluator(
                 g, EvalConfig(backend="worklist", max_iters=64),
                 rungs=rungs)
+        elif name == "pallas-condensed":
+            # the fused Pallas mega-kernel driven through the rung
+            # cascade: the kernel's on-device certificate decides row
+            # acceptance (tests/test_condensed_kernel.py pins it
+            # bit-for-bit to verify_rows; this pins the whole cascade
+            # to the oracle)
+            from repro.core.condense import condense_auto
+            rungs = condense_auto(g)
+            if not rungs:
+                continue
+            ev = BatchedEvaluator(
+                g, EvalConfig(backend="pallas", max_iters=64),
+                rungs=rungs)
         else:
             ev = BatchedEvaluator(
                 g, EvalConfig(backend=name, max_iters=64))
@@ -180,11 +193,16 @@ def _shrunk(spec: DesignSpec, backends: Sequence[str], n_random: int,
 
 
 def resolve_backends(arg: str) -> List[str]:
-    """``auto`` -> every backend usable here (plus the worklist forced
-    through the condensation cascade); else a comma-list."""
+    """``auto`` -> every backend usable here, plus the two cascade
+    pseudo-backends (``condensed`` = numpy worklist through the rung
+    cascade; ``pallas-condensed`` = the fused Pallas kernel's on-device
+    certificate through the same cascade, jax only); else a comma-list."""
     if arg == "auto":
         from repro.core.backends import available_backends
-        return list(available_backends()) + ["condensed"]
+        names = list(available_backends()) + ["condensed"]
+        if "pallas" in names:
+            names.append("pallas-condensed")
+        return names
     return [b.strip() for b in arg.split(",") if b.strip()]
 
 
@@ -196,12 +214,13 @@ def parse_args(argv=None):
     p.add_argument("--seeds", default="0:50", metavar="LO:HI",
                    help="seed range (half-open), e.g. 0:200")
     p.add_argument("--quick", action="store_true",
-                   help="small designs + worklist-only default backends "
-                        "(the CI-bounded mode)")
+                   help="small designs + the CI-bounded default backend "
+                        "set (worklist, condensed, and pallas-condensed "
+                        "when jax is importable)")
     p.add_argument("--backends", default=None,
-                   help="comma-list of backend names, or 'auto' for every "
-                        "backend available (default: worklist when "
-                        "--quick, else auto)")
+                   help="comma-list of backend names (pseudo-backends "
+                        "'condensed' and 'pallas-condensed' run the rung "
+                        "cascade), or 'auto' for everything available")
     p.add_argument("--configs", type=int, default=4, metavar="N",
                    help="random depth configs per design (plus the three "
                         "corner configs)")
@@ -218,8 +237,18 @@ def main(argv=None) -> int:
     args = parse_args(argv)
     lo, _, hi = args.seeds.partition(":")
     seeds = range(int(lo), int(hi or int(lo) + 1))
-    backends = resolve_backends(
-        args.backends or ("worklist,condensed" if args.quick else "auto"))
+    if args.backends:
+        backends = resolve_backends(args.backends)
+    elif args.quick:
+        # the CI-bounded set: numpy worklist + cascade, and (when jax is
+        # present) the fused kernel cascade — the numpy-only fuzz job
+        # drops it automatically
+        backends = ["worklist", "condensed"]
+        import importlib.util
+        if importlib.util.find_spec("jax") is not None:
+            backends.append("pallas-condensed")
+    else:
+        backends = resolve_backends("auto")
 
     t0 = time.perf_counter()
     all_mism: List[Mismatch] = []

@@ -79,6 +79,50 @@ def test_full_evaluator_pallas_backend_end_to_end():
         np.testing.assert_array_equal(x, y)
 
 
+@pytest.mark.parametrize("batch", [1, 3, 5, 8, 12])
+def test_condensed_kernel_ragged_batches_exact(batch):
+    """The fused condensed kernel pads ragged batches to its row block
+    internally (shrinking the block for small escalation buckets); every
+    batch size must reproduce the row-at-a-time results exactly."""
+    from repro.core.condense import condense_auto
+    from repro.designs import make_design
+    from repro.kernels.fifo_eval.ops import make_condensed_eval
+
+    g = build_simgraph(make_design("gemm"))
+    cg = condense_auto(g)[0]
+    fused = make_condensed_eval(cg, max_iters=64)
+    assert fused is not None
+    rng = np.random.default_rng(11)
+    u = np.asarray(g.upper_bounds, dtype=np.int64)
+    cfgs = np.stack([np.maximum(2, (u * rng.uniform(0.4, 1.0, g.n_fifos))
+                                .astype(int)) for _ in range(12)])
+    cfgs = cfgs[:batch].astype(np.int32)
+    got = [np.asarray(x) for x in fused(cfgs)]
+    for i in range(batch):
+        solo = [np.asarray(x) for x in fused(cfgs[i:i + 1])]
+        for a, b in zip(got, solo):
+            np.testing.assert_array_equal(a[i:i + 1], b,
+                                          err_msg=f"row {i} of {batch}")
+
+
+def test_pallas_cascade_end_to_end_matches_numpy():
+    """BatchedEvaluator(backend='pallas') with the auto cascade (fused
+    aggressive rung + scan safe rung + raw backstop) equals the numpy
+    ground truth on a deadlock-heavy design."""
+    from repro.designs import make_design
+    g = build_simgraph(make_design("gemm"))
+    rng = np.random.default_rng(7)
+    u = np.asarray(g.upper_bounds, dtype=np.int64)
+    cfgs = np.stack([np.ones_like(u), u] +
+                    [rng.integers(1, u + 1) for _ in range(6)])
+    a = BatchedEvaluator(
+        g, EvalConfig(backend="numpy", max_iters=64)).evaluate(cfgs)
+    b = BatchedEvaluator(
+        g, EvalConfig(backend="pallas", max_iters=64)).evaluate(cfgs)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
 def test_kernel_iteration_cap_reports_unresolved_not_wrong():
     """With a tiny iteration cap the kernel must mark rows UNRESOLVED
     (status 2) rather than return a wrong latency as CONVERGED."""

@@ -146,6 +146,37 @@ def test_pallas_inner_kernel_shards_identically():
         np.testing.assert_array_equal(a, b)
 
 
+def test_fused_condensed_kernel_shards_identically():
+    """MeshBackend(inner="pallas") prepared on a high-compression rung
+    exposes the FUSED kernel (``fused_certificate``) sharded over the
+    mesh; ``evaluate_certified`` — latency, BRAM, status, AND the
+    on-device certificate mask — is bit-identical to the solo kernel
+    across shard counts, ragged batches included."""
+    _need_devices(4)
+    from repro.core import build_simgraph
+    from repro.core.backends.mesh import MeshBackend
+    from repro.core.backends.pallas import PallasBackend
+    from repro.core.condense import condense_auto
+    from repro.designs import make_design
+    g = build_simgraph(make_design("gemm"))
+    cg = condense_auto(g)[0]          # the aggressive rung
+    solo = PallasBackend()
+    solo.prepare(cg)
+    assert solo.fused_certificate
+    cfgs = _configs(g, 9, seed=5, lo=0.4)
+    ref = solo.evaluate_certified(cfgs)
+    assert np.asarray(ref[3]).any(), "batch must certify some rows"
+    for shards in (2, 4):
+        impl = MeshBackend(shards=shards, inner="pallas")
+        impl.prepare(cg)
+        assert impl.fused_certificate
+        for C in (1, 4, 9):           # ragged vs shard multiple
+            got = impl.evaluate_certified(cfgs[:C])
+            for a, b in zip((r[:C] for r in ref), got):
+                np.testing.assert_array_equal(
+                    a, b, err_msg=f"shards={shards} C={C}")
+
+
 # ------------------------------------------------- campaign and service
 def test_campaign_with_shards_matches_sequential():
     """Hetero campaign on a mesh reproduces per-task sequential
