@@ -1,0 +1,131 @@
+"""Analytical channel-bounds benchmark: seeded vs unseeded certification.
+
+``core/bounds.py`` derives per-FIFO ``(lower, upper)`` depth bounds from
+one trace, classifies every channel (in-order rate-matched / mismatched,
+reorder, data-dependent), and hands ``certify_min_depths`` a feasible
+floor to descend from.  Three numbers the regression gate watches:
+
+* **identity** — bounds-seeded certification must return the exact
+  depth vector unseeded certification returns, on every design;
+* **bracket** — ``lower <= certified <= upper`` per FIFO;
+* **probe reduction** — evaluator probes (cache misses) unseeded vs
+  seeded.  On the affine Stream-HLS suite the analytical floor is the
+  answer, so the seeded run needs only the start check plus one
+  shortcut probe; the gate holds a >=3x geomean.
+
+  QUICK=1 PYTHONPATH=src:. python benchmarks/bounds.py   # CI smoke
+  PYTHONPATH=src:. python benchmarks/bounds.py           # default set
+  FULL=1 PYTHONPATH=src:. python benchmarks/bounds.py    # all 24
+"""
+
+from __future__ import annotations
+
+import time
+from collections import Counter
+
+import numpy as np
+
+from benchmarks.common import (full_mode, geomean, quick_mode, save_json)
+
+#: affine designs in the gated probe-reduction geomean
+_GATED_QUICK = ("gemm", "FeedForward", "mvt", "k2mm")
+_GATED = _GATED_QUICK + ("atax", "bicg", "Autoencoder", "ResidualBlock")
+#: reported (not gated): DDCF reference point — bounds still bracket and
+#: seed there, but the floor is not always the certified answer
+_EXTRA = ("flowgnn_small", "mult_by_2_64")
+
+
+def _design(name):
+    from repro.designs import make_design
+    from repro.designs.ddcf import flowgnn_pna, mult_by_2
+    if name == "flowgnn_small":
+        return flowgnn_pna(n_nodes=24, n_edges=64)
+    if name == "mult_by_2_64":
+        return mult_by_2(64)
+    return make_design(name)
+
+
+def bench_bounds(names) -> dict:
+    """Per design: taxonomy, then unseeded vs seeded certification with
+    fresh caches each so ``n_probes`` (cache misses) are comparable."""
+    from repro.core import EvalConfig
+    from repro.core.backends import ConfigCache
+    from repro.core.bounds import channel_bounds
+    from repro.core.deadlock import certify_min_depths
+    from repro.core.simgraph import build_simgraph
+    from repro.core.simulate import BatchedEvaluator
+
+    per_design = {}
+    for name in names:
+        g = build_simgraph(_design(name))
+        ev = BatchedEvaluator(g, EvalConfig(backend="worklist"))
+        t0 = time.perf_counter()
+        b = channel_bounds(g)
+        bounds_s = time.perf_counter() - t0
+        plain = certify_min_depths(g, ev, cache=ConfigCache(g.n_fifos))
+        seeded = certify_min_depths(g, ev, cache=ConfigCache(g.n_fifos),
+                                    bounds=b)
+        per_design[name] = {
+            "n_fifos": int(g.n_fifos),
+            "n_events": int(g.n_events),
+            "kinds": dict(Counter(b.kinds)),
+            "n_pinned": int(b.n_pinned),
+            "bounds_s": round(bounds_s, 5),
+            "unseeded_probes": int(plain.n_probes),
+            "seeded_probes": int(seeded.n_probes),
+            "probe_reduction": round(
+                plain.n_probes / max(seeded.n_probes, 1), 2),
+            "identical_depths": bool(
+                (plain.depths == seeded.depths).all()),
+            "bracket": bool((b.lower <= plain.depths).all()
+                            and (plain.depths <= b.upper).all()),
+            "floor_exact": bool((plain.depths == b.lower).all()),
+            "certified_sum": int(plain.depths.sum()),
+        }
+    return per_design
+
+
+def run() -> dict:
+    if quick_mode():
+        gated, extra = _GATED_QUICK, ()
+    elif full_mode():
+        from repro.designs import STREAMHLS_DESIGNS
+        gated, extra = tuple(sorted(STREAMHLS_DESIGNS)), _EXTRA
+    else:
+        gated, extra = _GATED, _EXTRA
+
+    table = bench_bounds(tuple(gated) + tuple(extra))
+    gated_rows = {k: v for k, v in table.items() if k in gated}
+    payload = {
+        "per_design": table,
+        "gated_designs": list(gated),
+        "probe_reduction_geomean": round(
+            geomean([v["probe_reduction"] for v in gated_rows.values()]), 2),
+        "identical_depths_all": all(
+            v["identical_depths"] for v in table.values()),
+        "bracket_all": all(v["bracket"] for v in table.values()),
+        "gated_floor_exact_all": all(
+            v["floor_exact"] for v in gated_rows.values()),
+        "total_pinned": int(np.sum(
+            [v["n_pinned"] for v in table.values()])),
+    }
+    save_json("bounds.json", payload)
+    return payload
+
+
+def main():
+    out = run()
+    for name, row in out["per_design"].items():
+        print(f"bounds {name:14s} probes {row['unseeded_probes']:4d} -> "
+              f"{row['seeded_probes']:2d} ({row['probe_reduction']:6.1f}x) "
+              f"pinned={row['n_pinned']:3d}/{row['n_fifos']:3d} "
+              f"identical={row['identical_depths']} "
+              f"bracket={row['bracket']}")
+    print(f"gated probe-reduction geomean: "
+          f"{out['probe_reduction_geomean']}x "
+          f"(identical_all={out['identical_depths_all']}, "
+          f"bracket_all={out['bracket_all']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,7 +18,11 @@ beyond tolerance:
 * ``fuzz.quick.json``      — the differential fuzz campaign must report
   ZERO oracle/backend disagreements, certified depth vectors must stay
   identical between the incremental fast path and the naive oracle
-  bisection, and the gated certification speedup must hold its floor.
+  bisection, and the gated certification speedup must hold its floor;
+* ``bounds.quick.json``    — bounds-seeded certification must return
+  depth vectors identical to the unseeded descent on every design, the
+  analytical bounds must bracket every certified depth, and the gated
+  probe-reduction geomean must hold its >=3x floor.
 
 Exit code 0 = gate passed.
 """
@@ -246,6 +250,45 @@ def check_fuzz(base, cur, floor, frac, failures):
                 f"{frac:.0%} of baseline {ref:.2f}x")
 
 
+def check_bounds(base, cur, floor, frac, failures):
+    """Gate the channel-bounds benchmark (``benchmarks/bounds.py``).
+
+    Identity (seeded == unseeded depth vectors) and bracketing
+    (``lower <= certified <= upper``) are unconditional — they are the
+    soundness contract of ``core/bounds.py``.  The probe-reduction
+    geomean is a hard >=3x floor on the gated affine suite (the ISSUE-9
+    criterion: the analytical floor replaces per-FIFO binary searches
+    with a start check plus one shortcut probe), with a generous
+    baseline-relative band on top.
+    """
+    if cur is None:
+        failures.append("bounds.quick.json missing from current run")
+        return
+    if not cur.get("identical_depths_all"):
+        bad = [k for k, v in cur.get("per_design", {}).items()
+               if not v.get("identical_depths")]
+        failures.append(
+            "bounds regression: seeded certification no longer returns "
+            f"the unseeded depth vector (designs: {bad})")
+    if not cur.get("bracket_all"):
+        bad = [k for k, v in cur.get("per_design", {}).items()
+               if not v.get("bracket")]
+        failures.append(
+            "bounds regression: analytical bounds stopped bracketing "
+            f"certified depths (designs: {bad})")
+    reduction = cur.get("probe_reduction_geomean", 0.0)
+    if reduction < floor:
+        failures.append(
+            f"bounds probe reduction {reduction:.2f}x below hard floor "
+            f"{floor:.2f}x")
+    if base is not None:
+        ref = base.get("probe_reduction_geomean")
+        if ref and reduction < frac * ref:
+            failures.append(
+                f"bounds probe-reduction regression: {reduction:.2f}x < "
+                f"{frac:.0%} of baseline {ref:.2f}x")
+
+
 def check_load(base, cur, p99_ceiling, p99_frac, failures):
     """Gate the service load harness (``benchmarks/load.py``).
 
@@ -316,6 +359,14 @@ def main(argv=None) -> int:
                     help="hard minimum certification geomean speedup")
     ap.add_argument("--cert-frac", type=float, default=0.4,
                     help="required fraction of the baseline cert speedup")
+    # the ISSUE-9 criterion: bounds-seeded certification needs >=3x
+    # fewer evaluator probes on the affine suite (probe counts are
+    # deterministic, so no noise band is needed below the floor)
+    ap.add_argument("--bounds-floor", type=float, default=3.0,
+                    help="hard minimum bounds probe-reduction geomean")
+    ap.add_argument("--bounds-frac", type=float, default=0.5,
+                    help="required fraction of the baseline bounds "
+                         "probe reduction")
     # the quick mix runs smaller batches than the committed full-mode
     # result (~6x scan speedup), so the hard floor only catches "the
     # condensation engine stopped paying", not runner-noise drift
@@ -369,6 +420,9 @@ def main(argv=None) -> int:
     check_fuzz(load(args.baseline, "fuzz.quick.json"),
                load(args.current, "fuzz.quick.json"),
                args.cert_floor, args.cert_frac, failures)
+    check_bounds(load(args.baseline, "bounds.quick.json"),
+                 load(args.current, "bounds.quick.json"),
+                 args.bounds_floor, args.bounds_frac, failures)
     check_condense(load(args.baseline, "condense.quick.json"),
                    load(args.current, "condense.quick.json"),
                    args.condense_floor, args.condense_frac, failures)
@@ -390,7 +444,8 @@ def main(argv=None) -> int:
         return 1
     print("regression gate passed (accuracy exact, cache hit rate held, "
           "campaign + service speedups held, fuzz differential clean, "
-          "certification speedup held, condensation exact + still paying, "
+          "certification speedup held, bounds exact + still seeding, "
+          "condensation exact + still paying, "
           "fused kernel exact + winning its rungs, "
           "mesh sharding exact + scaling, load SLOs + overload shed held)")
     return 0

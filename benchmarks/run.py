@@ -103,6 +103,14 @@ def _fuzz() -> str:
             f"cert_speedup={fz['cert_geomean_speedup']:.2f}x")
 
 
+def _bounds() -> str:
+    from benchmarks import bounds
+    bd = bounds.run()
+    return (f"probe_reduction={bd['probe_reduction_geomean']:.2f}x;"
+            f"identical={bd['identical_depths_all']};"
+            f"bracket={bd['bracket_all']}")
+
+
 def _load() -> str:
     from benchmarks import load
     ld = load.run()
@@ -143,6 +151,7 @@ STEPS = [
     ("cache_lookup", _cache_lookup),
     ("load", _load),
     ("fuzz", _fuzz),
+    ("bounds", _bounds),
     ("pruning", _pruning),
     ("roofline", _roofline),
 ]

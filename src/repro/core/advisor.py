@@ -175,6 +175,7 @@ class FifoAdvisor:
         self._upper_bounds = upper_bounds
         self._certification = None   # cached CertificationResult
         self._lb_cache: Optional[np.ndarray] = None
+        self._channel_bounds = None  # cached ChannelBounds
         self._incr_base: Optional[np.ndarray] = None
         # Shared baselines (evaluated outside any optimizer's budget).
         ctx = self._fresh_ctx(seed=0)
@@ -213,6 +214,7 @@ class FifoAdvisor:
         self._upper_bounds = upper_bounds
         self._certification = certification
         self._lb_cache = lb_cache
+        self._channel_bounds = None
         self._incr_base = None
         self.baseline_max = baseline_max
         self.baseline_min = baseline_min
@@ -246,11 +248,18 @@ class FifoAdvisor:
                                upper_bounds=self._upper_bounds,
                                occupancy_cap=self._occupancy_cap, seed=0)
             self._lb_cache = local_lower_bounds(self.graph, base.candidates)
+        lb = self._lb_cache
+        if self.config.channel_bounds:
+            # Analytical lower bounds are sound the same way local
+            # bounds are: below them every configuration deadlocks, so
+            # pruning those candidates never loses a feasible point.
+            analytical = self.channel_bounds().lower
+            lb = analytical if lb is None else np.maximum(lb, analytical)
         floor = self.min_safe_depths() if self._certified_floor else None
         return EvalContext(self.graph, self.evaluator,
                            upper_bounds=self._upper_bounds,
                            occupancy_cap=self._occupancy_cap,
-                           lower_bounds=self._lb_cache,
+                           lower_bounds=lb,
                            feasible_floor=floor, seed=seed,
                            cache=self.cache)
 
@@ -280,6 +289,24 @@ class FifoAdvisor:
         self._incr_base = depths.copy()
         return int(lat[0]), bool(dead[0])
 
+    def channel_bounds(self):
+        """Analytical per-channel depth bounds + taxonomy for this design.
+
+        One O(E·F) static pass over the packed trace
+        (:func:`repro.core.bounds.channel_bounds`): classifies every FIFO
+        (in-order rate-matched / rate-mismatched / reorder /
+        data-dependent) and derives sound closed-form ``(lower, upper)``
+        bounds that bracket the certified minimal depths.  Computed once
+        per advisor; :meth:`min_safe_depths` seeds certification with it
+        (same certified vector, a fraction of the probes), and
+        ``EvalConfig(channel_bounds=True)`` clamps every optimizer's
+        candidate grids with the lower bounds.
+        """
+        if self._channel_bounds is None:
+            from repro.core.bounds import channel_bounds
+            self._channel_bounds = channel_bounds(self.graph)
+        return self._channel_bounds
+
     def min_safe_depths(self) -> np.ndarray:
         """Certified minimal deadlock-free depths (coordinate-wise).
 
@@ -291,8 +318,10 @@ class FifoAdvisor:
 
         Computed once per advisor via monotone binary search over the
         incremental ``solve_delta`` / shared-cache fast path
-        (:func:`repro.core.deadlock.certify_min_depths`); subsequent
-        calls return the cached vector.  When the advisor was built with
+        (:func:`repro.core.deadlock.certify_min_depths`), seeded by the
+        analytical :meth:`channel_bounds` (identical vector, typically
+        a fraction of the probes); subsequent calls return the cached
+        vector.  When the advisor was built with
         explicit ``upper_bounds``, certification descends from them (so
         the certificate respects the caps) — and raises ``ValueError``
         when no deadlock-free configuration exists under those caps.
@@ -301,7 +330,7 @@ class FifoAdvisor:
             from repro.core.deadlock import certify_min_depths
             self._certification = certify_min_depths(
                 self.graph, self.evaluator, cache=self.cache,
-                upper=self._upper_bounds)
+                upper=self._upper_bounds, bounds=self.channel_bounds())
         return self._certification.depths.copy()
 
     @property

@@ -51,6 +51,10 @@ class EvalConfig:
             (beyond-paper pruning; behaviour-preserving).
         local_bounds: sound per-FIFO lower bounds from task-pair
             feasibility (beyond-paper pruning).
+        channel_bounds: sound per-FIFO lower bounds from the analytical
+            channel-bounds pass (``docs/bounds.md``) — strictly more
+            global than ``local_bounds`` (it follows transitive
+            cross-task coupling) and free once the design is traced.
         certified_floor: clamp every search to depths at or above the
             certified minimal safe depths (``docs/fuzzing.md``).
     """
@@ -61,6 +65,7 @@ class EvalConfig:
     shards: Optional[int] = None
     occupancy_cap: bool = False
     local_bounds: bool = False
+    channel_bounds: bool = False
     certified_floor: bool = False
 
     def __post_init__(self):

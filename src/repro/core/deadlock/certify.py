@@ -62,20 +62,23 @@ class CertificationResult:
     start: np.ndarray         # (F,) the feasible vector the search started at
     latency: int              # design latency at the certified depths
     bram: int                 # BRAM cost at the certified depths
-    n_probes: int             # feasibility probes issued (pre-cache)
+    n_probes: int             # feasibility probes that missed the cache
     wall_s: float
+    n_cache_hits: int = 0     # feasibility probes answered by the cache
 
 
 def _probe_factory(evaluator, cache: Optional[ConfigCache]):
-    """Returns ``probe(row, base) -> (deadlocked, latency, bram)`` routed
-    through the cache and, when the evaluator prefers it, the incremental
-    re-simulation path (single-FIFO deltas of a solved base)."""
+    """Returns ``probe(row, base) -> (deadlocked, latency, bram, cached)``
+    routed through the cache and, when the evaluator prefers it, the
+    incremental re-simulation path (single-FIFO deltas of a solved
+    base).  ``cached`` is True when the cache answered — the driver
+    counts those separately so ``n_probes`` reports real evaluator work."""
     def probe(row: np.ndarray, base: Optional[np.ndarray]):
         m = row[None, :]
         if cache is not None:
             lat, bram, dead, miss = cache.lookup(m)
             if not miss.any():
-                return bool(dead[0]), int(lat[0]), int(bram[0])
+                return bool(dead[0]), int(lat[0]), int(bram[0]), True
         if (base is not None
                 and getattr(evaluator, "prefer_incremental", False)):
             lat, bram, dead = evaluator.evaluate_incremental(
@@ -84,21 +87,31 @@ def _probe_factory(evaluator, cache: Optional[ConfigCache]):
             lat, bram, dead = evaluator.evaluate(m)
         if cache is not None:
             cache.insert(m, lat, bram, dead)
-        return bool(dead[0]), int(lat[0]), int(bram[0])
+        return bool(dead[0]), int(lat[0]), int(bram[0]), False
     return probe
 
 
 def _coordinate_descent(g: SimGraph, probe,
                         upper: Optional[np.ndarray],
-                        lower: Optional[np.ndarray]) -> CertificationResult:
+                        lower: Optional[np.ndarray],
+                        bounds=None) -> CertificationResult:
     """The shared certification driver.
 
-    ``probe(row, base) -> (deadlocked, latency, bram)`` is the only
-    pluggable part — the fast path routes it through the incremental
-    evaluator + cache, the oracle arbiter through full discrete-event
-    simulations.  Keeping one driver means the two certifiers can only
-    ever disagree through their *evaluators* (the property the
-    differential tests pin), never through drifted search logic.
+    ``probe(row, base) -> (deadlocked, latency, bram, cached)`` is the
+    only pluggable part — the fast path routes it through the
+    incremental evaluator + cache, the oracle arbiter through full
+    discrete-event simulations.  Keeping one driver means the two
+    certifiers can only ever disagree through their *evaluators* (the
+    property the differential tests pin), never through drifted search
+    logic.
+
+    ``bounds`` (a :class:`~repro.core.bounds.ChannelBounds`) seeds the
+    search: its sound per-FIFO lower bounds raise the floors (pinned
+    channels collapse their binary search to nothing), and one extra
+    *shortcut probe* of the floor vector settles the whole descent when
+    it is jointly feasible — by monotonicity, descending coordinate-wise
+    from any feasible ``cur >= floor`` with per-coordinate minima at or
+    above ``floor`` can only land exactly on ``floor``.
     """
     t0 = time.perf_counter()
     F = g.n_fifos
@@ -107,17 +120,39 @@ def _coordinate_descent(g: SimGraph, probe,
     start = np.maximum(start, 1)
     floor = (np.asarray(lower, dtype=np.int64) if lower is not None
              else np.ones(F, dtype=np.int64))
+    if bounds is not None:
+        # Clip to the start: analytical floors are sound below it, but
+        # must never raise the search above user-supplied `upper` caps
+        # (only an explicit `lower` is allowed to do that).
+        floor = np.maximum(floor, np.minimum(bounds.lower, start))
     floor = np.maximum(floor, 1)
-    n_probes = 0
+    stats = {"miss": 0, "hit": 0}
 
-    dead, lat, bram = probe(start, None)
-    n_probes += 1
+    def run(row, base):
+        dead, lat, bram, cached = probe(row, base)
+        stats["hit" if cached else "miss"] += 1
+        return dead, lat, bram
+
+    # Floors above the start raise it: the result must respect `lower`
+    # everywhere, so the invariant vector starts at max(start, floor).
+    cur = np.maximum(start, floor)
+    dead, lat, bram = run(cur, None)
     if dead:
+        if (floor > start).any():
+            raise ValueError(
+                "floored certification start deadlocks: the requested "
+                "`lower`/`bounds` floors raise depths above a start "
+                "vector that is itself infeasible; pass a feasible "
+                "`upper` (declared depths or observed write counts)")
         raise ValueError(
             "certification start vector deadlocks; pass a feasible "
             "`upper` (declared depths or observed write counts)")
 
-    cur = start.copy()
+    if bounds is not None and not np.array_equal(floor, cur):
+        d, _, _ = run(floor, cur)
+        if not d:
+            cur = floor.copy()
+
     for f in range(F):
         lo, hi = int(floor[f]), int(cur[f])
         # invariant: cur with cur[f] = hi is verified deadlock-free
@@ -125,8 +160,7 @@ def _coordinate_descent(g: SimGraph, probe,
             mid = (lo + hi) // 2
             row = cur.copy()
             row[f] = mid
-            d, _, _ = probe(row, cur)
-            n_probes += 1
+            d, _, _ = run(row, cur)
             if d:
                 lo = mid + 1
             else:
@@ -134,37 +168,41 @@ def _coordinate_descent(g: SimGraph, probe,
         cur[f] = hi
 
     # final vector: re-resolve its objectives (cached when already probed)
-    dead, lat, bram = probe(cur, None)
-    n_probes += 1
+    dead, lat, bram = run(cur, None)
     assert not dead, "certified vector must be feasible (invariant)"
     return CertificationResult(depths=cur, start=start, latency=lat,
-                               bram=bram, n_probes=n_probes,
+                               bram=bram, n_probes=stats["miss"],
+                               n_cache_hits=stats["hit"],
                                wall_s=time.perf_counter() - t0)
 
 
 def certify_min_depths(g: SimGraph, evaluator,
                        cache: Optional[ConfigCache] = None,
                        upper: Optional[np.ndarray] = None,
-                       lower: Optional[np.ndarray] = None
-                       ) -> CertificationResult:
+                       lower: Optional[np.ndarray] = None,
+                       bounds=None) -> CertificationResult:
     """Certify minimal deadlock-free depths for ``g`` using ``evaluator``.
 
     ``evaluator`` is any object with the :class:`BatchedEvaluator`
     surface (``evaluate`` and, optionally, ``evaluate_incremental`` +
     ``prefer_incremental``).  ``upper`` overrides the start vector;
-    ``lower`` sets per-FIFO search floors (default 1).
+    ``lower`` sets per-FIFO search floors (default 1); ``bounds``
+    (:func:`repro.core.bounds.channel_bounds` output) seeds floors and
+    enables the shortcut probe — the certified vector is identical to
+    the unseeded one, typically at a fraction of the probes
+    (``benchmarks/bounds.py`` gates the reduction).
 
     Raises ``ValueError`` when the start vector itself deadlocks (it
     cannot, unless ``upper`` is below the design's occupancy needs).
     """
     return _coordinate_descent(g, _probe_factory(evaluator, cache),
-                               upper, lower)
+                               upper, lower, bounds=bounds)
 
 
 def certify_min_depths_oracle(design: Design,
                               upper: Optional[np.ndarray] = None,
-                              lower: Optional[np.ndarray] = None
-                              ) -> CertificationResult:
+                              lower: Optional[np.ndarray] = None,
+                              bounds=None) -> CertificationResult:
     """The same coordinate descent, but every probe is a full
     discrete-event simulation (:func:`repro.core.oracle.simulate`).
 
@@ -180,6 +218,6 @@ def certify_min_depths_oracle(design: Design,
     def probe(row: np.ndarray, base):
         r = simulate(design, row)
         bram = int(design_bram_np(row[None, :], widths)[0])
-        return r.deadlocked, int(r.latency), bram
+        return r.deadlocked, int(r.latency), bram, False
 
-    return _coordinate_descent(g, probe, upper, lower)
+    return _coordinate_descent(g, probe, upper, lower, bounds=bounds)

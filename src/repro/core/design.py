@@ -99,9 +99,20 @@ TaskProgram = Callable[[TaskCtx], Generator[Op, Any, None]]
 
 @dataclasses.dataclass
 class Task:
+    """A dataflow process.
+
+    ``data_dependent`` marks tasks whose FIFO access *pattern* (op counts
+    or interleaving) depends on values read from FIFOs or on kernel
+    arguments — the paper's DDCF processes.  The static channel-bounds
+    pass (:mod:`repro.core.bounds`) treats every FIFO touched by such a
+    task as instance-specific: its trace-derived bounds still hold for
+    the traced argument values, but are not closed-form over all inputs.
+    """
+
     name: str
     index: int
     program: TaskProgram
+    data_dependent: bool = False
 
 
 class Design:
@@ -135,15 +146,19 @@ class Design:
         return self._fifo_by_name[name]
 
     # ---------------------------------------------------------------- tasks
-    def task(self, name: str) -> Callable[[TaskProgram], TaskProgram]:
+    def task(self, name: str, data_dependent: bool = False
+             ) -> Callable[[TaskProgram], TaskProgram]:
         def deco(fn: TaskProgram) -> TaskProgram:
             self.tasks.append(Task(name=name, index=len(self.tasks),
-                                   program=fn))
+                                   program=fn,
+                                   data_dependent=data_dependent))
             return fn
         return deco
 
-    def add_task(self, name: str, fn: TaskProgram) -> None:
-        self.tasks.append(Task(name=name, index=len(self.tasks), program=fn))
+    def add_task(self, name: str, fn: TaskProgram,
+                 data_dependent: bool = False) -> None:
+        self.tasks.append(Task(name=name, index=len(self.tasks), program=fn,
+                               data_dependent=data_dependent))
 
     # ------------------------------------------------------------- metadata
     @property

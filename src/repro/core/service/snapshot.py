@@ -180,7 +180,9 @@ def _pack_advisor(adv: FifoAdvisor) -> tuple:
         arrays["cert_start"] = cert.start
         meta["certification"] = {
             "latency": int(cert.latency), "bram": int(cert.bram),
-            "n_probes": int(cert.n_probes), "wall_s": float(cert.wall_s)}
+            "n_probes": int(cert.n_probes),
+            "n_cache_hits": int(cert.n_cache_hits),
+            "wall_s": float(cert.wall_s)}
     return arrays, meta
 
 
@@ -255,7 +257,8 @@ def _unpack_advisor(name: str, z, meta: dict) -> FifoAdvisor:
         cert = CertificationResult(
             depths=z["cert_depths"], start=z["cert_start"],
             latency=cm["latency"], bram=cm["bram"],
-            n_probes=cm["n_probes"], wall_s=cm["wall_s"])
+            n_probes=cm["n_probes"], wall_s=cm["wall_s"],
+            n_cache_hits=cm.get("n_cache_hits", 0))
 
     def baseline(prefix: str, key: str) -> Baseline:
         bm = meta[key]

@@ -21,7 +21,7 @@ def mult_by_2(n: int = 64) -> Design:
     d.fifo("x", width=32)
     d.fifo("y", width=32)
 
-    @d.task("producer")
+    @d.task("producer", data_dependent=True)
     def producer(ctx):
         n = ctx.arg("n")
         for _ in range(n):
@@ -31,7 +31,7 @@ def mult_by_2(n: int = 64) -> Design:
             yield ctx.delay(1)
             yield ctx.write("y", 1)
 
-    @d.task("consumer")
+    @d.task("consumer", data_dependent=True)
     def consumer(ctx):
         n = ctx.arg("n")
         s = 0
@@ -111,13 +111,13 @@ def flowgnn_pna(n_nodes: int = 64, n_edges: int = 256, lanes: int = 4,
     agg = {a: d.fifo(f"agg_{a}", width=32, depth=16) for a in _AGGS}
     d.fifo("out_q", width=32, depth=16)
 
-    @d.task("edge_loader")
+    @d.task("edge_loader", data_dependent=True)
     def edge_loader(ctx):
         for (u, v) in ctx.arg("edges"):
             yield ctx.delay(1)
             yield ctx.write("edges_q", (u, v))
 
-    @d.task("node_loader")
+    @d.task("node_loader", data_dependent=True)
     def node_loader(ctx):
         for v, dv in enumerate(ctx.arg("deg")):
             yield ctx.delay(1)
@@ -126,7 +126,7 @@ def flowgnn_pna(n_nodes: int = 64, n_edges: int = 256, lanes: int = 4,
             for q in deg_qs:
                 yield ctx.write(q, dv)
 
-    @d.task("scatter")
+    @d.task("scatter", data_dependent=True)
     def scatter(ctx):
         n_e = len(ctx.arg("edges"))
         feats: List[float] = []
@@ -158,9 +158,10 @@ def flowgnn_pna(n_nodes: int = 64, n_edges: int = 256, lanes: int = 4,
         return prog
 
     for a in _AGGS:
-        d.add_task(f"agg_{a}", make_aggregator(a, f"deg_{a}"))
+        d.add_task(f"agg_{a}", make_aggregator(a, f"deg_{a}"),
+                   data_dependent=True)
 
-    @d.task("combine")
+    @d.task("combine", data_dependent=True)
     def combine(ctx):
         n_v = len(ctx.arg("deg"))
         total = 0.0
@@ -176,7 +177,7 @@ def flowgnn_pna(n_nodes: int = 64, n_edges: int = 256, lanes: int = 4,
             yield ctx.write("out_q", y)
         ctx.result("checksum", total)
 
-    @d.task("store")
+    @d.task("store", data_dependent=True)
     def store(ctx):
         n_v = len(ctx.arg("deg"))
         for _ in range(n_v):

@@ -123,6 +123,17 @@ class DesignSpec:
             source=str(obj["source"]),
             stages=[StageSpec.from_json(s) for s in obj.get("stages", [])])
 
+    @property
+    def affine_only(self) -> bool:
+        """True when every stage is affine (static trip counts and FIFO
+        access order fixed at build time): a plain source and no
+        ``expand``/``router`` stages.  On these designs the analytical
+        channel bounds (:mod:`repro.core.bounds`) are closed-form and
+        exact — the fuzz ``bounds`` mode asserts it."""
+        return (self.source == "plain"
+                and all(s.kind not in ("expand", "router")
+                        for s in self.stages))
+
     def dumps(self) -> str:
         return json.dumps(self.to_json(), indent=1, sort_keys=True)
 
@@ -240,8 +251,8 @@ def _phase_source(d: Design, out, a_vals: Sequence[float],
             y = yield ctx.read(pb)
             yield ctx.write(out[i % len(out)], x + y)
 
-    d.add_task("phase_src", prod)
-    d.add_task("phase_mix", cons)
+    d.add_task("phase_src", prod, data_dependent=True)
+    d.add_task("phase_mix", cons, data_dependent=True)
 
 
 def _expand_stage(d: Design, k: int, inp, out, count: int, ii: int) -> None:
@@ -275,8 +286,8 @@ def _expand_stage(d: Design, k: int, inp, out, count: int, ii: int) -> None:
                 acc += v
             yield ctx.write(out[i % len(out)], acc)
 
-    d.add_task(f"expand{k}", expander)
-    d.add_task(f"contract{k}", contractor)
+    d.add_task(f"expand{k}", expander, data_dependent=True)
+    d.add_task(f"contract{k}", contractor, data_dependent=True)
 
 
 def _expand_ref(vals: np.ndarray) -> np.ndarray:
@@ -318,8 +329,8 @@ def _router_stage(d: Design, k: int, inp, out, count: int, ii: int) -> None:
             v = yield ctx.read(neg)
             yield ctx.write(out[(c + i) % len(out)], v)
 
-    d.add_task(f"route{k}", route)
-    d.add_task(f"merge{k}", merge)
+    d.add_task(f"route{k}", route, data_dependent=True)
+    d.add_task(f"merge{k}", merge, data_dependent=True)
 
 
 def _router_ref(vals: np.ndarray) -> np.ndarray:

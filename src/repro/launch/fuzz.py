@@ -16,11 +16,24 @@ design (structural reductions, see :func:`repro.designs.generate.shrink_spec`)
 and serialized into the seed corpus, which CI replays first as
 regression tests on every subsequent run.
 
+``--mode bounds`` swaps the differential property: instead of backend
+agreement, every design must satisfy the analytical channel-bounds
+contract (:mod:`repro.core.bounds`) —
+
+* ``analytical lower <= certified <= analytical upper`` on every FIFO,
+* bounds-seeded certification returns the identical vector, and
+* on affine-only specs the bounds are *exact* (``analytical ==
+  certified``) and seeded certification is probe-free (the shortcut
+  probe plus the start check, nothing else).
+
   PYTHONPATH=src python -m repro.launch.fuzz --seeds 0:200 --quick
+  PYTHONPATH=src python -m repro.launch.fuzz --seeds 0:200 --quick \\
+      --mode bounds --corpus tests/fuzz_corpus
   PYTHONPATH=src python -m repro.launch.fuzz --seeds 0:50 \\
       --backends worklist,fixpoint --configs 6 --corpus tests/fuzz_corpus
 
-Exit code 0 = zero disagreements (corpus replays included).
+Exit code 0 = zero disagreements (corpus replays included); an empty or
+malformed ``--seeds`` range exits 2 so CI cannot green-light a no-op run.
 """
 
 from __future__ import annotations
@@ -46,8 +59,9 @@ from repro.designs.generate import (DesignSpec, GeneratedDesign,
                                     load_corpus_specs, shrink_spec,
                                     spec_from_seed)
 
-__all__ = ["Mismatch", "depth_configs", "differential_check", "fuzz_one",
-           "main", "parse_args", "resolve_backends"]
+__all__ = ["Mismatch", "bounds_check", "bounds_one", "depth_configs",
+           "differential_check", "fuzz_one", "main", "parse_args",
+           "parse_seed_range", "resolve_backends"]
 
 
 @dataclasses.dataclass
@@ -177,17 +191,80 @@ def fuzz_one(spec: DesignSpec, backends: Sequence[str],
     return differential_check(gen, backends=backends, n_random=n_random)
 
 
+def bounds_check(gen: GeneratedDesign) -> Tuple[List[Mismatch], int]:
+    """The ``bounds`` differential property for one generated design.
+
+    Certifies minimal safe depths twice — unseeded and seeded with the
+    analytical :func:`~repro.core.bounds.channel_bounds` — and checks:
+    bracket (``lower <= certified <= upper`` per FIFO), seeded/unseeded
+    vector identity, and on affine-only specs exactness (``certified ==
+    lower``) plus probe-freedom (seeded certification issues at most 2
+    evaluator probes: the start check and the shortcut).
+
+    Returns ``(mismatches, n_channels_checked)``.
+    """
+    from repro.core.backends import ConfigCache
+    from repro.core.bounds import channel_bounds
+    from repro.core.deadlock import certify_min_depths
+
+    spec = gen.spec
+    mism: List[Mismatch] = []
+    g = build_simgraph(gen.design)
+    b = channel_bounds(g)
+    ev = BatchedEvaluator(g, EvalConfig(backend="worklist", max_iters=64))
+    cert = certify_min_depths(g, ev, cache=ConfigCache(g.n_fifos))
+    seeded = certify_min_depths(g, ev, cache=ConfigCache(g.n_fifos),
+                                bounds=b)
+
+    names = [f.name for f in gen.design.fifos]
+    if not np.array_equal(cert.depths, seeded.depths):
+        mism.append(Mismatch(
+            spec, "bounds-identity", "bounds", seeded.depths.tolist(),
+            f"seeded certification {seeded.depths.tolist()} != unseeded "
+            f"{cert.depths.tolist()}"))
+    viol = (b.lower > cert.depths) | (cert.depths > b.upper)
+    if viol.any():
+        f = int(np.flatnonzero(viol)[0])
+        mism.append(Mismatch(
+            spec, "bounds-bracket", "bounds", cert.depths.tolist(),
+            f"fifo {names[f]!r} ({b.kinds[f]}): certified "
+            f"{int(cert.depths[f])} outside analytical "
+            f"[{int(b.lower[f])}, {int(b.upper[f])}]"))
+    if spec.affine_only:
+        if not np.array_equal(cert.depths, b.lower):
+            f = int(np.flatnonzero(cert.depths != b.lower)[0])
+            mism.append(Mismatch(
+                spec, "bounds-exact", "bounds", cert.depths.tolist(),
+                f"affine-only spec but fifo {names[f]!r} ({b.kinds[f]}) "
+                f"certified {int(cert.depths[f])} != analytical lower "
+                f"{int(b.lower[f])}"))
+        if seeded.n_probes > 2:
+            mism.append(Mismatch(
+                spec, "bounds-probes", "bounds", seeded.depths.tolist(),
+                f"affine-only spec needed {seeded.n_probes} evaluator "
+                f"probes (expected <= 2: start check + shortcut)"))
+    return mism, g.n_fifos
+
+
+def bounds_one(spec: DesignSpec, backends: Sequence[str] = (),
+               n_random: int = 0) -> Tuple[List[Mismatch], int]:
+    """``fuzz_one``-shaped wrapper so ``--mode bounds`` reuses the
+    corpus-replay / shrink plumbing (``backends``/``n_random`` unused)."""
+    return bounds_check(build_design(spec))
+
+
 def _shrunk(spec: DesignSpec, backends: Sequence[str], n_random: int,
-            kind: str, backend: str) -> DesignSpec:
+            kind: str, backend: str, check=None) -> DesignSpec:
     """Shrink ``spec`` while the ORIGINAL failure mode still reproduces.
 
     A reduction that merely fails differently (another kind, another
     backend) is rejected — the corpus entry must guard the disagreement
     that was actually observed, not whatever the smaller design happens
-    to trip over.
+    to trip over.  ``check`` defaults to the module-level ``fuzz_one``,
+    resolved at call time so tests can monkeypatch it.
     """
     def still_fails(cand: DesignSpec) -> bool:
-        found, _ = fuzz_one(cand, backends, n_random=n_random)
+        found, _ = (check or fuzz_one)(cand, backends, n_random=n_random)
         return any(m.kind == kind and m.backend == backend for m in found)
     return shrink_spec(spec, still_fails)
 
@@ -212,7 +289,11 @@ def parse_args(argv=None):
         description="Differential fuzzing: generated designs, oracle vs "
                     "every evaluation backend.")
     p.add_argument("--seeds", default="0:50", metavar="LO:HI",
-                   help="seed range (half-open), e.g. 0:200")
+                   help="seed range (half-open, non-empty), e.g. 0:200")
+    p.add_argument("--mode", choices=("diff", "bounds"), default="diff",
+                   help="diff: oracle vs backends (default); bounds: "
+                        "analytical channel-bounds contract (bracket, "
+                        "seeded-certification identity, affine exactness)")
     p.add_argument("--quick", action="store_true",
                    help="small designs + the CI-bounded default backend "
                         "set (worklist, condensed, and pallas-condensed "
@@ -233,10 +314,38 @@ def parse_args(argv=None):
     return p.parse_args(argv)
 
 
+def parse_seed_range(text: str) -> range:
+    """``LO:HI`` (half-open) or a single seed ``N`` -> a non-empty range.
+
+    Raises ``ValueError`` on malformed input and on empty or inverted
+    ranges (``5:5``, ``10:2``): those used to silently fuzz *zero*
+    designs and report "0 disagreements", which let CI green-light a
+    no-op campaign.
+    """
+    lo_s, _, hi_s = text.partition(":")
+    try:
+        lo = int(lo_s)
+        hi = int(hi_s) if hi_s else lo + 1
+    except ValueError:
+        raise ValueError(
+            f"--seeds {text!r} is not LO:HI (half-open ints) or a single "
+            f"seed N") from None
+    if hi <= lo:
+        raise ValueError(
+            f"--seeds {text!r} is an empty range (need LO < HI): a "
+            f"campaign over zero designs proves nothing")
+    return range(lo, hi)
+
+
 def main(argv=None) -> int:
     args = parse_args(argv)
-    lo, _, hi = args.seeds.partition(":")
-    seeds = range(int(lo), int(hi or int(lo) + 1))
+    try:
+        seeds = parse_seed_range(args.seeds)
+    except ValueError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        print("usage: python -m repro.launch.fuzz --seeds LO:HI  "
+              "(half-open, LO < HI; e.g. --seeds 0:200)", file=sys.stderr)
+        return 2
     if args.backends:
         backends = resolve_backends(args.backends)
     elif args.quick:
@@ -249,6 +358,7 @@ def main(argv=None) -> int:
             backends.append("pallas-condensed")
     else:
         backends = resolve_backends("auto")
+    check = bounds_one if args.mode == "bounds" else fuzz_one
 
     t0 = time.perf_counter()
     all_mism: List[Mismatch] = []
@@ -258,7 +368,7 @@ def main(argv=None) -> int:
     corpus_files = (sorted(glob.glob(os.path.join(args.corpus, "*.json")))
                     if args.corpus else [])
     for path, spec in zip(corpus_files, load_corpus_specs(corpus_files)):
-        mism, rows = fuzz_one(spec, backends, n_random=args.configs)
+        mism, rows = check(spec, backends, n_random=args.configs)
         n_designs += 1
         n_rows += rows
         if mism:
@@ -272,7 +382,7 @@ def main(argv=None) -> int:
     # 2. the fresh seed campaign
     for seed in seeds:
         spec = spec_from_seed(seed, quick=args.quick)
-        mism, rows = fuzz_one(spec, backends, n_random=args.configs)
+        mism, rows = check(spec, backends, n_random=args.configs)
         n_designs += 1
         n_rows += rows
         if not mism:
@@ -280,8 +390,8 @@ def main(argv=None) -> int:
         print(f"seed {seed}: {len(mism)} disagreement(s); shrinking...")
         kind, backend = mism[0].kind, mism[0].backend
         small = _shrunk(spec, backends, args.configs,
-                        kind=kind, backend=backend)
-        small_mism, _ = fuzz_one(small, backends, n_random=args.configs)
+                        kind=kind, backend=backend, check=check)
+        small_mism, _ = check(small, backends, n_random=args.configs)
         same = [m for m in small_mism
                 if m.kind == kind and m.backend == backend]
         repro = same[0] if same else mism[0]
@@ -298,14 +408,20 @@ def main(argv=None) -> int:
         all_mism.extend(mism)
 
     wall = time.perf_counter() - t0
-    rate = n_rows * (1 + len(backends)) / max(wall, 1e-9)
-    print(f"\n{n_designs} designs, {n_rows} configs x "
-          f"{1 + len(backends)} evaluators ({', '.join(backends)} + "
-          f"oracle), {wall:.1f}s wall ({rate:.0f} differential evals/s)")
+    if args.mode == "bounds":
+        print(f"\n{n_designs} designs, {n_rows} channels checked against "
+              f"the analytical bounds contract (bracket + seeded identity "
+              f"+ affine exactness), {wall:.1f}s wall")
+    else:
+        rate = n_rows * (1 + len(backends)) / max(wall, 1e-9)
+        print(f"\n{n_designs} designs, {n_rows} configs x "
+              f"{1 + len(backends)} evaluators ({', '.join(backends)} + "
+              f"oracle), {wall:.1f}s wall ({rate:.0f} differential evals/s)")
     print(f"disagreements: {len(all_mism)}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump({
+                "mode": args.mode,
                 "n_designs": n_designs, "n_rows": n_rows,
                 "backends": list(backends), "wall_s": round(wall, 3),
                 "mismatches": [m.to_json() for m in all_mism],

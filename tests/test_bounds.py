@@ -1,0 +1,191 @@
+"""Analytical channel-bounds engine tests (core/bounds.py, docs/bounds.md).
+
+The contract under test, for every design:
+
+* **bracket** — ``lower <= certified <= upper`` per FIFO;
+* **identity** — certification seeded with the bounds returns the exact
+  vector unseeded certification returns;
+* **exactness on affine designs** — static stages only: the analytical
+  lower bounds ARE the certified depths, and seeded certification needs
+  at most two evaluator probes (start check + shortcut).
+"""
+
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.core import EvalConfig, FifoAdvisor
+from repro.core.backends import ConfigCache
+from repro.core.bounds import (DATA_DEPENDENT, INORDER_MATCHED,
+                               INORDER_MISMATCHED, REORDER, channel_bounds)
+from repro.core.deadlock import certify_min_depths, certify_min_depths_oracle
+from repro.core.simgraph import build_simgraph
+from repro.core.simulate import BatchedEvaluator
+from repro.designs.ddcf import flowgnn_pna, mult_by_2
+from repro.designs.generate import (DesignSpec, StageSpec, build_design,
+                                    load_corpus_specs, spec_from_seed)
+from repro.designs.streamhls import make_design
+from repro.launch.fuzz import bounds_one
+
+KINDS = {INORDER_MATCHED, INORDER_MISMATCHED, REORDER, DATA_DEPENDENT}
+
+
+def _evaluator(g):
+    return BatchedEvaluator(g, EvalConfig(backend="worklist", max_iters=64))
+
+
+# ------------------------------------------------------------------ analytics
+
+@pytest.mark.parametrize("n", [2, 8, 16, 40])
+def test_mult_by_2_bounds_are_the_papers_answer(n):
+    """The need-DP reproduces the paper's Fig. 2 analytical sizing
+    ``[max(n-1, 1), 1]`` from the trace alone — and labels both channels
+    data-dependent (closed-form only for this n)."""
+    g = build_simgraph(mult_by_2(n))
+    b = channel_bounds(g)
+    assert b.lower.tolist() == [max(n - 1, 1), 1]
+    assert (b.upper == np.maximum(g.max_occupancy, 1)).all()
+    assert all(k == DATA_DEPENDENT for k in b.kinds)
+    cert = certify_min_depths_oracle(mult_by_2(n))
+    assert (cert.depths == b.lower).all()
+
+
+def test_taxonomy_on_streamhls_designs():
+    """Real affine designs hit every static class: atax is all
+    rate-matched (every channel pinned at depth 1), gemm adds burst
+    (rate-mismatched) channels, FeedForward's fork/join skip paths are
+    reorder channels with positive slack."""
+    atax = channel_bounds(build_simgraph(make_design("atax")))
+    assert set(atax.kinds) == {INORDER_MATCHED}
+    assert atax.pinned.all() and (atax.lower == 1).all()
+
+    gemm = channel_bounds(build_simgraph(make_design("gemm")))
+    kinds = Counter(gemm.kinds)
+    assert kinds[INORDER_MATCHED] and kinds[INORDER_MISMATCHED]
+
+    ff = channel_bounds(build_simgraph(make_design("FeedForward")))
+    assert Counter(ff.kinds)[REORDER] > 0
+    reorder = np.asarray([k == REORDER for k in ff.kinds])
+    assert (ff.slack[reorder] > 0).all()
+    assert (ff.slack[~reorder] == 0).all()
+
+
+def test_bounds_invariants_and_views():
+    g = build_simgraph(make_design("FeedForward"))
+    b = channel_bounds(g)
+    assert (1 <= b.lower).all() and (b.lower <= b.upper).all()
+    assert (b.lower == 1 + np.minimum(b.slack, b.upper - 1)).all()
+    assert (b.pinned == (b.lower == b.upper)).all()
+    assert b.n_pinned == int(b.pinned.sum())
+    d = b.to_dict()
+    assert d["lower"] == b.lower.tolist() and d["n_pinned"] == b.n_pinned
+    names = [f.name for f in g.design.fifos]
+    table = b.describe(names)
+    assert names[0] in table and REORDER in table
+
+
+def test_ddcf_channels_flagged_via_task_metadata():
+    """Any channel touched by a ``data_dependent`` task is labelled DDCF
+    — the generated expand/router/phase motifs and the whole FlowGNN
+    engine — while purely affine specs have none."""
+    g = build_simgraph(flowgnn_pna(n_nodes=16, n_edges=32))
+    assert all(k == DATA_DEPENDENT for k in channel_bounds(g).kinds)
+
+    ddcf_spec = DesignSpec(seed=3, n=6, lanes=1, ii=1, start_delay=0,
+                           source="plain",
+                           stages=[StageSpec("expand", {"ii": 1})])
+    assert not ddcf_spec.affine_only
+    b = channel_bounds(build_simgraph(build_design(ddcf_spec).design))
+    assert DATA_DEPENDENT in b.kinds
+
+    affine_spec = DesignSpec(seed=3, n=6, lanes=1, ii=1, start_delay=0,
+                             source="plain",
+                             stages=[StageSpec("conv", {"taps": 3, "ii": 1})])
+    assert affine_spec.affine_only
+    b = channel_bounds(build_simgraph(build_design(affine_spec).design))
+    assert DATA_DEPENDENT not in b.kinds
+    assert set(b.kinds) <= KINDS
+
+
+# ------------------------------------------------------- seeded certification
+
+@pytest.mark.parametrize("name", ["gemm", "mvt", "k2mm"])
+def test_seeded_certification_identity_and_probe_reduction(name):
+    """bounds= seeding: identical certified vector, >=3x fewer evaluator
+    probes (the acceptance gate benchmarks/bounds.py enforces suite-wide)."""
+    g = build_simgraph(make_design(name))
+    b = channel_bounds(g)
+    plain = certify_min_depths(g, _evaluator(g), cache=ConfigCache(g.n_fifos))
+    seeded = certify_min_depths(g, _evaluator(g), cache=ConfigCache(g.n_fifos),
+                                bounds=b)
+    assert (plain.depths == seeded.depths).all()
+    assert (plain.latency, plain.bram) == (seeded.latency, seeded.bram)
+    assert seeded.n_probes * 3 <= plain.n_probes
+    assert seeded.n_probes <= 2     # shortcut: start check + floor probe
+
+
+def test_seeded_oracle_matches_seeded_fast_path():
+    design = mult_by_2(24)
+    g = build_simgraph(design)
+    b = channel_bounds(g)
+    fast = certify_min_depths(g, _evaluator(g), bounds=b)
+    naive = certify_min_depths_oracle(design, bounds=b)
+    assert (fast.depths == naive.depths).all()
+    assert naive.n_cache_hits == 0           # the oracle has no cache
+
+
+def test_bounds_respect_user_caps_and_floors():
+    """Analytical floors never raise certification above user `upper`
+    caps (only an explicit `lower` may), and compose with user floors."""
+    design = mult_by_2(64)
+    g = build_simgraph(design)
+    b = channel_bounds(g)
+    caps = np.array([70, 3])
+    res = certify_min_depths(g, _evaluator(g), upper=caps, bounds=b)
+    assert res.depths.tolist() == [63, 1]
+    assert (res.depths <= caps).all()
+    res = certify_min_depths(g, _evaluator(g), lower=np.array([80, 2]),
+                             bounds=b)
+    assert res.depths.tolist() == [80, 2]
+    with pytest.raises(ValueError):
+        certify_min_depths(g, _evaluator(g), upper=np.array([4, 4]),
+                           bounds=b)
+
+
+def test_advisor_channel_bounds_and_grid_clamp():
+    """FifoAdvisor exposes cached bounds; EvalConfig(channel_bounds=True)
+    clamps every optimizer grid at the analytical lower bounds without
+    changing the certified floor or frontier feasibility."""
+    adv = FifoAdvisor(mult_by_2(24), EvalConfig(channel_bounds=True))
+    b = adv.channel_bounds()
+    assert b is adv.channel_bounds()                 # cached
+    assert (adv.min_safe_depths() >= b.lower).all()
+    assert (adv.min_safe_depths() <= b.upper).all()
+    ctx = adv.make_context(seed=0)
+    for f, cand in enumerate(ctx.candidates):
+        assert cand.size and (cand >= min(int(b.lower[f]), int(cand[-1]))).all()
+    res = adv.run("grouped_random", budget=40, seed=1)
+    assert res.result.configs.shape[0] > 0
+    # every sampled depth respects the analytical floor, so no sample
+    # can deadlock through an analytically-undersized channel
+    assert (res.result.configs >= np.minimum(
+        b.lower, np.asarray([c[-1] for c in ctx.candidates]))[None, :]).all()
+
+
+# ---------------------------------------------------------------- corpus sweep
+
+def test_corpus_and_seed_sweep_bounds_contract():
+    """The committed fuzz corpus plus fresh seeds all satisfy the bounds
+    contract: bracket everywhere, seeded identity, and affine-only specs
+    certified exactly and probe-free (via the CLI's own checker, so the
+    CI bounds step tests the same code path)."""
+    import glob
+    specs = load_corpus_specs(sorted(glob.glob("tests/fuzz_corpus/*.json")))
+    specs += [spec_from_seed(s, quick=True) for s in range(30)]
+    assert any(s.affine_only for s in specs)
+    assert any(not s.affine_only for s in specs)
+    for spec in specs:
+        mism, n_channels = bounds_one(spec)
+        assert n_channels > 0
+        assert not mism, (spec.seed, [m.detail for m in mism])

@@ -146,6 +146,64 @@ def test_certified_floor_respects_user_upper_bounds():
                     upper_bounds=np.array([16, 16]))
 
 
+def test_floor_above_start_respected():
+    """Bugfix: a `lower` floor above the descent start used to leave the
+    certified depth below the floor (the binary-search window [floor,
+    start] was empty and the loop never ran)."""
+    from repro.core.deadlock import certify_min_depths
+    design = mult_by_2(16)
+    adv = FifoAdvisor(design)
+    assert adv.graph.max_occupancy.tolist() == [15, 2]
+    for floor in ([40, 3], [40, 1], [8, 5]):
+        lower = np.asarray(floor)
+        res = certify_min_depths(adv.graph, adv.evaluator, cache=adv.cache,
+                                 lower=lower)
+        assert (res.depths >= lower).all(), floor
+        naive = certify_min_depths_oracle(design, lower=lower)
+        assert (res.depths == naive.depths).all(), floor
+    # fully-floored coordinates pin exactly at the floor; free ones
+    # still reach their conditional minimum
+    res = certify_min_depths(adv.graph, adv.evaluator, cache=adv.cache,
+                             lower=np.array([40, 1]))
+    assert res.depths.tolist() == [40, 1]
+
+
+def test_probe_count_is_cache_misses():
+    """Bugfix: n_probes counted cache hits too; now it reports evaluator
+    work (misses) and n_cache_hits the replays — a certification re-run
+    against a warm cache is answered entirely by it."""
+    from repro.core.deadlock import certify_min_depths
+    adv = FifoAdvisor(mult_by_2(16))
+    first = certify_min_depths(adv.graph, adv.evaluator, cache=adv.cache)
+    assert first.n_probes > 0
+    again = certify_min_depths(adv.graph, adv.evaluator, cache=adv.cache)
+    assert again.n_probes == 0
+    assert again.n_cache_hits == first.n_probes + first.n_cache_hits
+    assert (again.depths == first.depths).all()
+
+
+def test_fuzz_seed_range_validation():
+    """Bugfix: empty/inverted --seeds ranges used to fuzz zero designs
+    and exit 0 ("0 disagreements"); they must exit non-zero."""
+    from repro.launch import fuzz
+    assert fuzz.parse_seed_range("3") == range(3, 4)
+    assert fuzz.parse_seed_range("0:5") == range(0, 5)
+    for bad in ("5:5", "10:2", "abc", "1:z", ":"):
+        with pytest.raises(ValueError):
+            fuzz.parse_seed_range(bad)
+    assert fuzz.main(["--seeds", "5:5", "--quick"]) == 2
+    assert fuzz.main(["--seeds", "10:2", "--quick"]) == 2
+    assert fuzz.main(["--seeds", "nope", "--quick"]) == 2
+
+
+def test_fuzz_bounds_mode_cli():
+    """--mode bounds runs the channel-bounds contract end to end and
+    exits 0 on a clean range."""
+    from repro.launch import fuzz
+    assert fuzz.main(["--mode", "bounds", "--seeds", "0:4",
+                      "--quick"]) == 0
+
+
 # ---------------------------------------------------------------------- blame
 
 def test_blame_names_exactly_the_cycle_fifos():
