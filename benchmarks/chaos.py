@@ -1,0 +1,272 @@
+"""Chaos differential harness: injected faults vs fault-free runs.
+
+Four phases, each driving a real engine under a deterministic
+:class:`~repro.core.faults.FaultPlan` (``docs/robustness.md``) and
+holding the repo-wide bar — the final result under injected faults must
+be **bit-identical** to the fault-free run, and every recovery must be
+bounded (no hangs, no zombies, no lost work):
+
+``pool_crash``            a pooled campaign whose worker lanes are
+                          killed mid-round; per-task frontiers must
+                          equal the inline fault-free campaign's, with
+                          the pool reporting the respawns/requeues that
+                          got it there.
+``snapshot_corruption``   a save aborted mid-write must leave the prior
+                          snapshot loadable; a torn member write must
+                          quarantine ONLY the damaged design (the rest
+                          restore warm and answer with zero evals) and
+                          the quarantined design must re-trace to the
+                          same answers.
+``kill_resume``           a campaign killed after a few rounds and
+                          resumed from its checkpoint must finish with
+                          the uninterrupted campaign's exact frontiers.
+``service_faults``        a wedged evaluation round must fail ONLY the
+                          deadline-carrying victim session (stable
+                          ``E_TIMEOUT``, partial result kept) while its
+                          peers finish bit-identical to solo runs, and
+                          a reconnecting client must replay its exact
+                          event-stream suffix.
+
+``check_chaos`` in ``benchmarks/check_regression.py`` gates the
+booleans plus a recovery-time ceiling against the committed
+``chaos.quick.json`` baseline.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import budget, design_set, save_json
+
+OPTIMIZERS = ("grouped_sa", "grouped_random")
+
+
+def _frontier_map(store) -> Dict[str, np.ndarray]:
+    return {k: store[k].frontier_points for k in store.keys()}
+
+
+def _identical(a: Dict[str, np.ndarray], b: Dict[str, np.ndarray]) -> bool:
+    return (set(a) == set(b)
+            and all(np.array_equal(a[k], b[k]) for k in a))
+
+
+def pool_crash_phase(designs: List[str], bdg: int) -> Dict:
+    """Pooled campaign under lane-kill faults vs inline fault-free."""
+    from repro.core.campaign import Campaign, CampaignSpec
+    from repro.core.config import EvalConfig
+    from repro.core.faults import Fault, FaultPlan
+
+    base_spec = CampaignSpec(designs=tuple(designs),
+                             optimizers=OPTIMIZERS, budget=bdg,
+                             seed=0, workers=0)
+    baseline = _frontier_map(Campaign(base_spec).run())
+
+    # two wildcard-lane crashes at job 0: every lane dies on its first
+    # job after (re)spawn until both faults are consumed, exercising
+    # detect -> respawn -> requeue on whichever lanes get work first
+    plan = FaultPlan([Fault("crash_worker", at=0),
+                      Fault("crash_worker", at=0)])
+    chaos_spec = CampaignSpec(designs=tuple(designs),
+                              optimizers=OPTIMIZERS, budget=bdg,
+                              seed=0, workers=2,
+                              eval=EvalConfig(faults=plan.to_json()))
+    t0 = time.perf_counter()
+    camp = Campaign(chaos_spec)
+    chaos = _frontier_map(camp.run())
+    wall = time.perf_counter() - t0
+    stats = camp.pool_stats or {}
+    strays = mp.active_children()
+    for p in strays:  # pragma: no cover - the defect this phase catches
+        p.kill()
+    return {
+        "n_tasks": len(designs) * len(OPTIMIZERS),
+        "identical_frontiers": _identical(baseline, chaos),
+        "respawns": int(stats.get("respawns", 0)),
+        "requeued": int(stats.get("requeued", 0)),
+        "escalated": int(stats.get("escalated", 0)),
+        "recovery_s": round(float(stats.get("recovery_s", 0.0)), 4),
+        "all_faults_fired": camp.faults.all_fired if camp.faults else False,
+        "no_zombies": not strays,
+        "wall_s": round(wall, 3),
+    }
+
+
+def snapshot_corruption_phase(designs: List[str], bdg: int) -> Dict:
+    """Crash-consistent saves + per-design quarantine on torn writes."""
+    from repro.core.service import (AdvisoryService, DesignRegistry,
+                                    InjectedFault, load_snapshot,
+                                    save_snapshot)
+    from repro.core.faults import Fault, FaultPlan
+
+    d_hurt, d_ok = designs[0], designs[1]
+    reg = DesignRegistry()
+    with AdvisoryService(registry=reg) as svc:
+        ref = {}
+        for d in (d_hurt, d_ok):
+            sid = svc.open_session(d, optimizer="grouped_sa",
+                                   budget=bdg, seed=0).id
+            svc.run_until_idle()
+            ref[d] = svc.result(sid)
+
+    out: Dict = {}
+    with tempfile.TemporaryDirectory() as tmp:
+        snap = os.path.join(tmp, "snap")
+        save_snapshot(reg, snap)
+
+        # 1. kill-mid-save: an aborted re-save must leave the previous
+        #    snapshot fully (strict-)loadable
+        crash = FaultPlan([Fault("crash_save", at=0)])
+        try:
+            save_snapshot(reg, snap, faults=crash)
+            out["survived_crash_save"] = False      # fault never fired
+        except InjectedFault:
+            probe = DesignRegistry()
+            load_snapshot(snap, registry=probe, strict=True)
+            out["survived_crash_save"] = sorted(probe.names()) == sorted(
+                [d_hurt, d_ok])
+
+        # 2. torn member write: load quarantines ONLY the damaged design
+        torn = FaultPlan([Fault("corrupt_snapshot", at=0, value=40,
+                                target=d_hurt)])
+        save_snapshot(reg, snap, faults=torn)
+        reg2 = DesignRegistry()
+        load_snapshot(snap, registry=reg2)
+        report = reg2.restore_report or {}
+        out["quarantined_only_damaged"] = (
+            sorted(report.get("quarantined", {})) == [d_hurt]
+            and report.get("restored") == [d_ok])
+
+        # 3. the healthy design restores warm: same session answers
+        #    bit-identically with every row served from the restored cache
+        with AdvisoryService(registry=reg2) as svc2:
+            sid = svc2.open_session(d_ok, optimizer="grouped_sa",
+                                    budget=bdg, seed=0).id
+            svc2.run_until_idle()
+            warm = svc2.result(sid)
+            out["healthy_warm_identical"] = np.array_equal(
+                warm.frontier_points, ref[d_ok].frontier_points)
+            out["healthy_warm_n_evals"] = int(warm.result.n_evals)
+
+            # 4. the quarantined design re-traces on first use and still
+            #    produces the exact pre-corruption answers
+            sid = svc2.open_session(d_hurt, optimizer="grouped_sa",
+                                    budget=bdg, seed=0).id
+            svc2.run_until_idle()
+            out["retraced_identical"] = np.array_equal(
+                svc2.result(sid).frontier_points,
+                ref[d_hurt].frontier_points)
+    return out
+
+
+def kill_resume_phase(designs: List[str], bdg: int) -> Dict:
+    """Interrupted campaign + checkpoint resume vs uninterrupted."""
+    from repro.core.campaign import Campaign, CampaignSpec
+
+    spec = CampaignSpec(designs=tuple(designs), optimizers=OPTIMIZERS,
+                        budget=bdg, seed=0, workers=0)
+    full = _frontier_map(Campaign(spec).run())
+    rounds_before_kill = 3
+    with tempfile.TemporaryDirectory() as tmp:
+        ckpt = os.path.join(tmp, "campaign.npz")
+        Campaign(spec, checkpoint_path=ckpt).run(
+            max_rounds=rounds_before_kill)
+        resumed = _frontier_map(Campaign.resume(ckpt).run())
+    return {
+        "rounds_before_kill": rounds_before_kill,
+        "identical_frontiers": _identical(full, resumed),
+    }
+
+
+def service_faults_phase(designs: List[str], bdg: int) -> Dict:
+    """Deadline fail-fast isolation + exact event-stream replay."""
+    from repro.core import FifoAdvisor
+    from repro.core.faults import Fault, FaultPlan
+    from repro.core.service import AdvisoryService
+    from repro.designs import make_design
+
+    d_victim, d_peer = designs[0], designs[1]
+    plan = FaultPlan([Fault("hang_eval", at=1, target=d_victim,
+                            value=0.2)])
+    t0 = time.perf_counter()
+    with AdvisoryService(faults=plan) as svc:
+        victim = svc.open_session(d_victim, optimizer="grouped_sa",
+                                  budget=bdg, seed=0, deadline_s=0.05)
+        peer = svc.open_session(d_peer, optimizer="grouped_sa",
+                                budget=bdg, seed=1)
+        # a client that drains a prefix then loses its connection...
+        svc.run_until_idle(max_rounds=2)
+        seen = victim.drain_events()
+        last_seq = seen[-1]["seq"] if seen else -1
+        svc.run_until_idle()
+        peer_result = svc.result(peer.id)
+    wall = time.perf_counter() - t0
+
+    # ...re-attaches and must receive exactly the missed suffix, no
+    # duplicates, terminal event included
+    replayed = victim.events_after(last_seq)
+    stream = seen + replayed
+    seqs = [e["seq"] for e in stream]
+    replay_exact = (seqs == sorted(set(seqs))
+                    and seqs[0] == 0 and len(seqs) == seqs[-1] + 1
+                    and stream[-1]["event"] == "failed")
+
+    solo = FifoAdvisor(make_design(d_peer)).run("grouped_sa",
+                                                budget=bdg, seed=1)
+    return {
+        "victim_failed_fast": victim.state == "failed",
+        "victim_code": victim.error_code,
+        "victim_kept_partial": victim.rounds >= 2,
+        "peer_identical": np.array_equal(peer_result.frontier_points,
+                                         solo.frontier_points),
+        "replay_exact": replay_exact,
+        "all_faults_fired": plan.all_fired,
+        "wall_s": round(wall, 3),
+    }
+
+
+def run() -> Dict:
+    designs = design_set()[:2]
+    bdg = budget()
+    out = {
+        "designs": list(designs),
+        "budget": bdg,
+        "pool_crash": pool_crash_phase(designs, bdg),
+        "snapshot_corruption": snapshot_corruption_phase(designs, bdg),
+        "kill_resume": kill_resume_phase(designs, bdg),
+        "service_faults": service_faults_phase(designs, bdg),
+    }
+    save_json("chaos.json", out)
+    return out
+
+
+def main():
+    out = run()
+    pc, sc = out["pool_crash"], out["snapshot_corruption"]
+    kr, sf = out["kill_resume"], out["service_faults"]
+    print(f"chaos harness: designs={out['designs']} budget={out['budget']}")
+    print(f"  pool_crash: identical={pc['identical_frontiers']} "
+          f"respawns={pc['respawns']} requeued={pc['requeued']} "
+          f"escalated={pc['escalated']} "
+          f"recovery={pc['recovery_s'] * 1e3:.1f}ms "
+          f"no_zombies={pc['no_zombies']}")
+    print(f"  snapshot_corruption: survived_crash_save="
+          f"{sc['survived_crash_save']} quarantine_exact="
+          f"{sc['quarantined_only_damaged']} warm_identical="
+          f"{sc['healthy_warm_identical']} "
+          f"(n_evals={sc['healthy_warm_n_evals']}) retraced_identical="
+          f"{sc['retraced_identical']}")
+    print(f"  kill_resume: identical={kr['identical_frontiers']} "
+          f"(killed after {kr['rounds_before_kill']} rounds)")
+    print(f"  service_faults: victim={sf['victim_code']} "
+          f"(failed_fast={sf['victim_failed_fast']}) peer_identical="
+          f"{sf['peer_identical']} replay_exact={sf['replay_exact']}")
+
+
+if __name__ == "__main__":
+    main()

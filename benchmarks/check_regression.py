@@ -22,7 +22,13 @@ beyond tolerance:
 * ``bounds.quick.json``    — bounds-seeded certification must return
   depth vectors identical to the unseeded descent on every design, the
   analytical bounds must bracket every certified depth, and the gated
-  probe-reduction geomean must hold its >=3x floor.
+  probe-reduction geomean must hold its >=3x floor;
+* ``chaos.quick.json``     — every fault-injected run must stay
+  bit-identical to its fault-free twin (pooled campaign under lane
+  kills, checkpoint resume, peer sessions next to a deadline-failed
+  victim), recovery must be bounded (respawn time under the ceiling, no
+  zombie workers), snapshot corruption must quarantine only the damaged
+  design, and event-stream replay must be exact.
 
 Exit code 0 = gate passed.
 """
@@ -332,6 +338,73 @@ def check_load(base, cur, p99_ceiling, p99_frac, failures):
                 f"baseline {ref:.3f}s")
 
 
+def check_chaos(base, cur, recovery_ceiling, failures):
+    """Gate the chaos harness (``benchmarks/chaos.py``).
+
+    Everything here is exact — identity under injected faults, bounded
+    recovery, quarantine precision — so the gate is boolean except for
+    the respawn-recovery wall-clock ceiling (generous: it catches "lane
+    respawn became a multi-second stall", not millisecond drift).
+    """
+    if cur is None:
+        failures.append("chaos.quick.json missing from current run")
+        return
+    pc = cur.get("pool_crash", {})
+    if not pc.get("identical_frontiers"):
+        failures.append(
+            "chaos regression: pooled campaign under injected lane kills "
+            "no longer bit-identical to the fault-free inline campaign")
+    if pc.get("respawns", 0) < 1:
+        failures.append(
+            "chaos regression: no lane was respawned — the injected "
+            "crashes never exercised the recovery path")
+    if not pc.get("no_zombies"):
+        failures.append(
+            "chaos regression: worker processes outlived pool.close()")
+    rec = pc.get("recovery_s")
+    if rec is None or rec > recovery_ceiling:
+        failures.append(
+            f"chaos regression: lane recovery took {rec}s > ceiling "
+            f"{recovery_ceiling}s")
+    sc = cur.get("snapshot_corruption", {})
+    if not sc.get("survived_crash_save"):
+        failures.append(
+            "chaos regression: a save aborted mid-write destroyed the "
+            "previous snapshot")
+    if not sc.get("quarantined_only_damaged"):
+        failures.append(
+            "chaos regression: snapshot corruption did not quarantine "
+            "exactly the damaged design")
+    if not sc.get("healthy_warm_identical") or sc.get(
+            "healthy_warm_n_evals", 1) != 0:
+        failures.append(
+            "chaos regression: healthy designs no longer restore warm "
+            f"and bit-identical (n_evals="
+            f"{sc.get('healthy_warm_n_evals')})")
+    if not sc.get("retraced_identical"):
+        failures.append(
+            "chaos regression: the quarantined design's re-trace "
+            "changed answers")
+    if not cur.get("kill_resume", {}).get("identical_frontiers"):
+        failures.append(
+            "chaos regression: checkpoint resume after a mid-campaign "
+            "kill no longer reproduces the uninterrupted frontiers")
+    sf = cur.get("service_faults", {})
+    if not sf.get("victim_failed_fast") or sf.get(
+            "victim_code") != "E_TIMEOUT":
+        failures.append(
+            f"chaos regression: deadline-exceeded session did not fail "
+            f"fast with E_TIMEOUT (state code: {sf.get('victim_code')})")
+    if not sf.get("peer_identical"):
+        failures.append(
+            "chaos regression: a peer session was perturbed by its "
+            "neighbour's injected hang/deadline failure")
+    if not sf.get("replay_exact"):
+        failures.append(
+            "chaos regression: reconnect replay no longer returns the "
+            "exact missed event-stream suffix")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", required=True,
@@ -403,6 +476,11 @@ def main(argv=None) -> int:
                          "steady load phase")
     ap.add_argument("--load-p99-frac", type=float, default=5.0,
                     help="allowed p99 multiple of the committed baseline")
+    # lane respawn is a terminate + fork, milliseconds in practice; the
+    # ceiling catches "recovery became a multi-second stall"
+    ap.add_argument("--chaos-recovery", type=float, default=5.0,
+                    help="hard ceiling (seconds) on total lane-respawn "
+                         "recovery time in the chaos pool phase")
     args = ap.parse_args(argv)
 
     failures = []
@@ -436,6 +514,9 @@ def main(argv=None) -> int:
     check_load(load(args.baseline, "load.quick.json"),
                load(args.current, "load.quick.json"),
                args.load_p99, args.load_p99_frac, failures)
+    check_chaos(load(args.baseline, "chaos.quick.json"),
+                load(args.current, "chaos.quick.json"),
+                args.chaos_recovery, failures)
 
     if failures:
         print("REGRESSION GATE FAILED:")
@@ -447,7 +528,8 @@ def main(argv=None) -> int:
           "certification speedup held, bounds exact + still seeding, "
           "condensation exact + still paying, "
           "fused kernel exact + winning its rungs, "
-          "mesh sharding exact + scaling, load SLOs + overload shed held)")
+          "mesh sharding exact + scaling, load SLOs + overload shed held, "
+          "chaos identity + bounded recovery held)")
     return 0
 
 

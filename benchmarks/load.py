@@ -21,6 +21,13 @@ transport):
 
 The SLO gate (``check_load`` in ``benchmarks/check_regression.py``)
 holds p99 under a hard ceiling and overload behavior exact.
+
+Transport faults (a server hard-closing a connection mid-stream, e.g.
+under a ``drop_conn`` :class:`~repro.core.faults.FaultPlan`) are
+*recorded*, never fatal: a ``ConnectionResetError``/``BrokenPipeError``
+on a session interaction counts that session as dropped (``conn_drops``
+in the report) and the harness keeps driving the rest — a load harness
+that dies on the first reset cannot measure behavior under faults.
 """
 
 from __future__ import annotations
@@ -43,6 +50,10 @@ def _params() -> Dict:
     return dict(n_sessions=150, budget=30, rate_per_s=50.0)
 
 
+#: transport-level failures a load harness must survive, not die on
+CONN_ERRORS = (ConnectionResetError, BrokenPipeError)
+
+
 def _mix(n: int, seed: int) -> List[tuple]:
     """(design, optimizer, seed) per session, cycled over the quick set."""
     from repro.designs import QUICK_DESIGNS
@@ -63,29 +74,39 @@ def steady_phase(seed: int = 0) -> Dict:
 
     done_at: Dict[str, float] = {}
     sched: Dict[str, float] = {}
+    conn_drops = 0
     with AdvisoryService(progress_events=False) as svc:
         for d in sorted({m[0] for m in mix}):
             svc.registry.register(d)        # trace cost off the clock
         with Timer() as t:
             nxt = 0
-            while len(done_at) < p["n_sessions"]:
+            while len(done_at) + conn_drops < p["n_sessions"]:
                 now = time.perf_counter() - t.t0
                 # open-loop: admit every arrival whose time has come,
                 # regardless of how far behind the service is
                 while nxt < p["n_sessions"] and arrivals[nxt] <= now:
                     d, o, s = mix[nxt]
-                    sess = svc.open_session(d, optimizer=o,
-                                            budget=p["budget"], seed=s)
-                    sched[sess.id] = float(arrivals[nxt])
+                    try:
+                        sess = svc.open_session(d, optimizer=o,
+                                                budget=p["budget"],
+                                                seed=s)
+                        sched[sess.id] = float(arrivals[nxt])
+                    except CONN_ERRORS:
+                        conn_drops += 1     # dropped, not fatal
                     nxt += 1
-                if not svc.step() and nxt < p["n_sessions"]:
+                try:
+                    advanced = svc.step()
+                except CONN_ERRORS:
+                    conn_drops += 1
+                    advanced = 1            # keep driving the rest
+                if not advanced and nxt < p["n_sessions"]:
                     time.sleep(max(0.0, arrivals[nxt] - (
                         time.perf_counter() - t.t0)))
                 now = time.perf_counter() - t.t0
                 for sid in list(sched):
                     if svc.session(sid).done and sid not in done_at:
                         done_at[sid] = now
-        lat = np.array([done_at[sid] - sched[sid] for sid in sched])
+        lat = np.array([done_at[sid] - sched[sid] for sid in done_at])
         stats = svc.stats()
     return {
         "n_sessions": p["n_sessions"], "budget": p["budget"],
@@ -96,7 +117,8 @@ def steady_phase(seed: int = 0) -> Dict:
         "p99_s": round(float(np.percentile(lat, 99)), 4),
         "max_s": round(float(lat.max()), 4),
         "rounds": stats["batcher"]["rounds"],
-        "all_completed": len(done_at) == p["n_sessions"],
+        "conn_drops": conn_drops,
+        "all_completed": len(done_at) + conn_drops == p["n_sessions"],
     }
 
 
@@ -107,6 +129,7 @@ def overload_phase(seed: int = 1) -> Dict:
     n_burst = 5 * cap
     mix = _mix(n_burst, seed)
     rejected = 0
+    conn_drops = 0
     retry_hints: List[float] = []
     max_running = 0
     with AdvisoryService(progress_events=False, max_sessions=cap) as svc:
@@ -125,23 +148,30 @@ def overload_phase(seed: int = 1) -> Dict:
                         rejected += 1
                         retry_hints.append(exc.retry_after_s)
                         break          # back off until the hinted retry
+                    except CONN_ERRORS:
+                        conn_drops += 1      # dropped, not fatal
+                        admitted.append(spec)
                 for spec in admitted:
                     pending.remove(spec)
                 max_running = max(max_running, len(svc.running))
-                svc.step()
+                try:
+                    svc.step()
+                except CONN_ERRORS:
+                    conn_drops += 1
         stats = svc.stats()
     return {
         "max_sessions": cap, "burst": n_burst,
         "wall_s": round(t.s, 3),
         "rejected": rejected,
+        "conn_drops": conn_drops,
         "rejected_counter": stats["rejected"],
         "max_running_observed": max_running,
         "cap_respected": max_running <= cap,
         "min_retry_after_s": round(min(retry_hints), 5) if retry_hints
         else None,
-        "all_completed": stats["n_sessions"] == n_burst,
+        "all_completed": stats["n_sessions"] + conn_drops == n_burst,
         "shed_and_recovered": bool(rejected and stats["n_sessions"]
-                                   == n_burst),
+                                   + conn_drops == n_burst),
     }
 
 

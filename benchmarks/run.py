@@ -119,6 +119,18 @@ def _load() -> str:
             f"shed={o['rejected']};cap_respected={o['cap_respected']}")
 
 
+def _chaos() -> str:
+    from benchmarks import chaos
+    ch = chaos.run()
+    pc, sf = ch["pool_crash"], ch["service_faults"]
+    return (f"pool_identical={pc['identical_frontiers']};"
+            f"respawns={pc['respawns']};"
+            f"quarantine_exact="
+            f"{ch['snapshot_corruption']['quarantined_only_damaged']};"
+            f"resume_identical={ch['kill_resume']['identical_frontiers']};"
+            f"timeout_isolated={sf['peer_identical']}")
+
+
 def _pruning() -> str:
     from benchmarks import pruning
     k = pruning.run()["k15mmtree"]
@@ -152,6 +164,7 @@ STEPS = [
     ("load", _load),
     ("fuzz", _fuzz),
     ("bounds", _bounds),
+    ("chaos", _chaos),
     ("pruning", _pruning),
     ("roofline", _roofline),
 ]

@@ -15,13 +15,23 @@ there are no XLA threads to trip over).  Once jax IS loaded (hetero mode,
 test suites), the pool falls back to ``spawn``: clean ~0.3 s numpy-only
 interpreter per worker that re-traces its designs on first use.
 
-All results are exact, so parallel evaluation is bit-identical to the
-sequential path — campaign frontiers do not depend on worker count.
+Supervision: a lane that crashes or stops answering within
+``recv_timeout_s`` is detected (EOF on its pipe, or the recv deadline
+expiring), killed, and respawned; its in-flight jobs are re-dispatched
+to the fresh process, and a job that has already burned
+``max_retries`` lanes is executed inline in the parent instead — so a
+round always completes and never hangs on a dead worker.  All results
+are exact and every retry re-evaluates the same pure function, so
+parallel evaluation — crashes included — is bit-identical to the
+sequential path: campaign frontiers do not depend on worker count or on
+worker failures.  Fault schedules for chaos testing are injected via
+:class:`~repro.core.faults.FaultPlan` (``docs/robustness.md``).
 """
 
 from __future__ import annotations
 
 import multiprocessing as mp
+import os
 import sys
 import time
 from collections import deque
@@ -29,10 +39,28 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.faults import FaultPlan, check_worker_faults
+
 #: cap on queued-but-undrained jobs per worker: bounds the result-pipe
 #: backlog so neither side of the pipe pair can fill and deadlock (see
-#: WorkerPool.submit)
+#: WorkerPool.submit) — and bounds how many jobs a lane death can put
+#: back in flight
 MAX_OUTSTANDING = 8
+
+#: a lane that answers nothing for this long is declared dead (the
+#: numpy worklist evaluates a full batch in milliseconds; minutes of
+#: silence means the process is gone or wedged)
+DEFAULT_RECV_TIMEOUT_S = 60.0
+
+
+class LaneFailure(RuntimeError):
+    """Internal: lane ``lane`` died or went silent; callers of
+    ``_recv`` recover by respawning the lane and requeueing."""
+
+    def __init__(self, lane: int, reason: str):
+        super().__init__(f"worker lane {lane}: {reason}")
+        self.lane = lane
+        self.reason = reason
 
 
 class _WorkerDesign:
@@ -61,15 +89,21 @@ class _WorkerDesign:
         return self.ev.evaluate_incremental(base, depths)
 
 
-def _worker_main(conn, max_iters: int, graphs: Optional[Dict] = None):
+def _worker_main(conn, max_iters: int, graphs: Optional[Dict] = None,
+                 faults: Optional[List[dict]] = None):
     designs: Dict[str, _WorkerDesign] = {}
     graphs = graphs or {}
+    faults = list(faults or [])
+    n_jobs = 0
     try:
         while True:
             msg = conn.recv()
             if msg is None:
                 break
             name, depths, base = msg
+            if faults:
+                check_worker_faults(faults, n_jobs)
+            n_jobs += 1
             try:
                 wd = designs.get(name)
                 if wd is None:
@@ -79,10 +113,12 @@ def _worker_main(conn, max_iters: int, graphs: Optional[Dict] = None):
                 lat, bram, dead = wd.evaluate(depths, base)
                 conn.send(
                     ("ok", lat, bram, dead, time.perf_counter() - t0))
+            except BrokenPipeError:  # lane already written off
+                break
             except Exception as exc:  # surfaced in the parent
                 conn.send(("err", f"{type(exc).__name__}: {exc}"))
-    except (EOFError, KeyboardInterrupt):  # parent died / interrupt
-        pass
+    except (EOFError, KeyboardInterrupt, BrokenPipeError, OSError):
+        pass  # parent died / interrupt / lane already written off
     finally:
         conn.close()
 
@@ -95,42 +131,171 @@ def pick_start_method() -> str:
 
 
 class WorkerPool:
-    """A fixed set of persistent worklist workers fed round by round."""
+    """A fixed set of persistent worklist workers fed round by round,
+    supervised against crashes and hangs.
+
+    Args:
+        n_workers: lane count.
+        max_iters: fixpoint cap forwarded to each worker's evaluator.
+        start_method: force ``fork``/``spawn``; default picks.
+        graphs: prebuilt ``{name: SimGraph}`` — rides to fork children
+            via copy-on-write, and backs the parent's inline-escalation
+            evaluators under either start method.
+        faults: a :class:`FaultPlan` to exercise recovery paths
+            (chaos testing only; None = no injection).
+        recv_timeout_s: silence window after which a lane is declared
+            dead (``REPRO_POOL_TIMEOUT_S`` overrides the default).
+        max_retries: worker attempts per job before the parent runs it
+            inline.
+    """
 
     def __init__(self, n_workers: int, max_iters: int = 64,
                  start_method: Optional[str] = None,
-                 graphs: Optional[Dict] = None):
+                 graphs: Optional[Dict] = None,
+                 faults: Optional[FaultPlan] = None,
+                 recv_timeout_s: Optional[float] = None,
+                 max_retries: int = 2):
         self.n_workers = int(n_workers)
+        self.max_iters = int(max_iters)
         self.start_method = start_method or pick_start_method()
+        self.faults = faults
+        if recv_timeout_s is None:
+            recv_timeout_s = float(os.environ.get(
+                "REPRO_POOL_TIMEOUT_S", DEFAULT_RECV_TIMEOUT_S))
+        self.recv_timeout_s = float(recv_timeout_s)
+        self.max_retries = int(max_retries)
+        #: how long close() waits for a clean exit before escalating
+        self.join_timeout_s = 5.0
+        self._graphs = graphs or {}
         # graphs can only ride along through fork's copy-on-write pages;
         # spawn workers rebuild their designs by name on first use
-        payload = graphs if self.start_method == "fork" else None
-        ctx = mp.get_context(self.start_method)
-        self._pipes = []
-        self._procs = []
-        for _ in range(self.n_workers):
-            parent_conn, child_conn = ctx.Pipe()
-            proc = ctx.Process(target=_worker_main,
-                               args=(child_conn, max_iters, payload),
-                               daemon=True)
-            proc.start()
-            child_conn.close()
-            self._pipes.append(parent_conn)
-            self._procs.append(proc)
+        self._payload = self._graphs if self.start_method == "fork" \
+            else None
+        self._ctx = mp.get_context(self.start_method)
+        self._local: Dict[str, _WorkerDesign] = {}  # inline escalation
+        self.stats = {"respawns": 0, "requeued": 0, "escalated": 0,
+                      "recovery_s": 0.0}
+        self._pipes: List = [None] * self.n_workers
+        self._procs: List = [None] * self.n_workers
+        for w in range(self.n_workers):
+            self._spawn_lane(w)
+
+    # ----------------------------------------------------- lane lifecycle
+    def _spawn_lane(self, w: int):
+        wf = self.faults.worker_payload(w) if self.faults else None
+        parent_conn, child_conn = self._ctx.Pipe()
+        proc = self._ctx.Process(
+            target=_worker_main,
+            args=(child_conn, self.max_iters, self._payload, wf),
+            daemon=True)
+        proc.start()
+        child_conn.close()
+        self._pipes[w] = parent_conn
+        self._procs[w] = proc
+
+    def _revive(self, w: int):
+        """Kill whatever is left of lane ``w`` and spawn a replacement."""
+        t0 = time.perf_counter()
+        proc = self._procs[w]
+        if proc.is_alive():
+            proc.terminate()
+            proc.join(timeout=2)
+            if proc.is_alive():  # pragma: no cover - stuck in syscall
+                proc.kill()
+        proc.join(timeout=2)
+        try:
+            self._pipes[w].close()
+        except OSError:  # pragma: no cover - already closed
+            pass
+        if self.faults is not None:
+            # the fault that felled this incarnation is spent: the
+            # replacement is shipped only the remaining schedule
+            self.faults.consume_worker_fault(w)
+        self._spawn_lane(w)
+        self.stats["respawns"] += 1
+        self.stats["recovery_s"] += time.perf_counter() - t0
 
     def _recv(self, w: int):
-        msg = self._pipes[w].recv()
+        pipe = self._pipes[w]
+        if not pipe.poll(self.recv_timeout_s):
+            raise LaneFailure(
+                w, f"no result within {self.recv_timeout_s:g}s")
+        try:
+            msg = pipe.recv()
+        except (EOFError, OSError):
+            raise LaneFailure(w, "process died") from None
         if msg[0] == "err":
             raise RuntimeError(f"campaign worker {w} failed: {msg[1]}")
         return msg[1:]
+
+    # ------------------------------------------------------ job movement
+    def _eval_inline(self, job) -> Tuple:
+        """Last resort for a job that keeps killing workers: evaluate in
+        the parent on a cached worklist evaluator (exact same engine, so
+        results stay bit-identical)."""
+        _, name, depths, base = job
+        wd = self._local.get(name)
+        if wd is None:
+            wd = self._local[name] = _WorkerDesign(
+                name, self.max_iters, self._graphs.get(name))
+        t0 = time.perf_counter()
+        lat, bram, dead = wd.evaluate(depths, base)
+        return (lat, bram, dead, time.perf_counter() - t0)
+
+    def _dispatch(self, handle: Dict, w: int, j: int):
+        """Ship job ``j`` to lane ``w``, recovering the lane if the send
+        itself hits a dead process."""
+        _, name, depths, base = handle["jobs"][j]
+        if self.faults is not None:
+            f = self.faults.take("delay_dispatch", lane=w, at=j)
+            if f is not None:
+                time.sleep(f.value)
+        try:
+            self._pipes[w].send((name, depths, base))
+        except (BrokenPipeError, OSError):
+            self._recover(handle, w)
+            self._pipes[w].send((name, depths, base))
+        handle["per_worker"].setdefault(w, deque()).append(j)
+
+    def _recover(self, handle: Dict, w: int):
+        """Lane ``w`` failed: respawn it and re-dispatch its in-flight
+        jobs (inline once a job exceeds ``max_retries``)."""
+        outstanding = list(handle["per_worker"].get(w, ()))
+        handle["per_worker"][w] = deque()
+        self._revive(w)
+        retries = handle["retries"]
+        requeue, inline = [], []
+        for j in outstanding:
+            retries[j] = retries.get(j, 0) + 1
+            (inline if retries[j] > self.max_retries
+             else requeue).append(j)
+        self.stats["requeued"] += len(requeue)
+        for j in requeue:
+            self._dispatch(handle, w, j)
+        for j in inline:
+            self.stats["escalated"] += 1
+            handle["results"][j] = self._eval_inline(handle["jobs"][j])
+
+    def _collect_one(self, handle: Dict, w: int):
+        """Blocking-receive the oldest outstanding result from lane
+        ``w``; a dead/silent lane is recovered instead (its results then
+        arrive from the re-dispatch or inline escalation)."""
+        queue = handle["per_worker"][w]
+        try:
+            res = self._recv(w)
+        except LaneFailure:
+            self._recover(handle, w)
+            return
+        handle["results"][queue.popleft()] = res
 
     def _drain_ready(self, handle: Dict):
         """Collect any results already sitting in the pipes (non-blocking)
         so a worker's result-send can never back up against our job-send
         — the classic pipe-pair deadlock."""
-        for w, queue in handle["per_worker"].items():
-            while queue and self._pipes[w].poll():
-                handle["results"][queue.popleft()] = self._recv(w)
+        for w in list(handle["per_worker"]):
+            while (handle["per_worker"][w]
+                   and self._pipes[w].poll()):
+                self._collect_one(handle, w)
 
     def submit(self, jobs: List[Tuple[int, str, np.ndarray,
                                       Optional[np.ndarray]]]) -> Dict:
@@ -143,15 +308,14 @@ class WorkerPool:
         first — so the per-worker result backlog stays far below the pipe
         buffer and neither side can block on a full pipe simultaneously.
         """
-        per_worker: Dict[int, deque] = {}
-        handle = {"per_worker": per_worker, "results": {}, "n": len(jobs)}
+        handle = {"jobs": list(jobs), "per_worker": {}, "results": {},
+                  "retries": {}, "n": len(jobs)}
         for j, (w, name, depths, base) in enumerate(jobs):
             self._drain_ready(handle)
-            queue = per_worker.setdefault(w, deque())
+            queue = handle["per_worker"].setdefault(w, deque())
             while len(queue) >= MAX_OUTSTANDING:
-                handle["results"][queue.popleft()] = self._recv(w)
-            self._pipes[w].send((name, depths, base))
-            queue.append(j)
+                self._collect_one(handle, w)
+            self._dispatch(handle, w, j)
         return handle
 
     def collect(self, handle: Dict) -> List[Tuple[np.ndarray, np.ndarray,
@@ -159,14 +323,14 @@ class WorkerPool:
         """Results in the submission order of the ``submit`` jobs; each
         is ``(lat, bram, dead, worker_eval_seconds)``."""
         per_worker = handle["per_worker"]
+        # drain in round-robin so no single worker's pipe backs up
+        while any(per_worker.values()):
+            for w in list(per_worker):
+                if per_worker[w]:
+                    self._collect_one(handle, w)
         out: List = [None] * handle["n"]
         for j, res in handle["results"].items():
             out[j] = res
-        # drain in round-robin so no single worker's pipe backs up
-        while any(per_worker.values()):
-            for w, queue in per_worker.items():
-                if queue:
-                    out[queue.popleft()] = self._recv(w)
         return out
 
     def run_jobs(self, jobs) -> List:
@@ -174,6 +338,8 @@ class WorkerPool:
         return self.collect(self.submit(jobs))
 
     def close(self):
+        """Shut every lane down, escalating join -> terminate -> kill so
+        a wedged worker can never outlive the pool as a zombie."""
         for pipe in self._pipes:
             try:
                 pipe.send(None)
@@ -181,9 +347,15 @@ class WorkerPool:
             except (BrokenPipeError, OSError):  # already gone
                 pass
         for proc in self._procs:
-            proc.join(timeout=5)
-            if proc.is_alive():  # pragma: no cover - defensive
+            if proc is None:
+                continue
+            proc.join(timeout=self.join_timeout_s)
+            if proc.is_alive():
                 proc.terminate()
+                proc.join(timeout=2)
+            if proc.is_alive():  # pragma: no cover - stuck in syscall
+                proc.kill()
+            proc.join(timeout=2)
         self._pipes, self._procs = [], []
 
     def __enter__(self):

@@ -96,6 +96,10 @@ class CampaignSpec:
     shards: Optional[int] = None
     #: rounds between automatic checkpoints (when a path is configured)
     checkpoint_every: int = 8
+    #: seconds between automatic checkpoints (when a path is
+    #: configured) — complements the round cadence for long rounds;
+    #: None disables the timer
+    checkpoint_every_s: Optional[float] = None
     #: record per-round (n_evals, hypervolume) trajectories per task —
     #: costs a full frontier recomputation per task per round, so it is
     #: off by default and meant for convergence studies
@@ -216,6 +220,10 @@ class Campaign:
         self.tasks = [CampaignTask(ts, self.designs[ts.design])
                       for ts in task_specs]
         self.pool = None
+        #: pool recovery counters from the last closed pool (chaos gate)
+        self.pool_stats: Optional[Dict] = None
+        from repro.core.faults import resolve_plan
+        self.faults = resolve_plan(spec.eval)
         if spec.workers > 0 and not spec.hetero:
             # after the design contexts so forked workers inherit the
             # built graphs + worklist tables; before any jax import so
@@ -226,7 +234,8 @@ class Campaign:
             from repro.core.campaign.pool import WorkerPool
             self.pool = WorkerPool(
                 spec.workers, max_iters=spec.max_iters,
-                graphs={k: d.graph for k, d in self.designs.items()})
+                graphs={k: d.graph for k, d in self.designs.items()},
+                faults=self.faults)
         # evaluation lanes: lane 0 is THIS process (overlapped with the
         # pool via submit/collect), lanes 1..workers are pool workers.
         # Stagger the per-design assignment so the same optimizer on
@@ -299,9 +308,12 @@ class Campaign:
         the finished tasks.  When a checkpoint path is configured, state
         is saved every ``spec.checkpoint_every`` rounds and at exit.
         """
+        import time as _time
+
         from repro.core.campaign.state import save_checkpoint
         self._ensure_pool()
         rounds_done = 0
+        last_save = _time.perf_counter()
         try:
             while True:
                 active = self._round()
@@ -309,10 +321,15 @@ class Campaign:
                 due = (self.checkpoint_path is not None
                        and self.spec.checkpoint_every > 0
                        and self.round % self.spec.checkpoint_every == 0)
+                every_s = self.spec.checkpoint_every_s
+                if (self.checkpoint_path is not None and every_s
+                        and _time.perf_counter() - last_save >= every_s):
+                    due = True
                 if active == 0:
                     break
                 if due:
                     save_checkpoint(self, self.checkpoint_path)
+                    last_save = _time.perf_counter()
                 if max_rounds is not None and rounds_done >= max_rounds:
                     break
             if self.checkpoint_path is not None:
@@ -341,11 +358,13 @@ class Campaign:
             from repro.core.campaign.pool import WorkerPool
             self.pool = WorkerPool(
                 self.spec.workers, max_iters=self.spec.max_iters,
-                graphs={k: d.graph for k, d in self.designs.items()})
+                graphs={k: d.graph for k, d in self.designs.items()},
+                faults=self.faults)
         self.router.pool = self.pool
 
     def close(self):
         if self.pool is not None:
+            self.pool_stats = dict(self.pool.stats)
             self.pool.close()
             self.pool = None
             self.router.pool = None

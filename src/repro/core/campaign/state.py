@@ -61,6 +61,7 @@ def save_checkpoint(campaign, path: str) -> str:
             "workers": spec.workers,
             "hetero": spec.hetero,
             "checkpoint_every": spec.checkpoint_every,
+            "checkpoint_every_s": spec.checkpoint_every_s,
             "track_hypervolume": spec.track_hypervolume,
         },
         "tasks": [],
@@ -96,6 +97,8 @@ def save_checkpoint(campaign, path: str) -> str:
         with os.fdopen(fd, "wb") as f:
             np.savez_compressed(f, manifest=np.asarray(
                 json.dumps(manifest)), **arrays)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)
     except BaseException:
         if os.path.exists(tmp):

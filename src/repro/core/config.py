@@ -57,6 +57,10 @@ class EvalConfig:
             cross-task coupling) and free once the design is traced.
         certified_floor: clamp every search to depths at or above the
             certified minimal safe depths (``docs/fuzzing.md``).
+        faults: JSON of a :class:`~repro.core.faults.FaultPlan` to
+            install for this run (chaos testing; ``docs/robustness.md``).
+            None — the default, and the only value used outside chaos
+            suites — makes every injection point a no-op.
     """
 
     backend: str = "numpy"
@@ -67,6 +71,7 @@ class EvalConfig:
     local_bounds: bool = False
     channel_bounds: bool = False
     certified_floor: bool = False
+    faults: Optional[str] = None
 
     def __post_init__(self):
         if self.condense not in ("auto", None):

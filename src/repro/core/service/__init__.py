@@ -16,6 +16,7 @@ solo ``FifoAdvisor.run()`` with the same seed, regardless of batching.
 """
 
 from repro.core.config import EvalConfig
+from repro.core.faults import Fault, FaultPlan, InjectedFault
 from repro.core.service.batcher import (AdvisoryService,
                                         CrossSessionBatcher,
                                         ServiceOverloaded)
@@ -30,8 +31,9 @@ from repro.core.service.snapshot import (SnapshotError, load_snapshot,
 
 __all__ = [
     "AdvisorClient", "AdvisoryService", "CrossSessionBatcher",
-    "DesignRegistry", "ERROR_CODES", "EvalConfig", "PROTO",
-    "ProtocolError", "ProtocolHandler", "ServiceOverloaded", "Session",
-    "SessionHandle", "SnapshotError", "adapt_v1", "decode_line",
-    "encode_line", "load_snapshot", "save_snapshot",
+    "DesignRegistry", "ERROR_CODES", "EvalConfig", "Fault", "FaultPlan",
+    "InjectedFault", "PROTO", "ProtocolError", "ProtocolHandler",
+    "ServiceOverloaded", "Session", "SessionHandle", "SnapshotError",
+    "adapt_v1", "decode_line", "encode_line", "load_snapshot",
+    "save_snapshot",
 ]

@@ -34,6 +34,7 @@ import numpy as np
 from repro.core.advisor import DseResult
 from repro.core.campaign.router import RoundRouter, RoutedRequest
 from repro.core.config import EvalConfig, resolve_config
+from repro.core.faults import FaultPlan, resolve_plan
 from repro.core.service.registry import DesignRegistry
 from repro.core.service.session import Session
 
@@ -66,8 +67,11 @@ class CrossSessionBatcher:
     """
 
     def __init__(self, registry: DesignRegistry, hetero: bool = False,
-                 workers: int = 0, shards: Optional[int] = None):
+                 workers: int = 0, shards: Optional[int] = None,
+                 faults: Optional[FaultPlan] = None):
         self.registry = registry
+        #: installed fault plan (chaos testing; None = no injection)
+        self.faults = faults
         self.want_hetero = bool(hetero)
         # hetero owns every full-solve row in this process (same rule as
         # CampaignSpec.hetero): a pool would only idle, so the two are
@@ -121,7 +125,8 @@ class CrossSessionBatcher:
                 self.router.pool = WorkerPool(
                     self.workers, max_iters=self.registry.max_iters,
                     graphs={k: self.registry[k].graph
-                            for k in self._pool_designs})
+                            for k in self._pool_designs},
+                    faults=self.faults)
 
     def step(self, sessions: List[Session]) -> int:
         """One cross-session round over the given *running* sessions.
@@ -143,6 +148,17 @@ class CrossSessionBatcher:
                 key=sess.design, req=req, lat=lat, bram=bram, dead=dead,
                 miss_rows=np.flatnonzero(miss), lane=sess.lane, tag=sess))
         self.router.route(pending)
+        if self.faults is not None:
+            for p in pending:
+                sess = p.tag
+                f = self.faults.take("hang_eval", at=sess.rounds,
+                                     targets=(sess.id, sess.design))
+                if f is not None:
+                    # a wedged evaluation: real wall-clock stall, real
+                    # attributed eval time — the session's deadline (if
+                    # any) fails it with E_TIMEOUT in complete_round
+                    time.sleep(f.value)
+                    p.eval_s += f.value
         for p in pending:
             p.tag.complete_round(p)
         self.rounds += 1
@@ -196,6 +212,9 @@ class AdvisoryService:
             sessions; :meth:`open_session` raises
             :class:`ServiceOverloaded` (with a live retry-after
             estimate) above it.  None = unbounded.
+        faults: a :class:`~repro.core.faults.FaultPlan` to install
+            (chaos testing); defaults to whatever the registry config /
+            ``REPRO_FAULTS`` env resolves to — i.e. None.
     """
 
     def __init__(self, registry: Optional[DesignRegistry] = None,
@@ -203,20 +222,27 @@ class AdvisoryService:
                  hetero: bool = False, workers: int = 0,
                  shards: Optional[int] = None,
                  progress_events: bool = True,
-                 max_sessions: Optional[int] = None, **legacy):
+                 max_sessions: Optional[int] = None,
+                 faults: Optional[FaultPlan] = None, **legacy):
         if registry is None:
             registry = DesignRegistry(
                 resolve_config(config, legacy, "AdvisoryService"))
         elif legacy:
             resolve_config(config, legacy, "AdvisoryService")
         self.registry = registry
+        self.faults = faults if faults is not None \
+            else resolve_plan(self.registry.config)
         self.batcher = CrossSessionBatcher(self.registry, hetero=hetero,
-                                           workers=workers, shards=shards)
+                                           workers=workers, shards=shards,
+                                           faults=self.faults)
         self.progress_events = bool(progress_events)
         self.max_sessions = None if max_sessions is None else int(max_sessions)
         self.rejected = 0              # admissions refused while at capacity
         self.sessions: Dict[str, Session] = {}
         self._next_sid = 0
+        #: idempotent open: request id -> session id, so a client that
+        #: lost the open reply can safely re-send the same open
+        self._open_requests: Dict[str, str] = {}
 
     @property
     def config(self) -> EvalConfig:
@@ -232,6 +258,8 @@ class AdvisoryService:
     def open_session(self, design: str, optimizer: str = "grouped_sa",
                      budget: int = 300, seed: int = 0,
                      design_obj=None, progress_events: Optional[bool] = None,
+                     deadline_s: Optional[float] = None,
+                     request_id: Optional[str] = None,
                      **opt_kwargs) -> Session:
         """Open a DSE session (tracing the design on first use).
 
@@ -239,7 +267,18 @@ class AdvisoryService:
         sessions already exist — admission is checked *before* the
         (potentially expensive) first-use trace, so overload replies
         stay cheap even under a thundering herd of new designs.
+
+        ``request_id`` makes the open idempotent: re-sending an open
+        with an id the service has already honoured returns the session
+        it created then, instead of opening a duplicate — the reconnect
+        path for a client whose connection died before the open reply
+        arrived.  ``deadline_s`` is the per-round evaluation deadline
+        (see :class:`Session`).
         """
+        if request_id is not None:
+            sid = self._open_requests.get(request_id)
+            if sid is not None and sid in self.sessions:
+                return self.sessions[sid]
         if (self.max_sessions is not None
                 and len(self.running) >= self.max_sessions):
             self.rejected += 1
@@ -254,8 +293,11 @@ class AdvisoryService:
                        lane=lane,
                        progress_events=(self.progress_events
                                         if progress_events is None
-                                        else progress_events))
+                                        else progress_events),
+                       deadline_s=deadline_s)
         self.sessions[sid] = sess
+        if request_id is not None:
+            self._open_requests[request_id] = sid
         return sess
 
     def session(self, sid: str) -> Session:

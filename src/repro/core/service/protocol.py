@@ -53,8 +53,11 @@ SUPPORTED_PROTOS = (1, 2)
 
 #: requests the handler understands (anything else is E_PROTO).
 #: ``close`` is the deprecated v1 spelling of ``release``.
-OPS = ("hello", "open", "run", "step", "cancel", "release", "close",
-       "status", "result", "designs", "stats", "snapshot", "shutdown")
+#: ``attach`` is the reconnect/resume path: replay a session's event
+#: suffix after a dropped connection (``docs/robustness.md``).
+OPS = ("hello", "open", "attach", "run", "step", "cancel", "release",
+       "close", "status", "result", "designs", "stats", "snapshot",
+       "shutdown")
 
 # ------------------------------------------------------------ error codes
 #: the stable error vocabulary; codes never change meaning across
@@ -66,9 +69,10 @@ E_BAD_OPTIMIZER = "E_BAD_OPTIMIZER"  # unknown optimizer name
 E_BAD_SESSION = "E_BAD_SESSION"  # unknown/released session id
 E_OVERLOADED = "E_OVERLOADED"    # admission refused; see retry_after_s
 E_INTERNAL = "E_INTERNAL"        # engine failure behind a valid request
+E_TIMEOUT = "E_TIMEOUT"          # evaluation exceeded the session deadline
 
 ERROR_CODES = (E_PROTO, E_BAD_REQUEST, E_BAD_DESIGN, E_BAD_OPTIMIZER,
-               E_BAD_SESSION, E_OVERLOADED, E_INTERNAL)
+               E_BAD_SESSION, E_OVERLOADED, E_INTERNAL, E_TIMEOUT)
 
 
 class ProtocolError(ValueError):
@@ -196,12 +200,15 @@ class ProtocolHandler:
         if not isinstance(kwargs, dict):
             raise ProtocolError("'kwargs' must be an object",
                                 code=E_BAD_REQUEST)
+        deadline = msg.get("deadline")
         try:
             sess = self.service.open_session(
                 design, optimizer=msg.get("optimizer", "grouped_sa"),
                 budget=int(msg.get("budget", 300)),
                 seed=int(msg.get("seed", 0)),
-                progress_events=msg.get("progress"), **kwargs)
+                progress_events=msg.get("progress"),
+                deadline_s=None if deadline is None else float(deadline),
+                request_id=msg.get("req"), **kwargs)
         except KeyError as exc:
             code = (E_BAD_OPTIMIZER if "optimizer" in str(exc)
                     else E_BAD_DESIGN)
@@ -209,6 +216,22 @@ class ProtocolHandler:
         return {"ok": True, "session": sess.id, "design": sess.design,
                 "optimizer": sess.optimizer, "budget": sess.budget,
                 "seed": sess.seed, "state": sess.state}
+
+    def _op_attach(self, msg: dict) -> dict:
+        """Reconnect/resume: replay the session's retained event-stream
+        suffix after the last ``seq`` the client saw (``after_seq``;
+        -1 replays everything retained).  ``replay_complete`` is false
+        when events between ``after_seq`` and the log floor already
+        aged out of the bounded log — the client should then fall back
+        to ``status``/``result`` for ground truth."""
+        sess = self._session_of(msg)
+        after = int(msg.get("after_seq", -1))
+        events = sess.events_after(after)
+        complete = not (sess.event_log
+                        and sess.replay_floor > after + 1)
+        return {"ok": True, "session": sess.id, "state": sess.state,
+                "events": events, "replay_complete": complete,
+                "next_seq": sess.status()["next_seq"]}
 
     def _op_run(self, msg: dict) -> dict:
         rounds = self.service.run_until_idle(msg.get("max_rounds"))
@@ -394,6 +417,12 @@ class AdvisorClient:
     def events(self, sid: Optional[str] = None) -> List[dict]:
         """Drain queued progress/done events."""
         return self.handler.poll_events(sid)
+
+    def attach(self, sid: str, after_seq: int = -1) -> dict:
+        """Reconnect to a session: replay its event suffix after
+        ``after_seq`` (see the ``attach`` op)."""
+        return self.request({"op": "attach", "session": sid,
+                             "after_seq": after_seq})
 
     # ------------------------------------------- private per-sid backends
     def _cancel(self, sid: str) -> dict:

@@ -44,6 +44,9 @@ class DesignRegistry:
         #: NOT rebuildable via ``make_design`` in a fresh process, which
         #: matters to engines that re-trace by name (the worker pool)
         self.custom_names: set = set()
+        #: set by the snapshot loader: {"restored": [...],
+        #: "quarantined": {name: reason}} — None until a restore ran
+        self.restore_report: Optional[dict] = None
 
     @property
     def backend(self) -> str:

@@ -15,6 +15,14 @@ Lifecycle::
 
     running --(generator exhausts)--> done
     running --(cancel())-----------> cancelled   (partial result kept)
+    running --(deadline exceeded)--> failed      (partial result kept,
+                                                  error code E_TIMEOUT)
+
+Every queued event carries a monotonically increasing ``seq`` number,
+and a bounded replay log retains the most recent events even after they
+are drained — so a client that loses its connection can re-attach and
+replay the exact suffix of its event stream from the last ``seq`` it
+saw (``events_after``; ``docs/robustness.md``).
 
 Because evaluation is exact and the optimizer is a deterministic
 function of ``(seed, observed results)``, a session's history — and
@@ -42,6 +50,7 @@ __all__ = ["Session"]
 RUNNING = "running"
 DONE = "done"
 CANCELLED = "cancelled"
+FAILED = "failed"
 
 #: per-session event-queue bound.  A client that never drains its
 #: progress stream must not grow server memory without limit; beyond
@@ -66,12 +75,18 @@ class Session:
         progress_events: emit per-round frontier/hypervolume deltas
             (costs one frontier recomputation per round — cheap, but
             off-switchable for throughput benchmarking).
+        deadline_s: per-round evaluation deadline.  A round whose
+            attributed evaluation time exceeds this fails the session
+            with the stable ``E_TIMEOUT`` error code (the evaluated
+            history up to that round is kept as a partial result).
+            None — the default — disables the deadline.
     """
 
     def __init__(self, sid: str, design: str, advisor: FifoAdvisor,
                  optimizer: str = "grouped_sa", budget: int = 300,
                  seed: int = 0, opt_kwargs: Optional[dict] = None,
-                 lane: int = 0, progress_events: bool = True):
+                 lane: int = 0, progress_events: bool = True,
+                 deadline_s: Optional[float] = None):
         if optimizer not in OPTIMIZERS:
             raise KeyError(
                 f"unknown optimizer {optimizer!r}; registered: "
@@ -90,9 +105,17 @@ class Session:
         self.state = RUNNING
         self.rounds = 0
         self.eval_s = 0.0
+        self.deadline_s = None if deadline_s is None else float(deadline_s)
+        self.error_code: Optional[str] = None
+        self.error: Optional[str] = None
         self.opened_at = time.perf_counter()
+        self.last_event_at = self.opened_at   # heartbeat for liveness
         self.events: Deque[dict] = deque(maxlen=MAX_QUEUED_EVENTS)
+        #: drained events are retained here (same bound) so a
+        #: reconnecting client can replay its exact stream suffix
+        self.event_log: Deque[dict] = deque(maxlen=MAX_QUEUED_EVENTS)
         self.events_dropped = 0
+        self._next_seq = 0
         self._last_hv = 0.0
         self._last_frontier = 0
         self._result: Optional[DseResult] = None
@@ -122,6 +145,15 @@ class Session:
         self.rounds += 1
         if self.progress_events:
             self._emit_progress(int(rows.size))
+        # deadline AFTER absorbing the round: the evaluation did finish,
+        # so the history prefix stays identical to the solo run — the
+        # session just refuses to keep paying for a wedged backend
+        if (self.state == RUNNING and self.deadline_s is not None
+                and routed.eval_s > self.deadline_s):
+            self.fail("E_TIMEOUT",
+                      f"evaluation round {self.rounds} took "
+                      f"{routed.eval_s:.3f}s > deadline "
+                      f"{self.deadline_s:g}s")
 
     def cancel(self) -> None:
         """Stop the session now; evaluated history becomes the result."""
@@ -129,6 +161,16 @@ class Session:
             return
         self.opt.close()
         self._finish(CANCELLED)
+
+    def fail(self, code: str, message: str) -> None:
+        """Fail the session with a stable error code; the evaluated
+        history up to the failure is kept as a partial result."""
+        if self.state != RUNNING:
+            return
+        self.opt.close()
+        self.error_code = code
+        self.error = message
+        self._finish(FAILED)
 
     # ---------------------------------------------------------- results
     @property
@@ -153,20 +195,28 @@ class Session:
     def _finish(self, state: str) -> None:
         self.state = state
         self._result = self._make_result()
-        self._queue_event({
+        event = {
             "event": state, "session": self.id,
             "n_evals": int(self.ctx.n_evals),
             "rounds": self.rounds,
             "frontier_size": int(
                 self._result.frontier_points.shape[0]),
             "hypervolume": float(self._result.hypervolume()),
-        })
+        }
+        if state == FAILED:
+            event["code"] = self.error_code
+            event["error"] = self.error
+        self._queue_event(event)
 
     # ----------------------------------------------------------- events
     def _queue_event(self, event: dict) -> None:
         if len(self.events) == MAX_QUEUED_EVENTS:
             self.events_dropped += 1     # deque(maxlen) evicts the oldest
+        event = dict(event, seq=self._next_seq)
+        self._next_seq += 1
+        self.last_event_at = time.perf_counter()
         self.events.append(event)
+        self.event_log.append(event)
 
     def _hypervolume(self, pts: np.ndarray) -> float:
         return hypervolume_2d(pts,
@@ -198,13 +248,36 @@ class Session:
         self.events.clear()
         return out
 
+    def events_after(self, seq: int):
+        """Replay the retained event-stream suffix after ``seq`` (the
+        reconnect path: a client re-attaches with the last seq it saw
+        and receives exactly what it missed).  The undelivered queue is
+        cleared — every undelivered event is in the replayed suffix, so
+        leaving it would deliver duplicates."""
+        out = [e for e in self.event_log if e["seq"] > seq]
+        self.events.clear()
+        return out
+
+    @property
+    def replay_floor(self) -> int:
+        """Smallest seq still replayable (events before it aged out of
+        the bounded log)."""
+        return self.event_log[0]["seq"] if self.event_log else 0
+
     def status(self) -> dict:
         """JSON-ready snapshot of the session."""
-        return {
+        out = {
             "session": self.id, "design": self.design,
             "optimizer": self.optimizer, "state": self.state,
             "seed": self.seed, "budget": self.budget,
             "rounds": self.rounds, "n_evals": int(self.ctx.n_evals),
             "eval_s": round(self.eval_s, 4),
             "events_dropped": self.events_dropped,
+            "next_seq": self._next_seq,
         }
+        if self.deadline_s is not None:
+            out["deadline_s"] = self.deadline_s
+        if self.error_code is not None:
+            out["code"] = self.error_code
+            out["error"] = self.error
+        return out

@@ -15,12 +15,27 @@ server answers its first request in milliseconds:
 * the full :class:`~repro.core.backends.ConfigCache` contents in
   insertion order.
 
-Format: one ``<design>.snap.npz`` per design (named numpy arrays plus an
-embedded JSON ``meta`` record) under a ``MANIFEST.json`` carrying the
-snapshot version, the registry's :class:`~repro.core.config.EvalConfig`,
-and a SHA-256 per design file.  Loads verify the version and every
-checksum before touching a byte of array data; any mismatch raises
-:class:`SnapshotError` — a torn or tampered snapshot degrades to a cold
+Format: one ``<design>.<sha12>.snap.npz`` per design (named numpy arrays
+plus an embedded JSON ``meta`` record) under a ``MANIFEST.json`` carrying
+the snapshot version, the registry's
+:class:`~repro.core.config.EvalConfig`, and a SHA-256 per design file.
+
+Crash consistency: every file is written to a temp name and published
+with ``os.replace`` (after ``fsync``), member files are *content-
+addressed* (their name embeds their hash, so a re-save never overwrites
+a file the previous manifest still references), and the manifest is
+replaced last — a crash at ANY point mid-save leaves the previous
+snapshot fully loadable.  Unreferenced member files are garbage-
+collected only after the new manifest is durably in place.
+
+Loads verify the manifest version and each member's checksum before
+deserializing it.  A member that fails (missing file, checksum mismatch,
+torn write) is *quarantined* by default: the healthy designs restore
+warm and the quarantined ones simply re-trace on first use, with the
+report attached as ``registry.restore_report``.  ``strict=True``
+restores the old all-or-nothing behaviour (any mismatch raises
+:class:`SnapshotError`); manifest-level problems (unreadable, wrong
+version, config mismatch) always raise — a snapshot degrades to a cold
 start, never to silently wrong state.
 
 Restored advisors are *bit-identical* to freshly traced ones in every
@@ -39,8 +54,10 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import io
 import json
 import os
+import tempfile
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -49,6 +66,7 @@ from repro.core.advisor import Baseline, FifoAdvisor
 from repro.core.condense import CondensedGraph
 from repro.core.config import EvalConfig
 from repro.core.deadlock.certify import CertificationResult
+from repro.core.faults import FaultPlan, InjectedFault, resolve_plan
 from repro.core.service.registry import DesignRegistry
 from repro.core.simgraph import SimGraph
 from repro.core.tracer import TaskTrace, Trace
@@ -192,31 +210,101 @@ def _pack_baseline(b: Baseline, prefix: str, arrays: dict) -> dict:
             "deadlocked": bool(b.deadlocked)}
 
 
-def save_snapshot(registry: DesignRegistry, directory: str) -> dict:
+def _atomic_write(directory: str, fname: str, data: bytes) -> str:
+    """Publish ``data`` at ``directory/fname`` via tmp + fsync +
+    ``os.replace`` (the checkpoint pattern from ``campaign/state.py``):
+    readers only ever see the old file or the complete new one."""
+    path = os.path.join(directory, fname)
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    return path
+
+
+def save_snapshot(registry: DesignRegistry, directory: str,
+                  faults: Optional["FaultPlan"] = None) -> dict:
     """Write a warm-restart snapshot of every registered design.
 
     Returns the manifest dict that was written to ``MANIFEST.json``.
-    Files are written before the manifest, so a crash mid-save leaves no
-    manifest referencing missing data; re-saving overwrites in place.
+    Member files are content-addressed (``<name>.<sha12>.snap.npz``) and
+    every write is atomic, with the manifest replaced last — so a crash
+    anywhere mid-save leaves the previous snapshot fully loadable.
+    Member files no manifest references any more are garbage-collected
+    after the new manifest is in place.
+
+    ``faults`` (chaos testing) may schedule ``crash_save`` — abort with
+    :class:`~repro.core.faults.InjectedFault` before writing member
+    ``at`` (``at == n_designs`` aborts just before the manifest) — and
+    ``corrupt_snapshot`` — flip byte ``value`` of member ``at`` *after*
+    its checksum was recorded, i.e. a torn write the loader must catch.
     """
+    if faults is None:
+        faults = resolve_plan(registry.config)
     os.makedirs(directory, exist_ok=True)
     manifest = {"version": SNAPSHOT_VERSION,
                 "config": registry.config.to_dict(),
                 "designs": {}, "skipped": sorted(registry.custom_names)}
-    for name in registry.names():
-        if name in registry.custom_names:
-            continue
+    saved = [n for n in registry.names()
+             if n not in registry.custom_names]
+    for i, name in enumerate(saved):
+        if faults is not None and faults.take(
+                "crash_save", at=i, targets=(name,)) is not None:
+            raise InjectedFault(
+                f"injected crash before writing snapshot member {i} "
+                f"({name})")
         arrays, meta = _pack_advisor(registry[name])
         blob, meta["arrays"] = _pack_blob(arrays)
-        fname = f"{name}.snap.npz"
-        path = os.path.join(directory, fname)
-        with open(path, "wb") as f:
-            np.savez(f, blob=blob, meta=np.frombuffer(
-                json.dumps(meta).encode("utf-8"), dtype=np.uint8))
-        manifest["designs"][name] = {"file": fname, "sha256": _sha256(path)}
-    with open(os.path.join(directory, MANIFEST), "w") as f:
-        json.dump(manifest, f, indent=1, sort_keys=True)
+        buf = io.BytesIO()
+        np.savez(buf, blob=blob, meta=np.frombuffer(
+            json.dumps(meta).encode("utf-8"), dtype=np.uint8))
+        data = buf.getvalue()
+        digest = hashlib.sha256(data).hexdigest()
+        fname = f"{name}.{digest[:12]}.snap.npz"
+        path = _atomic_write(directory, fname, data)
+        manifest["designs"][name] = {"file": fname, "sha256": digest}
+        if faults is not None:
+            f = faults.take("corrupt_snapshot", at=i, targets=(name,))
+            if f is not None:
+                _flip_byte(path, int(f.value))
+    if faults is not None and faults.take(
+            "crash_save", at=len(saved)) is not None:
+        raise InjectedFault(
+            "injected crash before publishing the snapshot manifest")
+    _atomic_write(directory, MANIFEST, json.dumps(
+        manifest, indent=1, sort_keys=True).encode("utf-8"))
+    _collect_garbage(directory, manifest)
     return manifest
+
+
+def _flip_byte(path: str, offset: int) -> None:
+    """Corrupt one byte in place (the ``corrupt_snapshot`` fault)."""
+    size = os.path.getsize(path)
+    offset = offset % max(size, 1)
+    with open(path, "r+b") as f:
+        f.seek(offset)
+        b = f.read(1)
+        f.seek(offset)
+        f.write(bytes([b[0] ^ 0xFF]))
+
+
+def _collect_garbage(directory: str, manifest: dict) -> None:
+    """Remove member files the freshly published manifest does not
+    reference (previous generations, aborted saves)."""
+    live = {e["file"] for e in manifest.get("designs", {}).values()}
+    for fname in os.listdir(directory):
+        if fname.endswith(".snap.npz") and fname not in live:
+            try:
+                os.unlink(os.path.join(directory, fname))
+            except OSError:  # pragma: no cover - raced with another save
+                pass
 
 
 # ----------------------------------------------------------------- load
@@ -277,15 +365,53 @@ def _unpack_advisor(name: str, z, meta: dict) -> FifoAdvisor:
                     z["cache_bram"], z["cache_dead"]))
 
 
+def _verify_member(directory: str, name: str, entry: dict):
+    """Checksum-verify and deserialize one snapshot member; returns the
+    reason string when the member is damaged (the quarantine path)."""
+    path = os.path.join(directory, entry["file"])
+    if not os.path.exists(path):
+        return None, f"snapshot file missing: {path}"
+    digest = _sha256(path)
+    if digest != entry["sha256"]:
+        return None, (
+            f"checksum mismatch for {entry['file']}: manifest "
+            f"{entry['sha256'][:12]}..., file {digest[:12]}...")
+    try:
+        with np.load(path) as npz:
+            meta = json.loads(bytes(npz["meta"]).decode("utf-8"))
+            if meta.get("version") != SNAPSHOT_VERSION:
+                return None, (
+                    f"design {name}: snapshot version "
+                    f"{meta.get('version')!r} != {SNAPSHOT_VERSION}")
+            z = _BlobReader(npz["blob"], meta["arrays"])
+        return _unpack_advisor(name, z, meta), None
+    except Exception as e:   # a checksum-clean file that still fails to
+        # deserialize means writer/reader drift — quarantine, don't die
+        return None, f"design {name}: failed to deserialize: {e}"
+
+
 def load_snapshot(directory: str,
-                  registry: Optional[DesignRegistry] = None
-                  ) -> DesignRegistry:
+                  registry: Optional[DesignRegistry] = None,
+                  strict: bool = False) -> DesignRegistry:
     """Restore a :class:`DesignRegistry` from a snapshot directory.
 
-    Verifies the manifest version and every per-file SHA-256 *before*
-    deserializing any array data.  When ``registry`` is given, restored
-    advisors are adopted into it (its config must match the snapshot's);
-    otherwise a fresh registry is built from the snapshot's config.
+    Verifies the manifest version, then checksum-verifies and restores
+    each member.  A damaged member (missing file, checksum mismatch,
+    torn write, deserialization failure) is *quarantined*: the healthy
+    designs restore warm and the damaged ones are skipped — they simply
+    re-trace on first use.  The outcome is attached to the returned
+    registry as ``registry.restore_report``::
+
+        {"restored": [names...], "quarantined": {name: reason, ...}}
+
+    ``strict=True`` turns any damaged member into a
+    :class:`SnapshotError` instead (the pre-quarantine behaviour).
+    Manifest-level problems — unreadable manifest, version mismatch,
+    config mismatch with a caller-supplied ``registry`` — always raise.
+
+    When ``registry`` is given, restored advisors are adopted into it
+    (its config must match the snapshot's); otherwise a fresh registry
+    is built from the snapshot's config.
     """
     mpath = os.path.join(directory, MANIFEST)
     try:
@@ -303,23 +429,15 @@ def load_snapshot(directory: str,
     elif registry.config != config:
         raise SnapshotError(
             f"snapshot config {config} != registry config {registry.config}")
-    entries = manifest.get("designs", {})
-    for name, entry in entries.items():
-        path = os.path.join(directory, entry["file"])
-        if not os.path.exists(path):
-            raise SnapshotError(f"snapshot file missing: {path}")
-        digest = _sha256(path)
-        if digest != entry["sha256"]:
-            raise SnapshotError(
-                f"checksum mismatch for {entry['file']}: manifest "
-                f"{entry['sha256'][:12]}..., file {digest[:12]}...")
-    for name, entry in entries.items():
-        with np.load(os.path.join(directory, entry["file"])) as npz:
-            meta = json.loads(bytes(npz["meta"]).decode("utf-8"))
-            if meta.get("version") != SNAPSHOT_VERSION:
-                raise SnapshotError(
-                    f"design {name}: snapshot version "
-                    f"{meta.get('version')!r} != {SNAPSHOT_VERSION}")
-            z = _BlobReader(npz["blob"], meta["arrays"])
-        registry.adopt(name, _unpack_advisor(name, z, meta))
+    report = {"restored": [], "quarantined": {}}
+    for name, entry in manifest.get("designs", {}).items():
+        advisor, reason = _verify_member(directory, name, entry)
+        if reason is not None:
+            if strict:
+                raise SnapshotError(reason)
+            report["quarantined"][name] = reason
+            continue
+        registry.adopt(name, advisor)
+        report["restored"].append(name)
+    registry.restore_report = report
     return registry

@@ -26,6 +26,16 @@ contract (:mod:`repro.core.bounds`) —
   certified``) and seeded certification is probe-free (the shortcut
   probe plus the start check, nothing else).
 
+``--mode chaos`` swaps it again: every design is evaluated through a
+2-lane :class:`~repro.core.campaign.pool.WorkerPool` running a seeded
+:class:`~repro.core.faults.FaultPlan` that kills every lane mid-round
+(crash or hang, seed-chosen), and the pooled results must be
+bit-identical to the fault-free inline reference, with every scheduled
+fault fired, exactly one respawn per lane death, and no worker process
+outliving the pool.  Needs the ``fork`` start method (generated designs
+ride to workers via copy-on-write); exits 2 otherwise so CI cannot
+green-light a no-op chaos run.
+
   PYTHONPATH=src python -m repro.launch.fuzz --seeds 0:200 --quick
   PYTHONPATH=src python -m repro.launch.fuzz --seeds 0:200 --quick \\
       --mode bounds --corpus tests/fuzz_corpus
@@ -59,9 +69,9 @@ from repro.designs.generate import (DesignSpec, GeneratedDesign,
                                     load_corpus_specs, shrink_spec,
                                     spec_from_seed)
 
-__all__ = ["Mismatch", "bounds_check", "bounds_one", "depth_configs",
-           "differential_check", "fuzz_one", "main", "parse_args",
-           "parse_seed_range", "resolve_backends"]
+__all__ = ["Mismatch", "bounds_check", "bounds_one", "chaos_check",
+           "chaos_one", "depth_configs", "differential_check", "fuzz_one",
+           "main", "parse_args", "parse_seed_range", "resolve_backends"]
 
 
 @dataclasses.dataclass
@@ -253,6 +263,116 @@ def bounds_one(spec: DesignSpec, backends: Sequence[str] = (),
     return bounds_check(build_design(spec))
 
 
+def chaos_check(gen: GeneratedDesign, n_random: int = 2,
+                rng: Optional[np.random.Generator] = None
+                ) -> Tuple[List[Mismatch], int]:
+    """The ``chaos`` differential property for one generated design.
+
+    Evaluates the design's depth matrix twice — inline (the fault-free
+    reference) and through a :class:`~repro.core.campaign.pool.WorkerPool`
+    running a seeded :class:`~repro.core.faults.FaultPlan` with an
+    aggressive recv deadline — and checks three things:
+
+    * **identity**: pooled ``(latency, bram, deadlock)`` bit-identical
+      to the inline reference despite every lane dying mid-round,
+    * **coverage**: every scheduled fault fired (worker faults are
+      pinned to each lane's *first* job so the schedule is reachable by
+      construction — an unfired fault means the injection plumbing
+      broke, not that the dice fell badly),
+    * **recovery**: exactly one respawn per lane death, and no worker
+      process outlives ``pool.close()``.
+
+    Returns ``(mismatches, n_rows_checked)``.  Requires the ``fork``
+    start method (the caller gates on it): generated designs have no
+    ``make_design`` name, so they can only reach workers through fork's
+    copy-on-write pages.
+    """
+    import multiprocessing as mp
+
+    from repro.core.campaign.pool import WorkerPool
+    from repro.core.faults import Fault, FaultPlan
+
+    spec = gen.spec
+    mism: List[Mismatch] = []
+    design = gen.design
+    trace = collect_trace(design)
+    g = build_simgraph(design, trace)
+    rng = rng or np.random.default_rng(spec.seed)
+    matrix = depth_configs(g, rng, n_random=n_random)
+
+    ref = BatchedEvaluator(g, EvalConfig(backend="numpy", max_iters=64))
+    want_lat, want_bram, want_dead = ref.evaluate(matrix)
+
+    # round-robin the rows over up to 4 jobs / 2 lanes; degenerate
+    # designs whose depth matrix collapses to one row get one lane
+    n_jobs = min(4, matrix.shape[0])
+    n_lanes = min(2, n_jobs)
+    name = f"chaos_seed{spec.seed}"
+    chunks = [c for c in np.array_split(matrix, n_jobs, axis=0)
+              if c.shape[0]]
+    jobs = [(j % n_lanes, name, chunk, None)
+            for j, chunk in enumerate(chunks)]
+
+    # one lethal fault per lane at that lane's first job (guaranteed to
+    # fire: every lane receives at least one job), plus a dispatch delay
+    # on a seed-chosen job index (wildcard lane, so always reachable)
+    lethal = ("crash_worker", "hang_worker")
+    faults = [Fault(lethal[int(rng.integers(2))], at=0, lane=w, value=1.0)
+              for w in range(n_lanes)]
+    faults.append(Fault("delay_dispatch",
+                        at=int(rng.integers(len(jobs))), value=0.005))
+    plan = FaultPlan(faults)
+
+    pool = WorkerPool(n_lanes, max_iters=64, graphs={name: g},
+                      faults=plan, recv_timeout_s=0.3)
+    try:
+        results = pool.run_jobs(jobs)
+    finally:
+        pool.close()
+
+    got_lat = np.concatenate([r[0] for r in results])
+    got_bram = np.concatenate([r[1] for r in results])
+    got_dead = np.concatenate([r[2] for r in results])
+    if not (np.array_equal(got_lat, want_lat)
+            and np.array_equal(got_bram, want_bram)
+            and np.array_equal(got_dead, want_dead)):
+        bad = np.flatnonzero((got_lat != want_lat)
+                             | (got_dead != want_dead))
+        i = int(bad[0]) if bad.size else 0
+        mism.append(Mismatch(
+            spec, "chaos-identity", "pool", matrix[i].tolist(),
+            f"pooled row {i} (lat={int(got_lat[i])}, "
+            f"dead={bool(got_dead[i])}) != inline reference "
+            f"(lat={int(want_lat[i])}, dead={bool(want_dead[i])}) "
+            f"under plan {plan.to_json()}"))
+    if not plan.all_fired:
+        unfired = [f.to_dict() for i, f in enumerate(plan.faults)
+                   if not plan._fired[i]]
+        mism.append(Mismatch(
+            spec, "chaos-coverage", "pool", None,
+            f"{len(unfired)} scheduled fault(s) never fired: {unfired}"))
+    if pool.stats["respawns"] != n_lanes:
+        mism.append(Mismatch(
+            spec, "chaos-recovery", "pool", None,
+            f"expected {n_lanes} respawns (one per lane death), pool "
+            f"reports {pool.stats}"))
+    strays = mp.active_children()
+    if strays:  # pragma: no cover - the defect this mode exists to catch
+        for p in strays:
+            p.kill()
+        mism.append(Mismatch(
+            spec, "chaos-zombies", "pool", None,
+            f"{len(strays)} worker process(es) outlived pool.close()"))
+    return mism, int(matrix.shape[0])
+
+
+def chaos_one(spec: DesignSpec, backends: Sequence[str] = (),
+              n_random: int = 2) -> Tuple[List[Mismatch], int]:
+    """``fuzz_one``-shaped wrapper so ``--mode chaos`` reuses the
+    corpus-replay / shrink plumbing (``backends`` unused)."""
+    return chaos_check(build_design(spec), n_random=n_random)
+
+
 def _shrunk(spec: DesignSpec, backends: Sequence[str], n_random: int,
             kind: str, backend: str, check=None) -> DesignSpec:
     """Shrink ``spec`` while the ORIGINAL failure mode still reproduces.
@@ -290,10 +410,14 @@ def parse_args(argv=None):
                     "every evaluation backend.")
     p.add_argument("--seeds", default="0:50", metavar="LO:HI",
                    help="seed range (half-open, non-empty), e.g. 0:200")
-    p.add_argument("--mode", choices=("diff", "bounds"), default="diff",
+    p.add_argument("--mode", choices=("diff", "bounds", "chaos"),
+                   default="diff",
                    help="diff: oracle vs backends (default); bounds: "
                         "analytical channel-bounds contract (bracket, "
-                        "seeded-certification identity, affine exactness)")
+                        "seeded-certification identity, affine exactness); "
+                        "chaos: worker-pool evaluation under injected "
+                        "lane crashes/hangs must stay bit-identical to "
+                        "the fault-free inline reference")
     p.add_argument("--quick", action="store_true",
                    help="small designs + the CI-bounded default backend "
                         "set (worklist, condensed, and pallas-condensed "
@@ -358,7 +482,16 @@ def main(argv=None) -> int:
             backends.append("pallas-condensed")
     else:
         backends = resolve_backends("auto")
-    check = bounds_one if args.mode == "bounds" else fuzz_one
+    check = {"bounds": bounds_one, "chaos": chaos_one}.get(
+        args.mode, fuzz_one)
+    if args.mode == "chaos":
+        from repro.core.campaign.pool import pick_start_method
+        if pick_start_method() != "fork":
+            print("error: --mode chaos needs the fork start method "
+                  "(generated designs reach workers via copy-on-write; "
+                  "jax is already imported or the platform lacks fork)",
+                  file=sys.stderr)
+            return 2
 
     t0 = time.perf_counter()
     all_mism: List[Mismatch] = []
@@ -412,6 +545,11 @@ def main(argv=None) -> int:
         print(f"\n{n_designs} designs, {n_rows} channels checked against "
               f"the analytical bounds contract (bracket + seeded identity "
               f"+ affine exactness), {wall:.1f}s wall")
+    elif args.mode == "chaos":
+        print(f"\n{n_designs} designs, {n_rows} rows pooled under "
+              f"injected lane deaths (crash/hang per lane + dispatch "
+              f"delay), all bit-identical to the fault-free inline "
+              f"reference, {wall:.1f}s wall")
     else:
         rate = n_rows * (1 + len(backends)) / max(wall, 1e-9)
         print(f"\n{n_designs} designs, {n_rows} configs x "

@@ -60,12 +60,18 @@ class AdvisoryServer:
     """
 
     def __init__(self, service=None, idle_sleep_s: float = 0.02,
-                 snapshot_dir: Optional[str] = None, **service_kwargs):
+                 snapshot_dir: Optional[str] = None,
+                 snapshot_every_s: Optional[float] = None,
+                 **service_kwargs):
         from repro.core.service import AdvisoryService, ProtocolHandler
         self.service = service or AdvisoryService(**service_kwargs)
         self.handler = ProtocolHandler(self.service,
                                        snapshot_dir=snapshot_dir)
         self.idle_sleep_s = float(idle_sleep_s)
+        self.snapshot_dir = snapshot_dir
+        #: auto-snapshot cadence (needs snapshot_dir); None disables
+        self.snapshot_every_s = snapshot_every_s
+        self._last_snapshot = 0.0
         self._owners: Dict[str, asyncio.Queue] = {}   # sid -> out queue
         self._shutdown = asyncio.Event()
         self._pump_task: Optional[asyncio.Task] = None
@@ -99,6 +105,7 @@ class AdvisoryServer:
             while not self._shutdown.is_set():
                 advanced = self.service.step()
                 self._route_events()
+                self._maybe_snapshot()
                 # yield to the loop every round; back off only when idle
                 await asyncio.sleep(0 if advanced else self.idle_sleep_s)
         except Exception as exc:   # noqa: BLE001 — terminal server fault
@@ -110,6 +117,26 @@ class AdvisoryServer:
             for q in self._owners.values():
                 q.put_nowait(dict(fault))
             self._shutdown.set()
+
+    def _maybe_snapshot(self) -> None:
+        """Periodic auto-snapshot: the crash-recovery complement of the
+        explicit ``snapshot`` op.  A failed save is reported and retried
+        next period — persistence trouble must not take down serving."""
+        if not (self.snapshot_dir and self.snapshot_every_s):
+            return
+        import time
+        now = time.perf_counter()
+        if now - self._last_snapshot < self.snapshot_every_s:
+            return
+        self._last_snapshot = now
+        if not len(self.service.registry):
+            return
+        from repro.core.service import save_snapshot
+        try:
+            save_snapshot(self.service.registry, self.snapshot_dir)
+        except Exception as exc:   # noqa: BLE001 — keep serving
+            print(f"auto-snapshot failed ({type(exc).__name__}: {exc}); "
+                  f"will retry", file=sys.stderr)
 
     def ensure_pump(self) -> None:
         if self._pump_task is None or self._pump_task.done():
@@ -146,12 +173,22 @@ class AdvisoryServer:
 
     async def _sender(self, q: asyncio.Queue, writer) -> None:
         from repro.core.service import encode_line
+        faults = getattr(self.service, "faults", None)
+        sent = 0
         while True:
             frame = await q.get()
             if frame is None:
                 break
             writer.write(encode_line(frame).encode())
             await writer.drain()
+            sent += 1
+            if faults is not None and faults.take(
+                    "drop_conn", at=sent) is not None:
+                # simulated network drop mid-stream: hard-close the
+                # transport; the client reconnects and replays its
+                # event suffix via the 'attach' op
+                writer.close()
+                return
 
     async def handle_connection(self, reader, writer) -> None:
         """One JSON-lines client: requests in, responses + events out."""
@@ -179,9 +216,13 @@ class AdvisoryServer:
                     resp = await self._run_cooperative(msg)
                 else:
                     resp = self.handler.handle(msg)
-                if msg.get("op") == "open" and resp.get("ok"):
+                if msg.get("op") in ("open", "attach") and resp.get("ok"):
+                    # attach re-homes the session's live event stream to
+                    # the reconnected client (the replayed suffix rides
+                    # in the attach response itself)
                     self._owners[resp["session"]] = q
-                    opened.append(resp["session"])
+                    if resp["session"] not in opened:
+                        opened.append(resp["session"])
                 q.put_nowait(resp)
                 # synchronous ops ("run") may have produced events —
                 # deliver them now, not at the pump's next tick
@@ -268,6 +309,13 @@ def parse_args(argv=None):
                    help="warm-restart snapshot directory: loaded at "
                         "startup when it holds a valid snapshot, and "
                         "the default target of the 'snapshot' op")
+    p.add_argument("--snapshot-every", type=float, default=None,
+                   metavar="S",
+                   help="auto-snapshot the registry to --snapshot-dir "
+                        "every S seconds (crash recovery; default off)")
+    p.add_argument("--fault-plan", default=None, metavar="JSON|@FILE",
+                   help="install a FaultPlan for chaos testing (inline "
+                        "JSON or @path; docs/robustness.md)")
     p.add_argument("--max-sessions", type=int, default=None, metavar="N",
                    help="admission cap on concurrently running sessions "
                         "(overload replies carry E_OVERLOADED + a "
@@ -290,11 +338,18 @@ async def amain(args) -> int:
     from repro.core.service import EvalConfig, SnapshotError, load_snapshot
 
     config = EvalConfig(backend=args.backend, max_iters=args.max_iters)
+    faults = None
+    if args.fault_plan:
+        from repro.core.faults import resolve_plan
+        faults = resolve_plan(env={"REPRO_FAULTS": args.fault_plan})
+        print(f"fault plan installed: {faults!r}", file=sys.stderr)
     server = AdvisoryServer(config=config, snapshot_dir=args.snapshot_dir,
+                            snapshot_every_s=args.snapshot_every,
                             hetero=args.hetero, workers=args.workers,
                             shards=args.shards,
                             progress_events=not args.no_progress,
-                            max_sessions=args.max_sessions)
+                            max_sessions=args.max_sessions,
+                            faults=faults)
     # registry-ready timing: everything between here and the "ready"
     # line is design preparation (snapshot load or cold trace), the part
     # warm restarts compress — interpreter/jax startup is excluded so
@@ -308,6 +363,11 @@ async def amain(args) -> int:
             restored = server.service.registry.names()
             for name in restored:
                 server.service.batcher.add_design(name)
+            report = server.service.registry.restore_report or {}
+            for name, reason in report.get("quarantined", {}).items():
+                print(f"snapshot member quarantined ({reason}); "
+                      f"{name} will re-trace on first use",
+                      file=sys.stderr)
         except SnapshotError as exc:
             print(f"snapshot load failed ({exc}); cold-starting",
                   file=sys.stderr)

@@ -87,6 +87,8 @@ def test_campaign_matches_sequential_loop():
 
 
 def test_campaign_pool_matches_inline():
+    import multiprocessing as mp
+
     spec = _spec(designs=("gemm",), budget=40)
     inline = Campaign(spec).run()
     pooled = Campaign(_spec(designs=("gemm",), budget=40,
@@ -96,6 +98,8 @@ def test_campaign_pool_matches_inline():
                               inline[k].frontier_points)
         assert np.array_equal(pooled[k].result.latency,
                               inline[k].result.latency)
+    # run() closes the pool on exit; no worker may outlive it
+    assert mp.active_children() == []
 
 
 def test_checkpoint_resume_byte_identical(tmp_path):

@@ -46,12 +46,12 @@ BLOCKS = collect_blocks()
 
 
 def test_docs_have_snippets():
-    """The gate must be guarding something: all nine pages + README."""
+    """The gate must be guarding something: all ten pages + README."""
     pages = {b.values[0] for b in BLOCKS}
     assert "README.md" in pages
     for page in ("architecture", "backends", "bounds", "campaign",
                  "fuzzing", "mesh", "optimizers", "performance",
-                 "service"):
+                 "robustness", "service"):
         assert f"docs/{page}.md" in pages, f"docs/{page}.md has no "\
             "python snippets (or was deleted)"
 

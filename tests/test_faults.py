@@ -1,0 +1,301 @@
+"""Deterministic fault injection and the recovery machinery it exercises.
+
+The contract under test (``docs/robustness.md``): a
+:class:`~repro.core.faults.FaultPlan` is a seeded, replayable schedule
+of crashes/hangs/corruptions consulted at fixed injection points, and
+every recovery path it triggers — lane respawn + requeue, inline
+escalation, E_TIMEOUT deadlines, reconnect replay, snapshot
+quarantine — must leave results *bit-identical* to the fault-free run
+(or, where work is genuinely lost, fail loudly with a stable error code
+and keep the evaluated prefix).
+"""
+
+import multiprocessing as mp
+
+import numpy as np
+import pytest
+
+from repro.core import EvalConfig, FifoAdvisor
+from repro.core.campaign import Campaign, CampaignSpec
+from repro.core.campaign.pool import WorkerPool
+from repro.core.faults import (FAULT_KINDS, Fault, FaultPlan,
+                               InjectedFault, resolve_plan)
+from repro.core.service import (AdvisoryService, DesignRegistry,
+                                ProtocolHandler, SnapshotError,
+                                load_snapshot, save_snapshot)
+from repro.core.simulate import BatchedEvaluator
+from repro.designs import make_design
+
+BUDGET = 40
+
+
+# ----------------------------------------------------------- plan basics
+def test_fault_plan_json_roundtrip():
+    plan = FaultPlan([Fault("crash_worker", at=1, lane=0),
+                      Fault("hang_eval", at=2, target="gemm", value=0.5)])
+    clone = FaultPlan.from_json(plan.to_json())
+    assert clone.faults == plan.faults
+    assert clone.n_fired == 0 and len(clone) == 2
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault("segfault_everything")
+    assert set(f.kind for f in plan.faults) <= set(FAULT_KINDS)
+
+
+def test_take_is_fire_once_with_wildcards():
+    plan = FaultPlan([Fault("delay_dispatch", at=3, lane=-1, value=0.01),
+                      Fault("crash_worker", at=0, lane=1),
+                      Fault("hang_worker", at=2, lane=1, value=1.0)])
+    # lane wildcard matches any caller lane; ``at`` always matches exactly
+    assert plan.take("delay_dispatch", lane=7, at=0) is None
+    f = plan.take("delay_dispatch", lane=7, at=3)
+    assert f is not None and f.value == 0.01
+    assert plan.take("delay_dispatch", lane=7, at=3) is None  # fire-once
+    # worker payload ships only that lane's unfired worker faults
+    assert plan.worker_payload(0) == []
+    assert [d["kind"] for d in plan.worker_payload(1)] == [
+        "crash_worker", "hang_worker"]
+    # a revive consumes the smallest-``at`` worker fault for the lane,
+    # so the replacement is shipped only the remaining schedule
+    assert plan.consume_worker_fault(1).kind == "crash_worker"
+    assert [d["kind"] for d in plan.worker_payload(1)] == ["hang_worker"]
+    assert plan.consume_worker_fault(1).kind == "hang_worker"
+    assert plan.consume_worker_fault(1) is None
+    assert plan.n_fired == 3
+
+
+def test_resolve_plan_config_beats_env(tmp_path):
+    cfg_json = FaultPlan([Fault("crash_save", at=0)]).to_json()
+    env_json = FaultPlan([Fault("drop_conn", at=5)]).to_json()
+    plan = resolve_plan(EvalConfig(faults=cfg_json),
+                        env={"REPRO_FAULTS": env_json})
+    assert plan.faults[0].kind == "crash_save"
+    # env alone: inline JSON, or @path to a plan file
+    plan = resolve_plan(None, env={"REPRO_FAULTS": env_json})
+    assert plan.faults[0].kind == "drop_conn"
+    path = tmp_path / "plan.json"
+    path.write_text(env_json)
+    plan = resolve_plan(None, env={"REPRO_FAULTS": f"@{path}"})
+    assert plan.faults[0].at == 5
+    assert resolve_plan(None, env={}) is None
+
+
+# ---------------------------------------------------- pool fault tolerance
+@pytest.fixture(scope="module")
+def gemm_jobs():
+    """A gemm graph, a depth matrix, and the fault-free reference."""
+    from repro.core.simgraph import build_simgraph
+    from repro.core.tracer import collect_trace
+
+    d = make_design("gemm")
+    g = build_simgraph(d, collect_trace(d))
+    u = g.upper_bounds
+    rng = np.random.default_rng(0)
+    m = np.concatenate([
+        np.maximum(u, 2)[None, :],
+        np.full((1, g.n_fifos), 2),
+        np.maximum(2, (u * rng.uniform(0.1, 1.0, (6, g.n_fifos))
+                       ).astype(np.int64))])
+    ref = BatchedEvaluator(
+        g, EvalConfig(backend="numpy", max_iters=64)).evaluate(m)
+    return g, m, ref
+
+
+def _pool_jobs(m, n_lanes):
+    chunks = np.array_split(m, 4, axis=0)
+    return [(j % n_lanes, "gemm", c, None) for j, c in enumerate(chunks)]
+
+
+def _concat(results):
+    return tuple(np.concatenate([r[k] for r in results])
+                 for k in range(3))
+
+
+def test_pool_crash_respawn_bit_identical(gemm_jobs):
+    g, m, ref = gemm_jobs
+    plan = FaultPlan([Fault("crash_worker", at=0, lane=0),
+                      Fault("crash_worker", at=0, lane=1)])
+    with WorkerPool(2, max_iters=64, graphs={"gemm": g}, faults=plan,
+                    recv_timeout_s=5.0) as pool:
+        results = pool.run_jobs(_pool_jobs(m, 2))
+        stats = dict(pool.stats)
+    lat, bram, dead = _concat(results)
+    assert np.array_equal(lat, ref[0])
+    assert np.array_equal(bram, ref[1])
+    assert np.array_equal(dead, ref[2])
+    assert stats["respawns"] >= 2 and stats["requeued"] >= 2
+    assert plan.all_fired
+    assert mp.active_children() == []
+
+
+def test_pool_hang_detected_and_requeued(gemm_jobs):
+    g, m, ref = gemm_jobs
+    # the lane sleeps well past the recv deadline: it must be declared
+    # dead, replaced, and its job re-dispatched — never waited out
+    plan = FaultPlan([Fault("hang_worker", at=0, lane=0, value=30.0)])
+    with WorkerPool(1, max_iters=64, graphs={"gemm": g}, faults=plan,
+                    recv_timeout_s=0.3) as pool:
+        results = pool.run_jobs(_pool_jobs(m, 1))
+        stats = dict(pool.stats)
+    assert np.array_equal(_concat(results)[0], ref[0])
+    assert stats["respawns"] >= 1 and stats["requeued"] >= 1
+    assert mp.active_children() == []
+
+
+def test_pool_inline_escalation_after_max_retries(gemm_jobs):
+    g, m, ref = gemm_jobs
+    # every incarnation of lane 0 dies on its first job: after
+    # max_retries lanes have burned, the parent runs the job inline
+    plan = FaultPlan([Fault("crash_worker", at=0, lane=0)] * 3)
+    with WorkerPool(1, max_iters=64, graphs={"gemm": g}, faults=plan,
+                    recv_timeout_s=5.0, max_retries=1) as pool:
+        results = pool.run_jobs(_pool_jobs(m, 1))
+        stats = dict(pool.stats)
+    lat, bram, dead = _concat(results)
+    assert np.array_equal(lat, ref[0])
+    assert np.array_equal(dead, ref[2])
+    assert stats["escalated"] >= 1
+    assert mp.active_children() == []
+
+
+def test_pool_close_escalates_on_wedged_worker(gemm_jobs):
+    g, m, _ = gemm_jobs
+    plan = FaultPlan([Fault("hang_worker", at=0, lane=0, value=60.0)])
+    pool = WorkerPool(1, max_iters=64, graphs={"gemm": g}, faults=plan,
+                      recv_timeout_s=30.0)
+    pool.join_timeout_s = 0.2
+    pool.submit(_pool_jobs(m, 1))   # lane is now asleep mid-"evaluation"
+    pool.close()                    # join times out -> terminate -> kill
+    assert mp.active_children() == []
+
+
+def test_campaign_frontiers_identical_under_crashes():
+    # two tasks, so one lands on lane 1 — the pool worker (lane 0 is
+    # always the parent process itself)
+    spec = dict(designs=("gemm",),
+                optimizers=("grouped_sa", "grouped_random"),
+                budget=BUDGET, seed=0)
+    inline = Campaign(CampaignSpec(workers=0, **spec)).run()
+    plan_json = FaultPlan([Fault("crash_worker", at=0)]).to_json()
+    camp = Campaign(CampaignSpec(workers=1,
+                                 eval=EvalConfig(faults=plan_json),
+                                 **spec))
+    chaotic = camp.run()
+    for k in inline.keys():
+        assert np.array_equal(chaotic[k].frontier_points,
+                              inline[k].frontier_points)
+        assert np.array_equal(chaotic[k].result.latency,
+                              inline[k].result.latency)
+    assert camp.pool_stats["respawns"] >= 1
+    assert camp.faults.all_fired
+    assert mp.active_children() == []
+
+
+# ------------------------------------------------------ service deadlines
+def test_deadline_times_out_victim_and_isolates_peer():
+    plan = FaultPlan([Fault("hang_eval", at=1, target="gemm", value=0.2)])
+    with AdvisoryService(faults=plan) as svc:
+        victim = svc.open_session("gemm", optimizer="grouped_sa",
+                                  budget=BUDGET, seed=0, deadline_s=0.05)
+        peer = svc.open_session("FeedForward", optimizer="grouped_sa",
+                                budget=BUDGET, seed=1)
+        svc.run_until_idle()
+        assert victim.state == "failed"
+        assert victim.error_code == "E_TIMEOUT"
+        # the hung round itself was absorbed before the deadline fired,
+        # so the partial result is a clean prefix, not a torn round
+        assert victim.rounds == 2
+        assert victim.dse_result().frontier_points.shape[0] >= 1
+        assert peer.state == "done"
+        solo = FifoAdvisor(make_design("FeedForward")).run(
+            "grouped_sa", budget=BUDGET, seed=1)
+        assert np.array_equal(peer.dse_result().frontier_points,
+                              solo.frontier_points)
+    assert plan.all_fired
+
+
+def test_timeout_surfaces_in_events_and_status():
+    plan = FaultPlan([Fault("hang_eval", at=0, target="gemm", value=0.2)])
+    with AdvisoryService(faults=plan) as svc:
+        sess = svc.open_session("gemm", budget=BUDGET, seed=0,
+                                deadline_s=0.05)
+        svc.run_until_idle()
+        events = sess.drain_events()
+        assert events[-1]["event"] == "failed"
+        assert events[-1]["code"] == "E_TIMEOUT"
+        assert sess.status()["code"] == "E_TIMEOUT"
+
+
+# ---------------------------------------------------- reconnect + replay
+def test_attach_replays_exact_event_suffix():
+    with AdvisoryService() as svc:
+        handler = ProtocolHandler(svc)
+        sess = svc.open_session("gemm", budget=BUDGET, seed=0,
+                                request_id="open-77")
+        svc.run_until_idle(max_rounds=2)
+        seen = sess.drain_events()           # delivered, then "conn dies"
+        last_seq = seen[-1]["seq"] if seen else -1
+        # idempotent open: re-sending the same request id returns the
+        # session it created, never a duplicate
+        again = svc.open_session("gemm", budget=BUDGET, seed=0,
+                                 request_id="open-77")
+        assert again is sess
+        svc.run_until_idle()
+        out = handler.handle({"op": "attach", "session": sess.id,
+                              "after_seq": last_seq})
+        assert out["ok"] and out["replay_complete"]
+        stream = seen + out["events"]
+        # the stitched stream is the exact full history: contiguous
+        # seqs from 0, no duplicates, terminal event last
+        assert [e["seq"] for e in stream] == list(range(len(stream)))
+        assert stream[-1]["event"] == "done"
+        # nothing left queued: the replay consumed the undelivered tail
+        assert sess.drain_events() == []
+
+
+# ------------------------------------------------- snapshot crash + torn
+def _warm_registry(designs, budget=30):
+    reg = DesignRegistry()
+    runs = {}
+    for name in designs:
+        runs[name] = reg.register(name).run("grouped_sa", budget=budget,
+                                            seed=0)
+    return reg, runs
+
+
+def test_crash_mid_save_preserves_previous_snapshot(tmp_path):
+    reg, runs = _warm_registry(["gemm"])
+    save_snapshot(reg, str(tmp_path))
+    # a later save dies before writing any member: the published
+    # snapshot must still strict-load, bit-identical
+    for at in (0, 1):   # before member 0 / before the manifest replace
+        with pytest.raises(InjectedFault):
+            save_snapshot(reg, str(tmp_path),
+                          faults=FaultPlan([Fault("crash_save", at=at)]))
+    reg2 = load_snapshot(str(tmp_path), registry=DesignRegistry(),
+                         strict=True)
+    assert reg2.names() == ["gemm"]
+    dse = reg2["gemm"].run("grouped_sa", budget=30, seed=0)
+    assert dse.result.n_evals == 0          # pure restored-cache hits
+    assert np.array_equal(dse.frontier_points,
+                          runs["gemm"].frontier_points)
+
+
+def test_torn_write_quarantines_only_the_damaged_design(tmp_path):
+    reg, runs = _warm_registry(["FeedForward", "gemm"])
+    victim = "FeedForward"
+    idx = [n for n in reg.names()].index(victim)
+    save_snapshot(reg, str(tmp_path), faults=FaultPlan(
+        [Fault("corrupt_snapshot", at=idx, target=victim, value=100)]))
+    with pytest.raises(SnapshotError, match="checksum"):
+        load_snapshot(str(tmp_path), registry=DesignRegistry(),
+                      strict=True)
+    reg2 = load_snapshot(str(tmp_path), registry=DesignRegistry())
+    rep = reg2.restore_report
+    assert sorted(rep["quarantined"]) == [victim]
+    assert "checksum" in rep["quarantined"][victim]
+    assert rep["restored"] == ["gemm"]
+    # the healthy design restored warm: same search, zero simulations
+    dse = reg2["gemm"].run("grouped_sa", budget=30, seed=0)
+    assert dse.result.n_evals == 0
+    assert np.array_equal(dse.frontier_points,
+                          runs["gemm"].frontier_points)

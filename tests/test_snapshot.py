@@ -2,11 +2,16 @@
 
 The format contract (core/service/snapshot.py): a restored advisor is
 indistinguishable from the one that was saved in every observable —
-frontiers, histories, baselines, certificates, cache contents — and a
-snapshot that fails *any* integrity check (checksum, version, config)
-raises SnapshotError instead of loading approximately.
+frontiers, histories, baselines, certificates, cache contents.  A
+member that fails an integrity check (checksum, missing file) is
+quarantined — healthy designs restore warm, the damaged one re-traces
+on first use — while ``strict=True`` and manifest-level problems
+(version, config, unreadable manifest) raise SnapshotError instead of
+loading approximately.  Crash-consistency and fault-injection coverage
+lives in ``tests/test_faults.py``.
 """
 
+import glob
 import json
 import os
 import time
@@ -111,15 +116,32 @@ def test_snapshot_skips_custom_designs(tmp_path):
 
 
 # ------------------------------------------------------------- integrity
-def test_tampered_snapshot_is_rejected(tmp_path):
+def _member(tmp_path, name=DESIGN):
+    """The content-addressed member file for one design."""
+    hits = glob.glob(str(tmp_path / f"{name}.*.snap.npz"))
+    assert len(hits) == 1, hits
+    return hits[0]
+
+
+def test_tampered_snapshot_is_quarantined_and_strict_rejects(tmp_path):
     reg, _ = warm_registry()
     save_snapshot(reg, str(tmp_path))
-    victim = tmp_path / f"{DESIGN}.snap.npz"
-    blob = bytearray(victim.read_bytes())
-    blob[len(blob) // 2] ^= 0xFF
-    victim.write_bytes(bytes(blob))
+    victim = _member(tmp_path)
+    with open(victim, "r+b") as fh:
+        blob = bytearray(fh.read())
+        blob[len(blob) // 2] ^= 0xFF
+        fh.seek(0)
+        fh.write(bytes(blob))
+    # strict mode refuses a tampered member outright
     with pytest.raises(SnapshotError, match="checksum"):
-        load_snapshot(str(tmp_path))
+        load_snapshot(str(tmp_path), strict=True)
+    # default mode quarantines the damaged design instead of failing
+    reg2 = load_snapshot(str(tmp_path))
+    rep = reg2.restore_report
+    assert sorted(rep["quarantined"]) == [DESIGN]
+    assert "checksum" in rep["quarantined"][DESIGN]
+    assert rep["restored"] == []
+    assert reg2.names() == []
 
 
 def test_version_mismatch_is_rejected(tmp_path):
@@ -136,9 +158,12 @@ def test_version_mismatch_is_rejected(tmp_path):
 def test_missing_file_and_unreadable_manifest_rejected(tmp_path):
     reg, _ = warm_registry()
     save_snapshot(reg, str(tmp_path))
-    os.remove(tmp_path / f"{DESIGN}.snap.npz")
+    os.remove(_member(tmp_path))
     with pytest.raises(SnapshotError, match="missing"):
-        load_snapshot(str(tmp_path))
+        load_snapshot(str(tmp_path), strict=True)
+    rep = load_snapshot(str(tmp_path)).restore_report
+    assert "missing" in rep["quarantined"][DESIGN]
+    # manifest-level problems always raise — there is nothing to salvage
     with pytest.raises(SnapshotError, match="manifest"):
         load_snapshot(str(tmp_path / "no_such_dir"))
 
