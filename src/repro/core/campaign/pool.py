@@ -260,8 +260,13 @@ class WorkerPool:
     def _recover(self, handle: Dict, w: int):
         """Lane ``w`` failed: respawn it and re-dispatch its in-flight
         jobs (inline once a job exceeds ``max_retries``)."""
-        outstanding = list(handle["per_worker"].get(w, ()))
-        handle["per_worker"][w] = deque()
+        # clear in place, never replace: submit()'s backpressure loop
+        # holds a reference to this deque while it drains, and swapping
+        # in a fresh object would leave that loop watching a queue no
+        # _collect_one will ever shrink again
+        queue = handle["per_worker"].setdefault(w, deque())
+        outstanding = list(queue)
+        queue.clear()
         self._revive(w)
         retries = handle["retries"]
         requeue, inline = [], []
@@ -312,8 +317,10 @@ class WorkerPool:
                   "retries": {}, "n": len(jobs)}
         for j, (w, name, depths, base) in enumerate(jobs):
             self._drain_ready(handle)
-            queue = handle["per_worker"].setdefault(w, deque())
-            while len(queue) >= MAX_OUTSTANDING:
+            handle["per_worker"].setdefault(w, deque())
+            # re-read the deque each pass: _collect_one may recover a
+            # dead lane, which rewrites the lane's outstanding queue
+            while len(handle["per_worker"][w]) >= MAX_OUTSTANDING:
                 self._collect_one(handle, w)
             self._dispatch(handle, w, j)
         return handle

@@ -320,6 +320,11 @@ class AdvisoryService:
         sess = self.session(sid)
         sess.cancel()
         del self.sessions[sid]
+        # drop the idempotent-open entries that resolve to this session,
+        # or the map grows with every open a long-lived server ever saw
+        # (a re-sent open for a released session should open fresh anyway)
+        self._open_requests = {rid: s for rid, s
+                               in self._open_requests.items() if s != sid}
         return sess
 
     def result(self, sid: str) -> DseResult:

@@ -21,12 +21,18 @@ the snapshot version, the registry's
 :class:`~repro.core.config.EvalConfig`, and a SHA-256 per design file.
 
 Crash consistency: every file is written to a temp name and published
-with ``os.replace`` (after ``fsync``), member files are *content-
-addressed* (their name embeds their hash, so a re-save never overwrites
-a file the previous manifest still references), and the manifest is
-replaced last — a crash at ANY point mid-save leaves the previous
-snapshot fully loadable.  Unreferenced member files are garbage-
-collected only after the new manifest is durably in place.
+with ``os.replace`` (file fsync'd before the rename, directory fsync'd
+after it, so the renames themselves are durable in order), member files
+are *content-addressed* (their name embeds their hash, so a re-save
+never overwrites a file the previous manifest still references), and
+the manifest is replaced last — a crash at ANY point mid-save leaves
+the previous snapshot fully loadable.  Garbage collection runs only
+after the new manifest is durably in place and spares the superseded
+manifest's members too, so one concurrent reader that picked up the
+previous manifest (a warm restart racing an auto-snapshot) can finish
+its restore; older generations are reclaimed by the next save.
+Concurrent *writers* are not coordinated — point each server at its
+own snapshot directory.
 
 Loads verify the manifest version and each member's checksum before
 deserializing it.  A member that fails (missing file, checksum mismatch,
@@ -213,7 +219,12 @@ def _pack_baseline(b: Baseline, prefix: str, arrays: dict) -> dict:
 def _atomic_write(directory: str, fname: str, data: bytes) -> str:
     """Publish ``data`` at ``directory/fname`` via tmp + fsync +
     ``os.replace`` (the checkpoint pattern from ``campaign/state.py``):
-    readers only ever see the old file or the complete new one."""
+    readers only ever see the old file or the complete new one.
+
+    The directory is fsync'd after the replace so the *rename itself*
+    is durable before we return — member renames therefore hit disk
+    before the manifest rename that references them, and a power loss
+    cannot persist a manifest whose members evaporated."""
     path = os.path.join(directory, fname)
     fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
     try:
@@ -222,11 +233,27 @@ def _atomic_write(directory: str, fname: str, data: bytes) -> str:
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, path)
+        _fsync_dir(directory)
     except BaseException:
         if os.path.exists(tmp):
             os.unlink(tmp)
         raise
     return path
+
+
+def _fsync_dir(directory: str) -> None:
+    """Make a completed rename in ``directory`` durable (no-op where
+    directories cannot be opened for fsync, e.g. Windows)."""
+    try:
+        dfd = os.open(directory, os.O_RDONLY)
+    except OSError:  # pragma: no cover - platform without dir-open
+        return
+    try:
+        os.fsync(dfd)
+    except OSError:  # pragma: no cover - fs without dir fsync
+        pass
+    finally:
+        os.close(dfd)
 
 
 def save_snapshot(registry: DesignRegistry, directory: str,
@@ -237,8 +264,10 @@ def save_snapshot(registry: DesignRegistry, directory: str,
     Member files are content-addressed (``<name>.<sha12>.snap.npz``) and
     every write is atomic, with the manifest replaced last — so a crash
     anywhere mid-save leaves the previous snapshot fully loadable.
-    Member files no manifest references any more are garbage-collected
-    after the new manifest is in place.
+    Member files referenced by neither the new manifest nor the one it
+    superseded are garbage-collected after the new manifest is in place
+    (the superseded generation survives one save for concurrent
+    readers).
 
     ``faults`` (chaos testing) may schedule ``crash_save`` — abort with
     :class:`~repro.core.faults.InjectedFault` before writing member
@@ -249,6 +278,16 @@ def save_snapshot(registry: DesignRegistry, directory: str,
     if faults is None:
         faults = resolve_plan(registry.config)
     os.makedirs(directory, exist_ok=True)
+    # remember what the manifest being superseded references: its
+    # members survive this save's GC so a reader holding that manifest
+    # (a warm restart racing an auto-snapshot) never has files
+    # unlinked out from under it mid-load
+    prior = None
+    try:
+        with open(os.path.join(directory, MANIFEST)) as f:
+            prior = json.load(f)
+    except (OSError, ValueError):
+        pass
     manifest = {"version": SNAPSHOT_VERSION,
                 "config": registry.config.to_dict(),
                 "designs": {}, "skipped": sorted(registry.custom_names)}
@@ -280,7 +319,7 @@ def save_snapshot(registry: DesignRegistry, directory: str,
             "injected crash before publishing the snapshot manifest")
     _atomic_write(directory, MANIFEST, json.dumps(
         manifest, indent=1, sort_keys=True).encode("utf-8"))
-    _collect_garbage(directory, manifest)
+    _collect_garbage(directory, manifest, prior)
     return manifest
 
 
@@ -295,10 +334,18 @@ def _flip_byte(path: str, offset: int) -> None:
         f.write(bytes([b[0] ^ 0xFF]))
 
 
-def _collect_garbage(directory: str, manifest: dict) -> None:
-    """Remove member files the freshly published manifest does not
-    reference (previous generations, aborted saves)."""
+def _collect_garbage(directory: str, manifest: dict,
+                     prior: Optional[dict] = None) -> None:
+    """Remove member files neither the freshly published manifest nor
+    the one it superseded reference (older generations, aborted saves).
+    Keeping the prior generation's members lets a reader that loaded
+    the previous manifest finish its restore even while this save runs;
+    they are reclaimed by the *next* save."""
     live = {e["file"] for e in manifest.get("designs", {}).values()}
+    if prior is not None:
+        live |= {e.get("file") for e
+                 in prior.get("designs", {}).values()
+                 if isinstance(e, dict)}
     for fname in os.listdir(directory):
         if fname.endswith(".snap.npz") and fname not in live:
             try:

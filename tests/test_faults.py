@@ -11,13 +11,14 @@ and keep the evaluated prefix).
 """
 
 import multiprocessing as mp
+import threading
 
 import numpy as np
 import pytest
 
 from repro.core import EvalConfig, FifoAdvisor
 from repro.core.campaign import Campaign, CampaignSpec
-from repro.core.campaign.pool import WorkerPool
+from repro.core.campaign.pool import MAX_OUTSTANDING, WorkerPool
 from repro.core.faults import (FAULT_KINDS, Fault, FaultPlan,
                                InjectedFault, resolve_plan)
 from repro.core.service import (AdvisoryService, DesignRegistry,
@@ -141,6 +142,37 @@ def test_pool_hang_detected_and_requeued(gemm_jobs):
     assert mp.active_children() == []
 
 
+def test_submit_backpressure_survives_lane_death(gemm_jobs):
+    g, m, ref = gemm_jobs
+    # lane 0 wedges on its FIRST job while submit() still has more than
+    # MAX_OUTSTANDING jobs to ship: the backpressure wait fills the
+    # lane's queue, times out, and recovers the lane MID-submit.  The
+    # wait must then observe the recovered queue draining (regression:
+    # it watched a stale deque that recovery had orphaned, looping on
+    # recv-timeout -> respawn-healthy-lane forever).
+    plan = FaultPlan([Fault("hang_worker", at=0, lane=0, value=30.0)])
+    jobs = [(0, "gemm", m[i % len(m)][None, :], None)
+            for i in range(MAX_OUTSTANDING + 4)]
+    done = {}
+
+    def run():
+        with WorkerPool(1, max_iters=64, graphs={"gemm": g}, faults=plan,
+                        recv_timeout_s=0.5) as pool:
+            done["results"] = pool.run_jobs(jobs)
+            done["stats"] = dict(pool.stats)
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    t.join(timeout=90)
+    assert not t.is_alive(), \
+        "submit() backpressure wait hung after a lane death"
+    assert done["stats"]["respawns"] >= 1
+    for i, (lat, bram, dead, _) in enumerate(done["results"]):
+        assert lat[0] == ref[0][i % len(m)]
+        assert bram[0] == ref[1][i % len(m)]
+    assert mp.active_children() == []
+
+
 def test_pool_inline_escalation_after_max_retries(gemm_jobs):
     g, m, ref = gemm_jobs
     # every incarnation of lane 0 dies on its first job: after
@@ -250,6 +282,14 @@ def test_attach_replays_exact_event_suffix():
         assert stream[-1]["event"] == "done"
         # nothing left queued: the replay consumed the undelivered tail
         assert sess.drain_events() == []
+        # releasing the session prunes its idempotent-open entry (the
+        # map must not grow with every open a long-lived server ever
+        # honoured); a re-sent open for a released session opens fresh
+        svc.release(sess.id)
+        assert "open-77" not in svc._open_requests
+        fresh = svc.open_session("gemm", budget=BUDGET, seed=0,
+                                 request_id="open-77")
+        assert fresh is not sess
 
 
 # ------------------------------------------------- snapshot crash + torn

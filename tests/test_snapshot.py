@@ -123,6 +123,27 @@ def _member(tmp_path, name=DESIGN):
     return hits[0]
 
 
+def test_gc_spares_superseded_generation(tmp_path):
+    def members():
+        return {os.path.basename(p) for p
+                in glob.glob(str(tmp_path / "*.snap.npz"))}
+
+    reg, _ = warm_registry()
+    save_snapshot(reg, str(tmp_path))
+    gen1 = members()
+    # fresh cache entries change the member content, so each save below
+    # publishes under a new content-addressed name
+    reg[DESIGN].run("grouped_sa", budget=10, seed=1)
+    save_snapshot(reg, str(tmp_path))
+    # the superseded generation survives one save, so a reader that
+    # already loaded the previous manifest can finish its restore warm
+    assert gen1 < members()
+    reg[DESIGN].run("grouped_sa", budget=10, seed=2)
+    save_snapshot(reg, str(tmp_path))
+    assert gen1.isdisjoint(members())   # reclaimed by the *next* save
+    load_snapshot(str(tmp_path), strict=True)
+
+
 def test_tampered_snapshot_is_quarantined_and_strict_rejects(tmp_path):
     reg, _ = warm_registry()
     save_snapshot(reg, str(tmp_path))
